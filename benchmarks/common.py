@@ -1,0 +1,28 @@
+"""Shared Stage-I runs for the benchmark suite (cached per process)."""
+from __future__ import annotations
+
+import functools
+import time
+
+from repro.configs import get_arch
+from repro.core.workload import build_graph
+from repro.sim.accelerator import baseline_accelerator, multilevel_accelerator
+from repro.sim.engine import simulate
+
+PAPER_M = 2048
+PAPER_SUBOPS = 4
+
+
+@functools.lru_cache(maxsize=None)
+def sim_workload(arch: str, sram_mib: int = 128, multilevel: bool = False,
+                 m: int = PAPER_M):
+    g = build_graph(get_arch(arch), M=m, subops=PAPER_SUBOPS)
+    accel = (multilevel_accelerator(sram_mib) if multilevel
+             else baseline_accelerator(sram_mib))
+    return simulate(g, accel), accel
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6

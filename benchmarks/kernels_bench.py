@@ -1,0 +1,85 @@
+"""Kernel microbenches: wall time of the jnp reference path on CPU (the Pallas
+kernels are TPU-target; interpret mode is correctness-only) + one interpret
+correctness spot check per kernel."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _wall(fn, *args, reps=3):
+    fn(*args).block_until_ready() if hasattr(fn(*args), "block_until_ready") \
+        else None
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench_flash_attention():
+    from repro.kernels.flash_attention import (flash_attention,
+                                               flash_attention_ref)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    B, H, K, S, d = 1, 8, 2, 1024, 64
+    q = jax.random.normal(ks[0], (B, H, S, d), jnp.float32)
+    k = jax.random.normal(ks[1], (B, K, S, d), jnp.float32)
+    v = jax.random.normal(ks[2], (B, K, S, d), jnp.float32)
+    us = _wall(lambda a, b, c: flash_attention(a, b, c, backend="ref"),
+               q, k, v)
+    i = flash_attention(q[:, :, :128], k[:, :, :128], v[:, :, :128],
+                        backend="interpret")
+    r = flash_attention_ref(q[:, :, :128], k[:, :, :128], v[:, :, :128])
+    err = float(jnp.max(jnp.abs(i - r)))
+    return us, f"S={S} H={H} gqa_group={H//K} interpret_err={err:.1e}"
+
+
+def bench_gqa_decode():
+    from repro.kernels.gqa_decode import gqa_decode, gqa_decode_ref
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, H, K, T, d = 8, 16, 2, 8192, 128
+    q = jax.random.normal(ks[0], (B, H, d), jnp.float32)
+    k = jax.random.normal(ks[1], (B, K, T, d), jnp.float32)
+    v = jax.random.normal(ks[2], (B, K, T, d), jnp.float32)
+    lengths = jnp.full((B,), T, jnp.int32)
+    us = _wall(lambda a, b, c: gqa_decode(a, b, c, lengths, backend="ref"),
+               q, k, v)
+    i = gqa_decode(q[:2, :, :], k[:2, :, :512], v[:2, :, :512],
+                   jnp.full((2,), 512, jnp.int32), backend="interpret")
+    r = gqa_decode_ref(q[:2], k[:2, :, :512], v[:2, :, :512],
+                       jnp.full((2,), 512, jnp.int32))
+    err = float(jnp.max(jnp.abs(i - r)))
+    return us, f"T={T} kv_bytes/group_shared interpret_err={err:.1e}"
+
+
+def bench_int8_matmul():
+    from repro.kernels.int8_matmul import (int8_matmul, quantize_cols,
+                                           quantize_rows)
+    ks = jax.random.split(jax.random.PRNGKey(2), 2)
+    M, K, N = 512, 2048, 512
+    x = jax.random.normal(ks[0], (M, K))
+    w = jax.random.normal(ks[1], (K, N))
+    xq, sx = quantize_rows(x)
+    wq, sw = quantize_cols(w)
+    us = _wall(lambda a, b: int8_matmul(a, b, sx, sw, backend="ref"), xq, wq)
+    full = np.asarray(x @ w)
+    got = np.asarray(int8_matmul(xq, wq, sx, sw, backend="ref"))
+    rel = np.abs(got - full).max() / np.abs(full).max()
+    return us, f"{M}x{K}x{N} quant_rel_err={rel:.3f}"
+
+
+def bench_bank_energy():
+    from repro.kernels.bank_energy import bank_activity_stats, candidate_grid
+    rng = np.random.default_rng(0)
+    S = 1_000_000                     # TPU-scale trace
+    d = rng.random(S).astype(np.float32) * 1e-5
+    occ = (rng.random(S) * 128 * 2**20).astype(np.float32)
+    us_, nb, meta = candidate_grid(
+        [c * 2**20 for c in (48, 64, 80, 96, 112, 128)],
+        [1, 2, 4, 8, 16, 32], 0.9)
+    us = _wall(lambda a, b: bank_activity_stats(a, b, us_, nb, backend="ref"),
+               jnp.asarray(d), jnp.asarray(occ))
+    return us, f"segments={S} candidates={len(meta)}"

@@ -1,0 +1,46 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import kernels_bench, paper_figs
+
+BENCHES = [
+    ("fig1_mha_vs_gqa", paper_figs.fig1_mha_vs_gqa),
+    ("fig5_occupancy", paper_figs.fig5_occupancy),
+    ("fig6_latency_breakdown", paper_figs.fig6_latency_breakdown),
+    ("fig7_energy_breakdown", paper_figs.fig7_energy_breakdown),
+    ("fig8_bank_activity", paper_figs.fig8_bank_activity),
+    ("table2_banking_sweep", paper_figs.table2_banking_sweep),
+    ("table3_multilevel", paper_figs.table3_multilevel),
+    ("fig9_energy_area", paper_figs.fig9_energy_area),
+    ("beyond_all_archs", paper_figs.beyond_all_archs),
+    ("beyond_scheduler", paper_figs.beyond_scheduler),
+    ("kern_flash_attention", kernels_bench.bench_flash_attention),
+    ("kern_gqa_decode", kernels_bench.bench_gqa_decode),
+    ("kern_int8_matmul", kernels_bench.bench_int8_matmul),
+    ("kern_bank_energy", kernels_bench.bench_bank_energy),
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in BENCHES:
+        if only and only not in name:
+            continue
+        try:
+            us, derived = fn()
+            print(f"{name},{us:.0f},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},-1,FAILED {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""End-to-end training driver: train a ~100M-param GQA LM for a few hundred
+steps on CPU with the full production substrate — deterministic data pipeline,
+AdamW + cosine schedule, async atomic checkpointing, straggler monitor, and a
+mid-run preemption + recovery to prove fault tolerance.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import shutil
+from dataclasses import replace
+
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.data import DataConfig, SyntheticTokens
+from repro.models import build_model
+from repro.optim import AdamW, cosine_with_warmup
+from repro.train import LoopConfig, TrainLoop
+
+
+def small_lm():
+    """~100M-param tinyllama-family config that trains on CPU."""
+    base = get_arch("tinyllama-1.1b")
+    return replace(base, name="tinyllama-100m", num_layers=4, d_model=512,
+                   num_heads=8, num_kv_heads=2, head_dim=64, d_ff=1536,
+                   vocab_size=32000, max_seq_len=1024)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = small_lm()
+    model = build_model(cfg, compute_dtype=jnp.float32, remat="none")
+    n_params = cfg.param_count()
+    print(f"model: {cfg.name}  ~{n_params/1e6:.0f}M params")
+
+    opt = AdamW(lr=cosine_with_warmup(1e-3, args.steps // 10, args.steps),
+                weight_decay=0.01)
+    data = SyntheticTokens(DataConfig(vocab_size=cfg.vocab_size,
+                                      seq_len=args.seq,
+                                      global_batch=args.batch, seed=42))
+    shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+    loop_cfg = LoopConfig(total_steps=args.steps, ckpt_every=50,
+                          ckpt_dir=args.ckpt_dir, log_every=25)
+
+    # ---- phase 1: run until an injected preemption at 60% ------------------
+    fail_at = int(args.steps * 0.6)
+    print(f"phase 1: training with injected preemption at step {fail_at}")
+    try:
+        TrainLoop(model, opt, data, loop_cfg, fail_at_step=fail_at).run()
+    except RuntimeError as e:
+        print(f"  !! {e} — restarting from the latest checkpoint")
+
+    # ---- phase 2: restart; the loop resumes from the checkpoint -------------
+    loop = TrainLoop(model, opt, data, loop_cfg)
+    out = loop.run()
+    hist = out["history"]
+    print(f"phase 2: resumed at step {hist[0]['step']}")
+    for h in hist[::25] + [hist[-1]]:
+        flag = " STRAGGLER" if h["straggler"] else ""
+        print(f"  step {h['step']:4d}  loss {h['loss']:.4f}  "
+              f"{h['time_s']*1e3:6.1f} ms{flag}")
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    print(f"loss {first:.4f} -> {last:.4f} "
+          f"({'OK: decreasing' if last < first else 'WARN: not decreasing'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Stage II: offline SRAM banking + power-gating design-space exploration.
+
+Reuses a Stage-I occupancy trace (fixed execution schedule) to sweep
+(capacity C, bank count B, headroom alpha, policy) and emit the paper's
+artifacts: Table II/III banking tables, Fig 8 bank-activity timelines, and
+the Fig 9 energy-area Pareto scatter.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.gating import GatingResult, Policy, evaluate
+from repro.sim.engine import SimResult
+
+MIB = 2**20
+DEFAULT_BANKS = (1, 2, 4, 8, 16, 32)
+
+
+@dataclass
+class SweepRow:
+    capacity_mib: int
+    banks: int
+    result: GatingResult
+    delta_e_pct: float = 0.0      # vs B=1 at same capacity
+    delta_a_pct: float = 0.0
+
+
+@dataclass
+class SweepTable:
+    workload: str
+    mem_name: str
+    alpha: float
+    rows: List[SweepRow] = field(default_factory=list)
+
+    def best(self) -> SweepRow:
+        return min(self.rows, key=lambda r: r.result.e_total)
+
+    def by_capacity(self) -> Dict[int, List[SweepRow]]:
+        out: Dict[int, List[SweepRow]] = {}
+        for r in self.rows:
+            out.setdefault(r.capacity_mib, []).append(r)
+        return out
+
+    def format(self) -> str:
+        lines = [f"# {self.workload} / {self.mem_name}  (alpha={self.alpha})",
+                 f"{'C[MiB]':>7} {'B':>3} {'E[mJ]':>12} {'A[mm2]':>9} "
+                 f"{'dE%':>7} {'dA%':>7} {'E_dyn':>9} {'E_leak':>9} "
+                 f"{'E_sw':>9} {'Nsw':>6}"]
+        for r in self.rows:
+            g = r.result
+            lines.append(
+                f"{r.capacity_mib:>7} {r.banks:>3} {g.e_total*1e3:>12.1f} "
+                f"{g.area_mm2:>9.2f} {r.delta_e_pct:>+7.1f} "
+                f"{r.delta_a_pct:>+7.1f} {g.e_dyn*1e3:>9.1f} "
+                f"{g.e_leak*1e3:>9.1f} {g.e_sw*1e3:>9.3f} "
+                f"{g.n_transitions:>6}")
+        return "\n".join(lines)
+
+
+def min_capacity_mib(peak_needed_bytes: int, step_mib: int = 16) -> int:
+    """Paper's rounding: peak requirement rounded up to the 16 MiB grid."""
+    return step_mib * math.ceil(peak_needed_bytes / (step_mib * MIB))
+
+
+def sweep(sim: SimResult, *, mem_name: str = "sram",
+          capacities_mib: Optional[Sequence[int]] = None,
+          banks: Sequence[int] = DEFAULT_BANKS,
+          policy: Optional[Policy] = None,
+          max_capacity_mib: int = 128,
+          occupancy_kind: str = "needed") -> SweepTable:
+    """Sweep (C, B) for one memory of one Stage-I run.
+
+    `occupancy_kind="needed"`: only retention-required bytes pin banks —
+    obsolete data needs no retention, so its banks are gate-eligible (this is
+    the reading under which the paper's Fig. 8 occupancy curve fluctuates
+    well below capacity).
+    """
+    policy = policy or Policy.conservative()
+    trace = sim.traces[mem_name]
+    dur, occ = trace.occupancy_series(sim.total_time, use=occupancy_kind)
+    n_r = sim.access.n_reads(mem_name)
+    n_w = sim.access.n_writes(mem_name)
+
+    if capacities_mib is None:
+        lo = min_capacity_mib(trace.peak_needed())
+        capacities_mib = list(range(lo, max_capacity_mib + 1, 16)) or [lo]
+
+    table = SweepTable(sim.graph_name, mem_name, policy.alpha)
+    for c_mib in capacities_mib:
+        cap = c_mib * MIB
+        if cap < trace.peak_needed():
+            continue
+        base: Optional[GatingResult] = None
+        for b in banks:
+            pol = policy if b > 1 else Policy.none(policy.alpha)
+            res = evaluate(dur, occ, capacity=cap, banks=b, policy=pol,
+                           n_reads=n_r, n_writes=n_w)
+            row = SweepRow(c_mib, b, res)
+            if b == 1:
+                base = res
+            if base is not None and base.e_total > 0:
+                row.delta_e_pct = 100.0 * (res.e_total / base.e_total - 1.0)
+                row.delta_a_pct = 100.0 * (res.area_mm2 / base.area_mm2 - 1.0)
+            table.rows.append(row)
+    return table
+
+
+def pareto_points(tables: Sequence[SweepTable]):
+    """Fig.-9 scatter: (area, energy, label) for every (C,B) candidate."""
+    pts = []
+    for t in tables:
+        for r in t.rows:
+            pts.append((r.result.area_mm2, r.result.e_total, t.workload,
+                        r.capacity_mib, r.banks))
+    return pts
+
+
+def alpha_sensitivity(sim: SimResult, *, capacity_mib: int, banks: int,
+                      alphas: Sequence[float] = (1.0, 0.9, 0.75, 0.5),
+                      mem_name: str = "sram") -> Dict[float, GatingResult]:
+    """Fig.-8 support: how alpha moves bank activity / energy at fixed (C,B)."""
+    trace = sim.traces[mem_name]
+    dur, occ = trace.occupancy_series(sim.total_time, use="needed")
+    n_r = sim.access.n_reads(mem_name)
+    n_w = sim.access.n_writes(mem_name)
+    out = {}
+    for a in alphas:
+        pol = Policy("conservative", a, gate=True, min_gate_multiple=5.0)
+        out[a] = evaluate(dur, occ, capacity=capacity_mib * MIB, banks=banks,
+                          policy=pol, n_reads=n_r, n_writes=n_w)
+    return out

@@ -1,0 +1,120 @@
+"""Power-gating policies + Eq. (2)-(5) energy model (TRAPTI Stage II).
+
+    E_tot = E_dyn + E_leak + E_sw                                  (2)
+    E_dyn = N_R * E_R + N_W * E_W                                  (3)
+    E_leak ~= sum_k P_leak_bank * B_on(k) * dt_k                   (4)
+    E_sw  = N_sw * E_sw_bank                                       (5)
+
+Policies:
+  * "none"         — no gating; all B banks leak for the whole run.
+  * "aggressive"   — alpha = 1.0 packing; gate every idle-eligible interval
+                     that passes the break-even criterion.
+  * "conservative" — alpha = 0.9 headroom; additionally skip idle intervals
+                     shorter than `min_gate_multiple` x break-even (avoids
+                     thrashing and wake-up latency exposure).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.banking import bank_activity, bank_on_matrix, idle_runs
+from repro.core.cacti import SramCharacterization, characterize
+
+
+@dataclass(frozen=True)
+class Policy:
+    name: str
+    alpha: float
+    gate: bool
+    min_gate_multiple: float = 1.0      # x break-even time
+
+    @staticmethod
+    def none(alpha: float = 1.0) -> "Policy":
+        return Policy("none", alpha, gate=False)
+
+    @staticmethod
+    def aggressive() -> "Policy":
+        return Policy("aggressive", 1.0, gate=True, min_gate_multiple=1.0)
+
+    @staticmethod
+    def conservative(alpha: float = 0.9) -> "Policy":
+        return Policy("conservative", alpha, gate=True, min_gate_multiple=5.0)
+
+
+@dataclass
+class GatingResult:
+    policy: str
+    alpha: float
+    capacity: int
+    banks: int
+    e_dyn: float
+    e_leak: float
+    e_sw: float
+    n_transitions: int
+    gated_bank_seconds: float
+    total_bank_seconds: float
+    area_mm2: float
+
+    @property
+    def e_total(self) -> float:
+        return self.e_dyn + self.e_leak + self.e_sw
+
+
+def evaluate(durations: np.ndarray, occupancy: np.ndarray, *,
+             capacity: int, banks: int, policy: Policy,
+             n_reads: int, n_writes: int,
+             char: Optional[SramCharacterization] = None) -> GatingResult:
+    """Offline Stage-II evaluation of one (C, B, policy) candidate against a
+    Stage-I occupancy trace (same execution schedule, per the paper)."""
+    ch = char or characterize(capacity, banks)
+    d = np.asarray(durations, np.float64)
+    total_time = float(d.sum())
+
+    e_dyn = n_reads * ch.e_read_j + n_writes * ch.e_write_j
+
+    if not policy.gate:
+        e_leak = ch.leak_w_per_bank * banks * total_time
+        return GatingResult(policy.name, policy.alpha, capacity, banks,
+                            e_dyn, e_leak, 0.0, 0, 0.0, banks * total_time,
+                            ch.area_mm2)
+
+    act = bank_activity(occupancy, policy.alpha, capacity, banks)
+    on = bank_on_matrix(act, banks)                     # (nseg, B)
+    threshold = policy.min_gate_multiple * ch.break_even_s
+
+    # a bank is ON while required AND during idle intervals too short to gate
+    gated_seconds = 0.0
+    n_sw = 0
+    on_final = np.ones_like(on)
+    for b in range(banks):
+        run_d, starts, ends = idle_runs(d, on[:, b])
+        ok = run_d >= threshold
+        n_sw += int(ok.sum())
+        gated_seconds += float(run_d[ok].sum())
+        for s, e in zip(starts[ok], ends[ok]):
+            on_final[s:e, b] = False
+
+    on_seconds = float((on_final * d[:, None]).sum())
+    e_leak = ch.leak_w_per_bank * on_seconds
+    e_sw = n_sw * ch.e_switch_j
+    return GatingResult(policy.name, policy.alpha, capacity, banks,
+                        e_dyn, e_leak, e_sw, n_sw, gated_seconds,
+                        banks * total_time, ch.area_mm2)
+
+
+def bank_timeline(durations: np.ndarray, occupancy: np.ndarray, *,
+                  capacity: int, banks: int, alpha: float) -> Dict[str, np.ndarray]:
+    """Fig.-8 style artifact: per-segment activity + packing overhead."""
+    act = bank_activity(occupancy, alpha, capacity, banks)
+    usable = alpha * capacity / banks
+    overhead = act * (capacity / banks) - np.minimum(
+        act * usable, np.asarray(occupancy, np.float64))
+    return {
+        "durations": np.asarray(durations, np.float64),
+        "occupancy": np.asarray(occupancy, np.float64),
+        "active_banks": act,
+        "placement_overhead_bytes": np.maximum(overhead, 0.0),
+    }

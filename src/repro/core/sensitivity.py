@@ -1,0 +1,111 @@
+"""Policy sensitivity studies + drowsy (multi-state) retention — the paper's
+stated future work ("more detailed transition overhead models and policy
+sensitivity studies", Sec. V).
+
+Drowsy mode (Flautner et al., ISCA'02 — the paper's ref [12]): instead of
+fully gating a bank (state lost, wake-up latency ~1 us), drop it to a
+retention voltage: ~70-85% leakage reduction, data retained, ~2-cycle wake.
+For banks holding *obsolete* data full gating is free; for banks that will be
+needed again soon, drowsy avoids the refetch/wake cost. We model a three-state
+policy: ON / DROWSY (short idle) / OFF (idle >= break-even).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Sequence
+
+import numpy as np
+
+from repro.core.banking import bank_activity, bank_on_matrix, idle_runs
+from repro.core.cacti import SramCharacterization, characterize
+from repro.core.gating import GatingResult, Policy, evaluate
+
+DROWSY_LEAK_FRACTION = 0.25          # retention-voltage leakage vs ON
+DROWSY_SWITCH_FRACTION = 0.02        # transition energy vs full PG pair
+
+
+@dataclass
+class DrowsyResult:
+    e_dyn: float
+    e_leak_on: float
+    e_leak_drowsy: float
+    e_sw: float
+    n_off: int
+    n_drowsy: int
+
+    @property
+    def e_total(self) -> float:
+        return self.e_dyn + self.e_leak_on + self.e_leak_drowsy + self.e_sw
+
+
+def evaluate_drowsy(durations: np.ndarray, occupancy: np.ndarray, *,
+                    capacity: int, banks: int, alpha: float = 0.9,
+                    n_reads: int = 0, n_writes: int = 0,
+                    off_multiple: float = 1.0) -> DrowsyResult:
+    """Three-state policy: idle interval < break-even -> DROWSY; otherwise
+    OFF. Active segments are ON."""
+    ch = characterize(capacity, banks)
+    d = np.asarray(durations, np.float64)
+    act = bank_activity(occupancy, alpha, capacity, banks)
+    on = bank_on_matrix(act, banks)
+    threshold = off_multiple * ch.break_even_s
+
+    e_dyn = n_reads * ch.e_read_j + n_writes * ch.e_write_j
+    on_seconds = float((on * d[:, None]).sum())
+    drowsy_seconds = 0.0
+    off_seconds = 0.0
+    n_off = 0
+    n_drowsy = 0
+    for b in range(banks):
+        run_d, starts, ends = idle_runs(d, on[:, b])
+        off = run_d >= threshold
+        n_off += int(off.sum())
+        n_drowsy += int((~off).sum())
+        off_seconds += float(run_d[off].sum())
+        drowsy_seconds += float(run_d[~off].sum())
+
+    p = ch.leak_w_per_bank
+    return DrowsyResult(
+        e_dyn=e_dyn,
+        e_leak_on=p * on_seconds,
+        e_leak_drowsy=p * DROWSY_LEAK_FRACTION * drowsy_seconds,
+        e_sw=(n_off * ch.e_switch_j
+              + n_drowsy * ch.e_switch_j * DROWSY_SWITCH_FRACTION),
+        n_off=n_off, n_drowsy=n_drowsy)
+
+
+def policy_sensitivity(durations: np.ndarray, occupancy: np.ndarray, *,
+                       capacity: int, banks: int,
+                       n_reads: int, n_writes: int,
+                       multiples: Sequence[float] = (1.0, 1e2, 1e3, 1e4, 1e5),
+                       sw_scales: Sequence[float] = (0.1, 1.0, 10.0, 100.0),
+                       ) -> Dict[str, Dict[float, float]]:
+    """How robust are Stage-II conclusions to (a) the gating threshold and
+    (b) the per-transition energy assumption? Returns E_tot per setting."""
+    out: Dict[str, Dict[float, float]] = {"threshold": {}, "sw_scale": {},
+                                          "drowsy": {}}
+    for m in multiples:
+        pol = Policy("sens", 0.9, gate=True, min_gate_multiple=m)
+        r = evaluate(durations, occupancy, capacity=capacity, banks=banks,
+                     policy=pol, n_reads=n_reads, n_writes=n_writes)
+        out["threshold"][m] = r.e_total
+
+    # transition-energy scaling: scale both E_sw and the implied break-even
+    base = characterize(capacity, banks)
+    for s in sw_scales:
+        class _Scaled(SramCharacterization):
+            @property
+            def e_switch_j(self):  # noqa: D401
+                return SramCharacterization.e_switch_j.fget(self) * s
+        ch = _Scaled(int(capacity), int(banks))
+        pol = Policy("sens", 0.9, gate=True, min_gate_multiple=1.0)
+        r = evaluate(durations, occupancy, capacity=capacity, banks=banks,
+                     policy=pol, n_reads=n_reads, n_writes=n_writes, char=ch)
+        out["sw_scale"][s] = r.e_total
+
+    for m in multiples:
+        r = evaluate_drowsy(durations, occupancy, capacity=capacity,
+                            banks=banks, n_reads=n_reads, n_writes=n_writes,
+                            off_multiple=m)
+        out["drowsy"][m] = r.e_total
+    return out

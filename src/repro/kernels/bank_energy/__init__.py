@@ -1,0 +1,3 @@
+from repro.kernels.bank_energy.ops import bank_activity_stats, candidate_grid  # noqa: F401
+from repro.kernels.bank_energy.ref import bank_energy_ref  # noqa: F401
+from repro.kernels.bank_energy.kernel import bank_energy_kernel  # noqa: F401

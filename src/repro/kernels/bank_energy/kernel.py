@@ -1,0 +1,87 @@
+"""TRAPTI Stage-II trace analytics as a Pallas TPU kernel.
+
+This is the paper's Eq. (1)/(4)/(5) inner loop — bank activity, active
+bank-seconds (the leakage integral) and bank on/off transition counts — over
+(trace segments x candidate configurations). Offline DSE sweeps evaluate
+thousands of (C, B, alpha) candidates against million-segment traces, so the
+kernel blocks the segment arrays into VMEM tiles; the TPU grid is sequential
+per core, which makes cross-tile carries (previous segment's bank activity,
+for transition counting) and output accumulation safe.
+
+Under contiguous packing, banks fill lowest-first, so the number of on/off
+toggles between consecutive segments is exactly |B_act(k) - B_act(k-1)| —
+transition counting needs no per-bank state.
+
+Grid: (n_candidates, n_segment_blocks), segment blocks innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bank_kernel(dur_ref, occ_ref, usable_ref, nb_ref, out_ref, prev_sc, *,
+                 num_seg_blocks: int):
+    s = pl.program_id(1)
+
+    dur = dur_ref[...]                        # (1, BS)
+    occ = occ_ref[...]                        # (1, BS)
+    usable = usable_ref[0, 0]
+    nbanks = nb_ref[0, 0]
+
+    act = jnp.clip(jnp.ceil(occ / usable), 0.0, nbanks)   # (1, BS)
+
+    @pl.when(s == 0)
+    def _first():
+        prev_sc[0] = act[0, 0]
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    bank_seconds = jnp.sum(act * dur)
+    shifted = jnp.concatenate(
+        [jnp.full((1, 1), prev_sc[0], act.dtype), act[:, :-1]], axis=1)
+    transitions = jnp.sum(jnp.abs(act - shifted))
+    prev_sc[0] = act[0, -1]
+
+    out_ref[0, 0] += bank_seconds
+    out_ref[0, 1] += transitions
+
+
+def bank_energy_kernel(durations: jax.Array, occupancy: jax.Array,
+                       usable: jax.Array, nbanks: jax.Array, *,
+                       block_s: int = 2048,
+                       interpret: bool = False) -> jax.Array:
+    """durations/occupancy: (S,) f32 (S % block_s == 0 — pad durations with 0
+    and occupancy with its last value); usable/nbanks: (C,) f32.
+
+    Returns (C, 2): [:, 0] = integral of B_act dt, [:, 1] = on/off toggles.
+    """
+    S = durations.shape[0]
+    C = usable.shape[0]
+    block_s = min(block_s, S)
+    assert S % block_s == 0, (S, block_s)
+    nsb = S // block_s
+
+    dur2 = durations.reshape(nsb, block_s).astype(jnp.float32)
+    occ2 = occupancy.reshape(nsb, block_s).astype(jnp.float32)
+    us2 = usable.reshape(C, 1).astype(jnp.float32)
+    nb2 = nbanks.reshape(C, 1).astype(jnp.float32)
+
+    kern = functools.partial(_bank_kernel, num_seg_blocks=nsb)
+    return pl.pallas_call(
+        kern,
+        grid=(C, nsb),
+        in_specs=[
+            pl.BlockSpec((1, block_s), lambda c, s: (s, 0)),
+            pl.BlockSpec((1, block_s), lambda c, s: (s, 0)),
+            pl.BlockSpec((1, 1), lambda c, s: (c, 0)),
+            pl.BlockSpec((1, 1), lambda c, s: (c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 2), lambda c, s: (c, 0)),
+        out_shape=jax.ShapeDtypeStruct((C, 2), jnp.float32),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.float32)],
+        interpret=interpret,
+    )(dur2, occ2, us2, nb2)

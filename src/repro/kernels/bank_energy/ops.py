@@ -1,0 +1,55 @@
+"""Jit'd wrapper: pad the trace, run the analytics, derive Eq. (2)-(5) energy
+terms for a whole (C, B, alpha) candidate grid at once."""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.bank_energy.kernel import bank_energy_kernel
+from repro.kernels.bank_energy.ref import bank_energy_ref
+
+
+def _pad(durations, occupancy, block_s: int):
+    S = durations.shape[0]
+    Sp = max(block_s, ((S + block_s - 1) // block_s) * block_s)
+    pad = Sp - S
+    if pad:
+        durations = jnp.concatenate(
+            [durations, jnp.zeros((pad,), durations.dtype)])
+        last = occupancy[-1] if S else jnp.zeros((), occupancy.dtype)
+        occupancy = jnp.concatenate(
+            [occupancy, jnp.full((pad,), last, occupancy.dtype)])
+    return durations, occupancy
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "block_s"))
+def bank_activity_stats(durations, occupancy, usable, nbanks, *,
+                        backend: str = "auto", block_s: int = 2048):
+    """(C, 2): [active bank-seconds, on/off transition count] per candidate."""
+    if backend == "auto":
+        backend = ("pallas" if jax.default_backend() == "tpu" else "ref")
+    durations = jnp.asarray(durations, jnp.float32)
+    occupancy = jnp.asarray(occupancy, jnp.float32)
+    usable = jnp.asarray(usable, jnp.float32)
+    nbanks = jnp.asarray(nbanks, jnp.float32)
+    if backend == "ref":
+        return bank_energy_ref(durations, occupancy, usable, nbanks)
+    d, o = _pad(durations, occupancy, block_s)
+    return bank_energy_kernel(d, o, usable, nbanks, block_s=block_s,
+                              interpret=(backend == "interpret"))
+
+
+def candidate_grid(capacities_bytes: Sequence[int], banks: Sequence[int],
+                   alpha: float) -> Tuple[np.ndarray, np.ndarray, list]:
+    """Flatten a (C x B) sweep into the kernel's candidate arrays."""
+    usable, nb, meta = [], [], []
+    for c in capacities_bytes:
+        for b in banks:
+            usable.append(alpha * c / b)
+            nb.append(float(b))
+            meta.append((int(c), int(b)))
+    return np.asarray(usable, np.float32), np.asarray(nb, np.float32), meta

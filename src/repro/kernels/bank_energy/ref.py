@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the bank-energy analytics kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bank_energy_ref(durations: jax.Array, occupancy: jax.Array,
+                    usable: jax.Array, nbanks: jax.Array) -> jax.Array:
+    """Same contract as bank_energy_kernel: returns (C, 2)."""
+    d = durations.astype(jnp.float32)[None, :]          # (1, S)
+    o = occupancy.astype(jnp.float32)[None, :]
+    u = usable.astype(jnp.float32)[:, None]             # (C, 1)
+    b = nbanks.astype(jnp.float32)[:, None]
+    act = jnp.clip(jnp.ceil(o / u), 0.0, b)             # (C, S)
+    seconds = jnp.sum(act * d, axis=1)
+    trans = jnp.sum(jnp.abs(act[:, 1:] - act[:, :-1]), axis=1)
+    return jnp.stack([seconds, trans], axis=1)

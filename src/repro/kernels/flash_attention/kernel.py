@@ -1,0 +1,112 @@
+"""Flash attention (prefill) Pallas TPU kernel with GQA head sharing.
+
+TPU adaptation of the paper's central observation: GQA shrinks the KV working
+set, so a query-head group shares one K/V block load HBM->VMEM (the index_map
+maps q-head h to kv-head h * K / H), raising arithmetic intensity by the group
+size. Grid (B, H, nq, nk) with nk innermost — TPU grids execute sequentially
+per core, so the online-softmax running state lives in VMEM scratch across nk
+steps; causal blocks above the diagonal are skipped with pl.when.
+
+Block shapes are 128-aligned for the MXU; accumulation is fp32.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  num_kv_blocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    # skip blocks entirely above the causal diagonal
+    run = (not causal) or (k_start <= q_start + block_q - 1)
+
+    @pl.when(jnp.asarray(run))
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_k), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+        corr = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=1)
+        acc_sc[...] = acc_sc[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_sc[...] = m_new
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0, 0] = (acc_sc[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, block_q: int = 128,
+                           block_k: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, H, S, d); k, v: (B, K, T, d) with H % K == 0. Returns (B,H,S,d)."""
+    B, H, S, d = q.shape
+    K, T = k.shape[1], k.shape[2]
+    assert H % K == 0, (H, K)
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    assert S % block_q == 0 and T % block_k == 0, (S, T, block_q, block_k)
+    nq, nk = S // block_q, T // block_k
+    scale = 1.0 / math.sqrt(d)
+    group = H // K
+
+    grid = (B, H, nq, nk)
+    q_spec = pl.BlockSpec((1, 1, block_q, d),
+                          lambda b, h, iq, ik: (b, h, iq, 0))
+    k_spec = pl.BlockSpec((1, 1, block_k, d),
+                          lambda b, h, iq, ik: (b, h // group, ik, 0))
+    v_spec = pl.BlockSpec((1, 1, block_k, d),
+                          lambda b, h, iq, ik: (b, h // group, ik, 0))
+    o_spec = pl.BlockSpec((1, 1, block_q, d),
+                          lambda b, h, iq, ik: (b, h, iq, 0))
+
+    kern = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, num_kv_blocks=nk)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[q_spec, k_spec, v_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,25 @@
+"""Jit'd public wrapper for flash attention: Pallas on TPU, interpret-mode
+Pallas for validation, jnp fallback elsewhere."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "backend", "block_q",
+                                             "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, backend: str = "auto",
+                    block_q: int = 128, block_k: int = 128):
+    """backend: auto | pallas | interpret | ref."""
+    if backend == "auto":
+        backend = ("pallas" if jax.default_backend() == "tpu" else "ref")
+    if backend == "ref":
+        return flash_attention_ref(q, k, v, causal=causal)
+    return flash_attention_kernel(q, k, v, causal=causal, block_q=block_q,
+                                  block_k=block_k,
+                                  interpret=(backend == "interpret"))

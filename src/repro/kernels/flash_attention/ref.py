@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True) -> jax.Array:
+    """q: (B, H, S, d); k, v: (B, K, T, d). Naive full-precision attention."""
+    B, H, S, d = q.shape
+    K, T = k.shape[1], k.shape[2]
+    group = H // K
+    qf = q.astype(jnp.float32) / math.sqrt(d)
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    s = jnp.einsum("bhsd,bhtd->bhst", qf, kf)
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", p, vf)
+    return out.astype(q.dtype)

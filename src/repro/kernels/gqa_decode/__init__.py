@@ -1,0 +1,3 @@
+from repro.kernels.gqa_decode.ops import gqa_decode  # noqa: F401
+from repro.kernels.gqa_decode.ref import gqa_decode_ref  # noqa: F401
+from repro.kernels.gqa_decode.kernel import gqa_decode_kernel  # noqa: F401

@@ -1,0 +1,105 @@
+"""GQA decode-attention Pallas TPU kernel: one query token per sequence
+against a (possibly partially filled) KV cache.
+
+This is the TPU-native reading of the paper's insight: decode attention is
+bandwidth-bound on KV-cache reads (HBM->VMEM), and GQA divides those bytes by
+the sharing group size — all q heads of a group consume the same K/V block,
+which the index_map expresses directly. The paper's SRAM banking question
+("how much of the cache must be live?") becomes the cache-length mask here.
+
+Grid (B, K, nt): kv heads (not q heads) are the parallel dimension so each
+K/V block is streamed exactly once per sequence; the whole q-head group
+(group x d) rides along in VMEM. fp32 online softmax across nt blocks.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+                   scale: float, block_t: int, num_t_blocks: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    length = len_ref[0]
+    t_start = it * block_t
+
+    @pl.when(t_start < length)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (group, d)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bt, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        tpos = t_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(tpos < length, s, NEG_INF)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+        corr = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=1)
+        acc_sc[...] = acc_sc[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_sc[...] = m_new
+
+    @pl.when(it == num_t_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0, 0] = (acc_sc[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def gqa_decode_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
+                      lengths: jax.Array, *, block_t: int = 256,
+                      interpret: bool = False) -> jax.Array:
+    """q: (B, H, d); k, v: (B, K, T, d); lengths: (B,) int32 valid-cache sizes.
+
+    Returns (B, H, d)."""
+    B, H, d = q.shape
+    K, T = k.shape[1], k.shape[2]
+    assert H % K == 0
+    group = H // K
+    block_t = min(block_t, T)
+    assert T % block_t == 0
+    nt = T // block_t
+    scale = 1.0 / math.sqrt(d)
+
+    qg = q.reshape(B, K, group, d)
+    grid = (B, K, nt)
+    kern = functools.partial(_decode_kernel, scale=scale, block_t=block_t,
+                             num_t_blocks=nt)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, kh, it: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, group, d), lambda b, kh, it: (b, kh, 0, 0)),
+            pl.BlockSpec((1, 1, block_t, d), lambda b, kh, it: (b, kh, it, 0)),
+            pl.BlockSpec((1, 1, block_t, d), lambda b, kh, it: (b, kh, it, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, d),
+                               lambda b, kh, it: (b, kh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, group, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, k, v)
+    return out.reshape(B, H, d)

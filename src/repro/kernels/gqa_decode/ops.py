@@ -1,0 +1,21 @@
+"""Jit'd public wrapper for GQA decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.gqa_decode.kernel import gqa_decode_kernel
+from repro.kernels.gqa_decode.ref import gqa_decode_ref
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "block_t"))
+def gqa_decode(q, k, v, lengths, *, backend: str = "auto",
+               block_t: int = 256):
+    """backend: auto | pallas | interpret | ref."""
+    if backend == "auto":
+        backend = ("pallas" if jax.default_backend() == "tpu" else "ref")
+    if backend == "ref":
+        return gqa_decode_ref(q, k, v, lengths)
+    return gqa_decode_kernel(q, k, v, lengths, block_t=block_t,
+                             interpret=(backend == "interpret"))

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the GQA decode kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def gqa_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                   lengths: jax.Array) -> jax.Array:
+    """q: (B, H, d); k, v: (B, K, T, d); lengths: (B,)."""
+    B, H, d = q.shape
+    K, T = k.shape[1], k.shape[2]
+    group = H // K
+    qg = (q.astype(jnp.float32) / math.sqrt(d)).reshape(B, K, group, d)
+    s = jnp.einsum("bkgd,bktd->bkgt", qg, k.astype(jnp.float32))
+    valid = jnp.arange(T)[None, :] < lengths[:, None]        # (B, T)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    out = jnp.einsum("bkgt,bktd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, d).astype(q.dtype)

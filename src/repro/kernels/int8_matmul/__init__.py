@@ -1,0 +1,4 @@
+from repro.kernels.int8_matmul.ops import int8_matmul, quantized_linear  # noqa: F401
+from repro.kernels.int8_matmul.ref import (int8_matmul_ref, quantize_cols,  # noqa: F401
+                                           quantize_rows)
+from repro.kernels.int8_matmul.kernel import int8_matmul_kernel  # noqa: F401

@@ -1,0 +1,71 @@
+"""int8 x int8 -> int32 quantized matmul Pallas TPU kernel.
+
+The paper's accelerator computes uniformly in 8-bit operands; this is the TPU
+serving-path analogue: int8 weights/activations with per-row (activation) and
+per-column (weight) fp32 scales, int32 MXU accumulation, dequantized output.
+
+Grid (nm, nn, nk) with nk innermost; (bm, bn) int32 accumulator in VMEM
+scratch; 128-aligned blocks for the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _int8_mm_kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, acc_sc, *,
+                    num_k_blocks: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    x = x_ref[...].astype(jnp.int32)          # prepromotion for int matmul
+    w = w_ref[...].astype(jnp.int32)
+    acc_sc[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finalize():
+        sx = sx_ref[...].astype(jnp.float32)          # (bm, 1)
+        sw = sw_ref[...].astype(jnp.float32)          # (1, bn)
+        o_ref[...] = (acc_sc[...].astype(jnp.float32) * sx * sw).astype(
+            o_ref.dtype)
+
+
+def int8_matmul_kernel(x: jax.Array, w: jax.Array, sx: jax.Array,
+                       sw: jax.Array, *, block_m: int = 128,
+                       block_n: int = 128, block_k: int = 128,
+                       out_dtype=jnp.float32,
+                       interpret: bool = False) -> jax.Array:
+    """x: (M, K) int8; w: (K, N) int8; sx: (M, 1) f32; sw: (1, N) f32."""
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2
+    block_m = min(block_m, M)
+    block_n = min(block_n, N)
+    block_k = min(block_k, K)
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0
+    grid = (M // block_m, N // block_n, K // block_k)
+
+    kern = functools.partial(_int8_mm_kernel, num_k_blocks=grid[2])
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda im, in_, ik: (im, ik)),
+            pl.BlockSpec((block_k, block_n), lambda im, in_, ik: (ik, in_)),
+            pl.BlockSpec((block_m, 1), lambda im, in_, ik: (im, 0)),
+            pl.BlockSpec((1, block_n), lambda im, in_, ik: (0, in_)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n),
+                               lambda im, in_, ik: (im, in_)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=interpret,
+    )(x, w, sx, sw)

@@ -1,0 +1,31 @@
+"""Jit'd public wrapper: quantized linear y = dequant(int8(x) @ int8(w))."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.int8_matmul.kernel import int8_matmul_kernel
+from repro.kernels.int8_matmul.ref import (int8_matmul_ref, quantize_cols,
+                                           quantize_rows)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "block_m", "block_n",
+                                             "block_k"))
+def int8_matmul(x_q, w_q, sx, sw, *, backend: str = "auto",
+                block_m: int = 128, block_n: int = 128, block_k: int = 128):
+    if backend == "auto":
+        backend = ("pallas" if jax.default_backend() == "tpu" else "ref")
+    if backend == "ref":
+        return int8_matmul_ref(x_q, w_q, sx, sw)
+    return int8_matmul_kernel(x_q, w_q, sx, sw, block_m=block_m,
+                              block_n=block_n, block_k=block_k,
+                              interpret=(backend == "interpret"))
+
+
+def quantized_linear(x: jax.Array, w: jax.Array, *, backend: str = "auto"):
+    """Full path: quantize fp activations/weights, int8 matmul, dequantize."""
+    x_q, sx = quantize_rows(x)
+    w_q, sw = quantize_cols(w)
+    return int8_matmul(x_q, w_q, sx, sw, backend=backend)

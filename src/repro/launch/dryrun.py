@@ -1,0 +1,312 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# (The two lines above MUST run before any other import — jax locks the
+# device count at first init. Only the dry-run sees 512 placeholder devices;
+# tests/benches keep 1.)
+
+# Multi-pod dry-run: prove the distribution config is coherent by lowering +
+# compiling every (architecture x input shape) cell on the production meshes,
+# then extract memory/cost analysis + roofline terms from the compiled
+# artifacts.
+#
+# Usage:
+#     PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b \
+#         --shape train_4k --mesh single
+#     PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.json
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ASSIGNED_ARCHS, PAPER_ARCHS, SHAPES, get_arch,
+                           shape_supported)
+from repro.launch.mesh import make_production_mesh
+from repro.launch import roofline as rl
+from repro.models import build_model, batch_struct, cache_struct
+from repro.models.meshctx import use_mesh
+from repro.models.sharding import (SERVE_RULES, TRAIN_RULES, batch_spec,
+                                   template_shardings)
+from repro.models.transformer import cache_specs
+from repro.optim import AdamW, AdamWState, cosine_with_warmup
+from repro.train.step import make_train_step
+
+
+def _batch_shardings(batch_abs: Dict[str, Any], mesh, kind: str):
+    bspec = batch_spec(mesh, next(iter(batch_abs.values())).shape[0], kind)
+    out = {}
+    for k, v in batch_abs.items():
+        spec = P(*(bspec + P(*([None] * (v.ndim - 1)))))
+        out[k] = NamedSharding(mesh, spec)
+    return out
+
+
+def _encdec_cache_shardings(cache_abs, mesh):
+    def f(leaf):
+        spec = [None] * leaf.ndim
+        if leaf.ndim >= 2:
+            b = leaf.shape[1]
+            if "data" in mesh.shape and b % mesh.shape["data"] == 0:
+                spec[1] = "data"
+        if leaf.ndim >= 5:
+            if leaf.shape[-1] % mesh.shape["model"] == 0:
+                spec[-1] = "model"
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree.map(f, cache_abs)
+
+
+def _compile_step(cfg, shape, mesh, *, remat: str, unroll: bool,
+                  donate: bool = True, microbatches: int = 1):
+    """Lower + compile one cell's step function; returns the Compiled."""
+    kind = shape.kind
+    kvb = 1024
+    model = build_model(cfg, compute_dtype=jnp.bfloat16, remat=remat,
+                        kv_block=kvb, unroll=unroll)
+    template = model.template()
+
+    with use_mesh(mesh):
+        if kind == "train":
+            rules = TRAIN_RULES
+            params_abs = model.abstract()                      # fp32 master
+            param_sh = template_shardings(template, mesh, rules)
+            opt = AdamW(lr=cosine_with_warmup(3e-4, 100, 10000))
+            opt_abs = jax.eval_shape(opt.init, params_abs)
+            opt_sh = AdamWState(NamedSharding(mesh, P()), param_sh,
+                                jax.tree.map(lambda s: s, param_sh))
+            batch_abs = batch_struct(cfg, shape)
+            batch_sh = _batch_shardings(batch_abs, mesh, kind)
+            step = make_train_step(model, opt, microbatches=microbatches)
+            jitted = jax.jit(
+                step, in_shardings=(param_sh, opt_sh, batch_sh),
+                donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+        elif kind == "prefill":
+            rules = SERVE_RULES
+            params_abs = model.abstract("bfloat16")
+            param_sh = template_shardings(template, mesh, rules)
+            batch_abs = batch_struct(cfg, shape)
+            batch_sh = _batch_shardings(batch_abs, mesh, kind)
+            cache_len = shape.seq_len
+            fn = lambda p, b: model.prefill(p, b, cache_len=cache_len)  # noqa: E731
+            # pin the output cache to the decode-consumable sharding — the
+            # inferred sharding replicates the (huge) cache over "model"
+            # (Perf iteration B3)
+            from repro.models.factory import cache_struct as _cs
+            decode_like = SHAPES.get("decode_32k")
+            import dataclasses as _dc
+            dshape = _dc.replace(decode_like, seq_len=cache_len,
+                                 global_batch=shape.global_batch)
+            cache_abs = cache_struct(cfg, dshape)
+            if cfg.is_encdec:
+                cache_sh = _encdec_cache_shardings(cache_abs, mesh)
+            else:
+                specs = cache_specs(cfg, shape.global_batch, cache_len, mesh)
+                cache_sh = jax.tree.map(
+                    lambda s: NamedSharding(mesh, s), specs,
+                    is_leaf=lambda x: isinstance(x, P))
+            logits_sh = NamedSharding(mesh, P(None, None, None))
+            jitted = jax.jit(fn, in_shardings=(param_sh, batch_sh),
+                             out_shardings=(logits_sh, cache_sh))
+            lowered = jitted.lower(params_abs, batch_abs)
+        else:  # decode
+            rules = SERVE_RULES
+            params_abs = model.abstract("bfloat16")
+            param_sh = template_shardings(template, mesh, rules)
+            batch_abs = batch_struct(cfg, shape)
+            batch_sh = _batch_shardings(batch_abs, mesh, kind)
+            cache_abs = cache_struct(cfg, shape)
+            if cfg.is_encdec:
+                cache_sh = _encdec_cache_shardings(cache_abs, mesh)
+            else:
+                specs = cache_specs(cfg, shape.global_batch, shape.seq_len,
+                                    mesh)
+                cache_sh = jax.tree.map(
+                    lambda s: NamedSharding(mesh, s), specs,
+                    is_leaf=lambda x: isinstance(x, P))
+            jitted = jax.jit(
+                model.decode_step,
+                in_shardings=(param_sh, cache_sh, batch_sh["tokens"]),
+                donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(params_abs, cache_abs,
+                                   batch_abs["tokens"])
+        return lowered.compile()
+
+
+def _cost_terms(compiled) -> Dict[str, Any]:
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
+        cost = dict(ca or {})
+    except Exception:  # noqa: BLE001
+        pass
+    coll = rl.collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": coll}
+
+
+def _probe_cfg(cfg, n_groups: int):
+    """Reduced-depth clone: n_groups pattern repetitions (full width)."""
+    import dataclasses
+    P_len = len(cfg.block_pattern)
+    kw = {"num_layers": n_groups * P_len, "name": f"{cfg.name}-probe{n_groups}"}
+    if cfg.is_encdec:
+        kw["encoder_layers"] = n_groups
+        kw["num_layers"] = n_groups
+    # bypass the registry (probe configs are never registered)
+    return dataclasses.replace(cfg, **kw)
+
+
+def lower_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
+               compile_: bool = True, remat: str = "full",
+               donate: bool = True, probe_costs: bool = True,
+               microbatches: int = 1) -> Dict[str, Any]:
+    cfg = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_supported(cfg, shape)
+    mesh_label = "multi" if multi_pod else "single"
+    cell = {"arch": arch_name, "shape": shape_name, "mesh": mesh_label}
+    if not ok:
+        cell["status"] = "SKIP"
+        cell["reason"] = reason
+        return cell
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+
+    # ---- 1) the real artifact: full model, scanned layers ------------------
+    t0 = time.time()
+    compiled = _compile_step(cfg, shape, mesh, remat=remat, unroll=False,
+                             donate=donate, microbatches=microbatches)
+    cell["compile_s"] = round(time.time() - t0, 1)
+
+    peak = {}
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "generated_code_size_in_bytes",
+                         "alias_size_in_bytes"):
+                if hasattr(ma, attr):
+                    peak[attr] = int(getattr(ma, attr))
+            cell["memory_analysis"] = peak
+    except Exception as e:  # noqa: BLE001
+        cell["memory_analysis_error"] = str(e)
+    hlo_len = len(compiled.as_text())
+
+    # ---- 2) cost terms ------------------------------------------------------
+    # HLO cost analysis visits loop bodies once, so the scanned module
+    # understates FLOPs/bytes/collectives. We compile two reduced-depth
+    # clones (1 and 2 pattern groups) with scans fully unrolled and
+    # extrapolate linearly in depth — exact for the homogeneous layer stack,
+    # and cheap enough to run for every cell.
+    if probe_costs:
+        t1 = time.time()
+        c1 = _cost_terms(_compile_step(_probe_cfg(cfg, 1), shape, mesh,
+                                       remat=remat, unroll=True,
+                                       donate=donate,
+                                       microbatches=microbatches))
+        c2 = _cost_terms(_compile_step(_probe_cfg(cfg, 2), shape, mesh,
+                                       remat=remat, unroll=True,
+                                       donate=donate,
+                                       microbatches=microbatches))
+        cell["probe_s"] = round(time.time() - t1, 1)
+        n_groups = cfg.num_layers / len(cfg.block_pattern)
+        if cfg.is_encdec:
+            n_groups = cfg.num_layers  # enc+dec scale together in the probes
+
+        def extrap(a, b):
+            body = b - a
+            return max(a + (n_groups - 1) * body, 0.0)
+
+        cost = {"flops": extrap(c1["flops"], c2["flops"]),
+                "bytes accessed": extrap(c1["bytes"], c2["bytes"])}
+        coll = {k: extrap(c1["coll"][k], c2["coll"][k]) for k in c1["coll"]}
+    else:
+        ct = _cost_terms(compiled)
+        cost = {"flops": ct["flops"], "bytes accessed": ct["bytes"]}
+        coll = ct["coll"]
+
+    mf = rl.model_flops(cfg, shape)
+    peak_bytes = None
+    if peak:
+        peak_bytes = (peak.get("argument_size_in_bytes", 0)
+                      + peak.get("temp_size_in_bytes", 0)
+                      + peak.get("output_size_in_bytes", 0)
+                      - peak.get("alias_size_in_bytes", 0))
+    rep = rl.build_report(arch_name, shape_name, mesh_label, chips, cost,
+                          "", mf, peak_bytes,
+                          min_bytes=rl.min_hbm_bytes(cfg, shape, chips))
+    rep.coll_breakdown = {k: int(v) for k, v in coll.items()}
+    rep.coll_bytes_per_device = float(sum(coll.values()))
+    cell["roofline"] = rep.to_dict()
+    cell["status"] = "OK"
+    cell["hlo_bytes"] = hlo_len
+    return cell
+
+
+def all_cells(include_paper: bool = True):
+    archs = list(ASSIGNED_ARCHS) + (list(PAPER_ARCHS) if include_paper else [])
+    for a in archs:
+        shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+        if a in PAPER_ARCHS:
+            shapes = ["train_4k", "prefill_32k", "decode_32k"]
+        for s in shapes:
+            yield a, s
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--remat", default="full")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    cells = (list(all_cells()) if args.all
+             else [(args.arch, args.shape)])
+
+    results = []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                cell = lower_cell(arch, shape, multi_pod=mp,
+                                  compile_=not args.no_compile,
+                                  remat=args.remat)
+            except Exception as e:  # noqa: BLE001
+                cell = {"arch": arch, "shape": shape,
+                        "mesh": "multi" if mp else "single",
+                        "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-2000:]}
+            results.append(cell)
+            r = cell.get("roofline", {})
+            print(f"[{cell['status']:5s}] {arch:24s} {shape:12s} "
+                  f"{cell['mesh']:6s} compile={cell.get('compile_s', '-')}s "
+                  f"probe={cell.get('probe_s', '-')}s "
+                  f"dom={r.get('dominant', '-')} "
+                  f"useful={r.get('useful_flops_ratio', 0):.2f} "
+                  f"roofl={r.get('roofline_fraction', 0)*100:.1f}% "
+                  f"{cell.get('reason', '')}{cell.get('error', '')}",
+                  flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,259 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Terms per (arch x shape x mesh), TPU v5e-class constants:
+    compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+    memory     = HLO_bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / LINK_BW
+
+HLO_FLOPs / bytes come from compiled.cost_analysis() of the post-SPMD module
+(per-device program). collective_bytes is not in cost_analysis: we parse
+compiled.as_text() and sum the operand bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute instruction
+(operand types are inline in HLO text, so this is exact per-device traffic
+entering the collective).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_RESULT_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]\S*))\s+([a-z0-9-]+)\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _result_bytes(result: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(result):
+        total += _shape_bytes(dt, dims)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes moved by collectives, from post-SPMD HLO text.
+
+    Post-optimization HLO prints operand names without types, so we use the
+    result shape (exact for all-reduce / all-to-all / collective-permute;
+    bytes received for all-gather). reduce-scatter results are 1/group of the
+    wire traffic, so they're scaled by the replica group size. Async pairs
+    (-start/-done) are counted once.
+    """
+    out: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _RESULT_RE.search(stripped)
+        if not m:
+            continue
+        result_type, op = m.group(1), m.group(2)
+        base = None
+        for k in COLLECTIVE_OPS:
+            if op == k or op == k + "-start":
+                base = k
+                break
+        if base is None:
+            continue
+        b = _result_bytes(result_type)
+        if base == "reduce-scatter":
+            g = _GROUPS_RE.search(stripped)
+            if g:
+                b *= int(g.group(2))
+        out[base] += b
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: Dict[str, int] = field(default_factory=dict)
+    model_flops_total: float = 0.0
+    peak_memory_per_device: Optional[float] = None
+    min_bytes_per_device: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_device / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs x chips) — remat/redundancy waste."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops_total / total if total else 0.0
+
+    @property
+    def t_min_memory(self) -> float:
+        """Analytic lower bound on HBM time: bytes that MUST move (weights,
+        KV/state, batch io) even with perfect fusion."""
+        return self.min_bytes_per_device / HBM_BW
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Headline score: ideal-time / modeled-bound-time, where ideal time
+        is the larger of the useful-FLOPs bound and the mandatory-bytes bound
+        (decode is legitimately bandwidth-bound — reading the weights and KV
+        once is the roofline, not the MXU)."""
+        if self.bound_time <= 0:
+            return 0.0
+        useful_t = max((self.model_flops_total / self.chips) / PEAK_FLOPS,
+                       self.t_min_memory)
+        return min(useful_t / self.bound_time, 1.0)
+
+    def row(self) -> str:
+        return (f"{self.arch:24s} {self.shape:12s} {self.mesh:6s} "
+                f"{self.t_compute*1e3:9.2f} {self.t_memory*1e3:9.2f} "
+                f"{self.t_collective*1e3:9.2f} {self.dominant:10s} "
+                f"{self.useful_flops_ratio:6.2f} "
+                f"{self.roofline_fraction*100:6.1f}%")
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops_total": self.model_flops_total,
+            "t_compute_ms": self.t_compute * 1e3,
+            "t_memory_ms": self.t_memory * 1e3,
+            "t_collective_ms": self.t_collective * 1e3,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "peak_memory_per_device": self.peak_memory_per_device,
+            "min_bytes_per_device": self.min_bytes_per_device,
+            "t_min_memory_ms": self.t_min_memory * 1e3,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS for the cell (6ND train / 2ND inference; MoE uses
+    active params; decode processes one token per sequence)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence + attention reads over the KV length
+    tokens = shape.global_batch
+    flops = 2.0 * n_active * tokens
+    if cfg.num_heads:
+        ctx = shape.seq_len
+        if cfg.local_window:
+            kinds = cfg.layer_kinds()
+            n_local = sum(1 for k in kinds if k in ("local", "chunked"))
+            n_full = sum(1 for k in kinds if k == "full")
+            eff_layers = n_full + n_local * min(
+                1.0, cfg.local_window / max(ctx, 1))
+        else:
+            eff_layers = sum(1 for k in cfg.layer_kinds()
+                             if k in ("full", "local", "chunked"))
+        flops += (4.0 * tokens * ctx * cfg.num_kv_heads * cfg.head_dim
+                  * eff_layers)
+    return flops
+
+
+def min_hbm_bytes(cfg, shape, chips: int) -> float:
+    """Mandatory per-device HBM traffic per step (perfect-fusion floor)."""
+    if shape.kind == "train":
+        # fp32 params read+write, m/v read+write, bf16 batch io, one
+        # activation checkpoint per layer each way
+        w = cfg.param_count() * 4.0 * 6.0
+        act = (shape.global_batch * shape.seq_len * cfg.d_model * 2.0
+               * cfg.num_layers * 2.0)
+        return (w + act) / chips
+    w = cfg.active_param_count() * 2.0
+    if shape.kind == "prefill":
+        act = (shape.global_batch * shape.seq_len * cfg.d_model * 2.0
+               * cfg.num_layers)
+        return (w + act) / chips
+    # decode: weights + the KV cache / recurrent state read once
+    kv = 0.0
+    if cfg.num_heads:
+        for kind in cfg.layer_kinds():
+            if kind == "full":
+                ctx = shape.seq_len
+            elif kind in ("local", "chunked"):
+                ctx = min(cfg.local_window or shape.seq_len, shape.seq_len)
+            else:
+                continue
+            kv += 2.0 * shape.global_batch * ctx * cfg.kv_dim * 2.0
+    if cfg.ssm is not None:
+        s = cfg.ssm
+        kv += (shape.global_batch * s.num_heads(cfg.d_model) * s.head_dim
+               * s.state_dim * 4.0 * cfg.num_layers)
+    return (w + kv) / chips
+
+
+def build_report(arch_name: str, shape_name: str, mesh_label: str,
+                 chips: int, cost: dict, hlo_text: str,
+                 model_flops_total: float,
+                 peak_mem: Optional[float] = None,
+                 min_bytes: float = 0.0) -> RooflineReport:
+    coll = collective_bytes(hlo_text)
+    return RooflineReport(
+        arch=arch_name, shape=shape_name, mesh=mesh_label, chips=chips,
+        flops_per_device=float(cost.get("flops", 0.0)),
+        bytes_per_device=float(cost.get("bytes accessed", 0.0)),
+        coll_bytes_per_device=float(sum(coll.values())),
+        coll_breakdown=coll,
+        model_flops_total=model_flops_total,
+        peak_memory_per_device=peak_mem,
+        min_bytes_per_device=min_bytes)
+
+
+HEADER = (f"{'arch':24s} {'shape':12s} {'mesh':6s} {'t_comp ms':>9} "
+          f"{'t_mem ms':>9} {'t_coll ms':>9} {'dominant':10s} {'useful':>6} "
+          f"{'roofl%':>7}")

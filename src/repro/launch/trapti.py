@@ -1,0 +1,132 @@
+"""TRAPTI co-design CLI — the paper's two-stage flow as a framework command.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.trapti --arch dsr1d-qwen-1.5b
+    PYTHONPATH=src python -m repro.launch.trapti --arch qwen2-7b \
+        --seq 4096 --scheduler mempeak --policy drowsy --json out.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.configs import get_arch, list_archs
+from repro.core.energy import assemble_energy
+from repro.core.explorer import min_capacity_mib, sweep
+from repro.core.sensitivity import evaluate_drowsy, policy_sensitivity
+from repro.core.workload import build_decode_graph, build_graph
+from repro.sim.accelerator import baseline_accelerator, multilevel_accelerator
+from repro.sim.engine import find_min_sram, simulate
+
+MIB = 2**20
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="dsr1d-qwen-1.5b",
+                    help=f"one of {list_archs()}")
+    ap.add_argument("--seq", type=int, default=2048)
+    ap.add_argument("--phase", choices=["prefill", "decode"],
+                    default="prefill")
+    ap.add_argument("--decode-batch", type=int, default=16)
+    ap.add_argument("--scheduler", choices=["fifo", "mempeak"],
+                    default="fifo")
+    ap.add_argument("--policy", choices=["conservative", "aggressive",
+                                         "drowsy"], default="conservative")
+    ap.add_argument("--multilevel", action="store_true")
+    ap.add_argument("--banks", type=int, nargs="+",
+                    default=[1, 2, 4, 8, 16, 32])
+    ap.add_argument("--sensitivity", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.phase == "decode":
+        graph = build_decode_graph(cfg, context_len=args.seq,
+                                   batch=args.decode_batch)
+    else:
+        graph = build_graph(cfg, M=args.seq, subops=4)
+    print(f"workload: {graph.name}  {graph.total_macs()/1e12:.2f} TMACs, "
+          f"{len(graph.ops)} ops, weights "
+          f"{graph.total_weight_bytes()/MIB:.0f} MiB")
+
+    # ---- Stage I: size the SRAM, extract the trace --------------------------
+    accel = (multilevel_accelerator(64) if args.multilevel
+             else baseline_accelerator(128))
+    if args.multilevel:
+        sim = simulate(graph, accel, policy=args.scheduler)
+        mib = 64
+    else:
+        mib, sim = find_min_sram(graph, accel, lo_mib=16, hi_mib=256,
+                                 step_mib=16)
+        if args.scheduler != "fifo":
+            sim = simulate(graph, accel.with_sram_capacity(mib * MIB),
+                           policy=args.scheduler)
+    energy = assemble_energy(sim, accel)
+    print(f"Stage I [{args.scheduler}]: t={sim.total_time*1e3:.1f} ms  "
+          f"util={sim.pe_utilization*100:.1f}%  "
+          f"E_onchip={energy.total:.1f} J  min SRAM={mib} MiB  "
+          f"write-backs={sim.writebacks}")
+
+    report = {"arch": args.arch, "seq": args.seq, "phase": args.phase,
+              "scheduler": args.scheduler, "min_sram_mib": mib,
+              "time_ms": sim.total_time * 1e3,
+              "energy_onchip_j": energy.total, "memories": {}}
+
+    # ---- Stage II: banking + gating per on-chip memory ----------------------
+    for mem in sim.traces:
+        if mem == "dram":
+            continue
+        trace = sim.traces[mem]
+        if trace.peak_needed() == 0:
+            continue
+        lo = min_capacity_mib(trace.peak_needed())
+        table = sweep(sim, mem_name=mem, capacities_mib=[lo],
+                      banks=tuple(args.banks))
+        best = table.best()
+        print(f"\nStage II [{mem}] peak={trace.peak_needed()/MIB:.1f} MiB:")
+        print(table.format())
+        line = (f"--> {mem}: C={best.capacity_mib} MiB, B={best.banks} "
+                f"({best.delta_e_pct:+.1f}% E, {best.delta_a_pct:+.1f}% A)")
+        if args.policy == "drowsy":
+            dur, occ = trace.occupancy_series(sim.total_time, use="needed")
+            dr = evaluate_drowsy(dur, occ,
+                                 capacity=best.capacity_mib * MIB,
+                                 banks=best.banks,
+                                 n_reads=sim.access.n_reads(mem),
+                                 n_writes=sim.access.n_writes(mem))
+            gain = (1 - dr.e_total / best.result.e_total) * 100
+            line += (f"  drowsy: {dr.e_total*1e3:.1f} mJ "
+                     f"({gain:+.1f}% vs off-only)")
+        print(line)
+        report["memories"][mem] = {
+            "peak_mib": trace.peak_needed() / MIB,
+            "best_capacity_mib": best.capacity_mib,
+            "best_banks": best.banks,
+            "best_delta_e_pct": best.delta_e_pct,
+        }
+
+        if args.sensitivity and mem == "sram":
+            dur, occ = trace.occupancy_series(sim.total_time, use="needed")
+            sens = policy_sensitivity(
+                dur, occ, capacity=best.capacity_mib * MIB,
+                banks=best.banks, n_reads=sim.access.n_reads(mem),
+                n_writes=sim.access.n_writes(mem))
+            print("    sensitivity (E_tot mJ):")
+            for k, row in sens.items():
+                vals = " ".join(f"{p}:{v*1e3:.1f}" for p, v in row.items())
+                print(f"      {k:10s} {vals}")
+            report["sensitivity"] = {
+                k: {str(p): v for p, v in row.items()}
+                for k, row in sens.items()}
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"\nwrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models.factory import build_model, batch_struct, cache_struct, concrete_batch  # noqa: F401
+from repro.models.transformer import DecoderLM, init_cache, cache_specs  # noqa: F401
+from repro.models.encdec import EncDecModel  # noqa: F401

@@ -1,0 +1,266 @@
+"""Attention: MHA / GQA / MQA with full, sliding-window (local) and chunked
+variants; blocked (flash-style) prefill/train path and single-token decode path.
+
+The blocked jnp implementation is the portable path (and the oracle the Pallas
+kernels are tested against); `use_kernels=True` in ops selects the Pallas TPU
+kernels at runtime.
+
+Memory note: naive attention at seq 32k would materialize S×S scores; the
+blocked path keeps O(S × kv_block) live, which is what lets the 32k prefill
+dry-run fit in HBM.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import PTpl, apply_rope
+
+NEG_INF = -1.0e30
+
+
+# ---------------------------------------------------------------------------
+# Templates
+# ---------------------------------------------------------------------------
+
+def attn_template(cfg, cross: bool = False) -> dict:
+    D, Q, KV = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    t = {
+        "wq": PTpl((D, Q), ("embed", "qkv_out")),
+        "wk": PTpl((D, KV), ("embed", "qkv_out")),
+        "wv": PTpl((D, KV), ("embed", "qkv_out")),
+        "wo": PTpl((Q, D), ("qkv_out", "embed")),
+    }
+    if cfg.attn_bias and not cross:
+        t["bq"] = PTpl((Q,), ("qkv_out",), "zeros")
+        t["bk"] = PTpl((KV,), ("qkv_out",), "zeros")
+        t["bv"] = PTpl((KV,), ("qkv_out",), "zeros")
+    return t
+
+
+def project_qkv(cfg, p: dict, xq: jax.Array, xkv: jax.Array):
+    """(B,S,D)->(B,S,H,h) and (B,T,D)->(B,T,K,h)."""
+    B, S, _ = xq.shape
+    T = xkv.shape[1]
+    q = xq @ p["wq"].astype(xq.dtype)
+    k = xkv @ p["wk"].astype(xq.dtype)
+    v = xkv @ p["wv"].astype(xq.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Blocked (flash-style) attention — full / causal
+# ---------------------------------------------------------------------------
+
+def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, q_offset: int = 0,
+                      kv_block: int = 1024, unroll: bool = False) -> jax.Array:
+    """Online-softmax attention over KV blocks.
+
+    q: (B, S, H, h); k, v: (B, T, K, h) with H % K == 0 (GQA groups).
+    Returns (B, S, H, h). fp32 accumulators; output in q.dtype.
+    """
+    B, S, H, h = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    kv_block = min(kv_block, T)
+    assert T % kv_block == 0, (T, kv_block)
+    nb = T // kv_block
+    scale = 1.0 / jnp.sqrt(jnp.float32(h))
+
+    # keep operands in the input dtype (bf16 on TPU -> MXU) and accumulate in
+    # fp32 — halves the live fp32 working set vs upcasting q and p
+    qg = (q * jnp.asarray(scale, q.dtype)).reshape(B, S, K, G, h)
+    q_pos = q_offset + jnp.arange(S)
+
+    def body(carry, i):
+        m, l, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, i * kv_block, kv_block, 1)
+        vs = jax.lax.dynamic_slice_in_dim(v, i * kv_block, kv_block, 1)
+        s = jnp.einsum("bskgh,btkh->bskgt", qg, ks,
+                       preferred_element_type=jnp.float32)
+        if causal:
+            kv_pos = i * kv_block + jnp.arange(kv_block)
+            valid = q_pos[:, None] >= kv_pos[None, :]         # (S, blk)
+            s = jnp.where(valid[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bskgt,btkh->bskgh", p.astype(q.dtype), vs,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, S, K, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, S, K, G), jnp.float32)
+    a0 = jnp.zeros((B, S, K, G, h), jnp.float32)
+    # unroll=True is used by the dry-run so HLO cost analysis sees every
+    # block's FLOPs (loop bodies are otherwise counted once)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nb),
+                                  unroll=nb if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, S, H, h).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked attention (llama4): attention restricted to chunks of size W
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      window: int) -> jax.Array:
+    from repro.models.meshctx import constrain
+    from jax.sharding import PartitionSpec as P
+    B, S, H, h = q.shape
+    K = k.shape[2]
+    G = H // K
+    W = min(window, S)
+    assert S % W == 0, (S, W)
+    nc = S // W
+    scale = 1.0 / jnp.sqrt(jnp.float32(h))
+    qc = q.reshape(B, nc, W, K, G, h).astype(jnp.float32) * scale
+    kc = k.reshape(B, nc, W, K, h).astype(jnp.float32)
+    vc = v.reshape(B, nc, W, K, h).astype(jnp.float32)
+    # Perf iteration D1: shard query rows within each chunk over "model",
+    # replicate the (GQA-small) K/V — same sequence-parallel scheme as the
+    # full-attention path, applied intra-chunk.
+    bspec = ("pod", "data")
+    qc = constrain(qc, P(bspec, None, "model", None, None, None))
+    kc = constrain(kc, P(bspec, None, None, None, None))
+    vc = constrain(vc, P(bspec, None, None, None, None))
+    s = jnp.einsum("bcskgh,bctkh->bcskgt", qc, kc)
+    causal = jnp.arange(W)[:, None] >= jnp.arange(W)[None, :]
+    s = jnp.where(causal[None, None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bcskgt,bctkh->bcskgh", p, vc)
+    return out.reshape(B, S, H, h).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Sliding-window (local) attention: each position sees the last `window` keys
+# ---------------------------------------------------------------------------
+
+def local_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    window: int) -> jax.Array:
+    B, S, H, h = q.shape
+    K = k.shape[2]
+    G = H // K
+    W = min(window, S)
+    assert S % W == 0, (S, W)
+    nc = S // W
+    scale = 1.0 / jnp.sqrt(jnp.float32(h))
+    qc = q.reshape(B, nc, W, K, G, h).astype(jnp.float32) * scale
+    kc = k.reshape(B, nc, W, K, h)
+    vc = v.reshape(B, nc, W, K, h)
+    # Perf iteration D1 (see chunked_attention)
+    from repro.models.meshctx import constrain
+    from jax.sharding import PartitionSpec as P
+    bspec = ("pod", "data")
+    qc = constrain(qc, P(bspec, None, "model", None, None, None))
+    kc = constrain(kc, P(bspec, None, None, None, None))
+    vc = constrain(vc, P(bspec, None, None, None, None))
+    # each q chunk attends to [prev chunk, own chunk] = 2W keys
+    zpad = jnp.zeros_like(kc[:, :1])
+    kprev = jnp.concatenate([zpad, kc[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], axis=1)
+    k2 = jnp.concatenate([kprev, kc], axis=2).astype(jnp.float32)  # (B,nc,2W,K,h)
+    v2 = jnp.concatenate([vprev, vc], axis=2).astype(jnp.float32)
+    s = jnp.einsum("bcskgh,bctkh->bcskgt", qc, k2)
+    q_pos = jnp.arange(W)[:, None]               # within chunk
+    kv_pos = jnp.arange(2 * W)[None, :] - W      # relative to chunk start
+    valid = (q_pos >= kv_pos) & (q_pos - kv_pos < W)
+    # chunk 0 has no previous chunk
+    chunk_ok = jnp.ones((nc, 1, 1), bool).at[0].set(False)
+    valid2 = valid[None, :, :] & (chunk_ok | (kv_pos >= 0)[None, :, :])
+    s = jnp.where(valid2[None, :, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bcskgt,bctkh->bcskgh", p, v2)
+    return out.reshape(B, S, H, h).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (encoder-decoder): full, non-causal
+# ---------------------------------------------------------------------------
+
+def cross_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    kv_block: int = 1024, unroll: bool = False) -> jax.Array:
+    return blocked_attention(q, k, v, causal=False, kv_block=kv_block,
+                             unroll=unroll)
+
+
+# ---------------------------------------------------------------------------
+# Decode: one new token against a cache
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     valid_mask: jax.Array) -> jax.Array:
+    """q: (B, 1, H, h); caches: (B, T, K, h); valid_mask: (B, T) or (T,) bool.
+
+    Plain einsum decode — scores are (B, H, T) which is small even at T=524288.
+    """
+    from repro.models.meshctx import constrain
+    from jax.sharding import PartitionSpec as P
+    B, _, H, h = q.shape
+    T, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    scale = 1.0 / jnp.sqrt(jnp.float32(h))
+    qg = q.reshape(B, K, G, h).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgh,btkh->bkgt", qg, k_cache.astype(jnp.float32))
+    # Perf iteration F1: keep scores batch-sharded over "data" and
+    # seq-sharded over "model" (matching the cache layout) — on the
+    # multi-pod mesh SPMD otherwise batch-gathers the fp32 scores/cache.
+    s = constrain(s, P("data", None, None, "model"))
+    if valid_mask.ndim == 1:
+        valid = valid_mask[None, None, None, :]
+    else:
+        valid = valid_mask[:, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid, p, 0.0)
+    p = constrain(p, P("data", None, None, "model"))
+    out = jnp.einsum("bkgt,btkh->bkgh", p, v_cache.astype(jnp.float32))
+    out = constrain(out, P("data", None, None, None))
+    return out.reshape(B, 1, H, h).astype(q.dtype)
+
+
+def cache_write(cache_k, cache_v, k, v, write_idx):
+    """Functional KV cache update at a dynamic position (ring or linear).
+
+    cache_*: (B, T, K, h); k, v: (B, 1, K, h); write_idx: scalar int.
+    """
+    ck = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype),
+                                             write_idx, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype),
+                                             write_idx, axis=1)
+    return ck, cv
+
+
+def decode_valid_mask(kind: str, cache_len: int, pos: jax.Array,
+                      window: int = 0) -> jax.Array:
+    """Which cache slots are attendable for a query at absolute position `pos`.
+
+    kind=full   : linear cache, slots [0, pos] valid.
+    kind=local  : ring cache of size `window` holding the last W positions.
+    kind=chunked: ring cache of size `window`; only slots from the current
+                  chunk (absolute positions >= pos - pos % W) are valid.
+    """
+    idx = jnp.arange(cache_len)
+    if kind == "full":
+        return idx <= pos
+    W = window
+    assert cache_len == W, (cache_len, W)
+    if kind == "local":
+        return (idx <= pos) | (pos >= W)
+    if kind == "chunked":
+        return idx <= (pos % W)
+    raise ValueError(kind)

@@ -1,0 +1,193 @@
+"""Shared model building blocks: param templates, norms, embeddings, RoPE."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Param templates
+#
+# A model is described by a pytree of `PTpl` leaves (shape + logical axes +
+# init). From one template we derive (a) materialized params, (b) abstract
+# ShapeDtypeStructs for the dry-run, and (c) NamedShardings via the rules in
+# models/sharding.py. This keeps init / sharding / lowering in lock-step.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PTpl:
+    shape: tuple
+    axes: tuple                  # logical axis name per dim (len == ndim)
+    init: str = "normal"         # normal | zeros | ones | embed
+    scale: float = 1.0           # stddev multiplier for "normal"
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _leaf_rng(rng: jax.Array, path: str) -> jax.Array:
+    # deterministic per-leaf rng: fold in a stable hash of the tree path
+    # (crc32, NOT python hash() — that one is salted per process)
+    import zlib
+    h = np.uint32(zlib.crc32(path.encode()) & 0x7FFFFFFF)
+    return jax.random.fold_in(rng, h)
+
+
+def init_param(tpl: PTpl, rng: jax.Array, path: str) -> jax.Array:
+    dtype = jnp.dtype(tpl.dtype)
+    if tpl.init == "zeros":
+        return jnp.zeros(tpl.shape, dtype)
+    if tpl.init == "ones":
+        return jnp.ones(tpl.shape, dtype)
+    fan_in = tpl.shape[-2] if len(tpl.shape) >= 2 else tpl.shape[-1]
+    std = tpl.scale / math.sqrt(max(1, fan_in))
+    if tpl.init == "embed":
+        std = tpl.scale * 0.02
+    x = jax.random.normal(_leaf_rng(rng, path), tpl.shape, jnp.float32) * std
+    return x.astype(dtype)
+
+
+def init_params(template, rng: jax.Array):
+    """Materialize a param pytree from a template pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        template, is_leaf=lambda x: isinstance(x, PTpl))
+    leaves = []
+    for path, tpl in flat:
+        pstr = jax.tree_util.keystr(path)
+        leaves.append(init_param(tpl, rng, pstr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def abstract_params(template, dtype_override: Optional[str] = None):
+    """ShapeDtypeStructs for the dry-run (no allocation)."""
+    def f(tpl: PTpl):
+        dt = jnp.dtype(dtype_override or tpl.dtype)
+        return jax.ShapeDtypeStruct(tpl.shape, dt)
+    return jax.tree.map(f, template, is_leaf=lambda x: isinstance(x, PTpl))
+
+
+def cast_params(params, dtype):
+    def f(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree.map(f, params)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm_template(cfg, axes=("embed",)) -> dict:
+    d = cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": PTpl((d,), axes, "ones"),
+                "bias": PTpl((d,), axes, "zeros")}
+    return {"scale": PTpl((d,), axes, "zeros")}  # rmsnorm stores (scale - 1)
+
+
+def apply_norm(cfg, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+def stack_tpl(tpl, n: int, axis_name: str = "layers"):
+    """Prepend a stacking dim (for lax.scan over layers) to every template leaf."""
+    def f(t: PTpl):
+        return PTpl((n,) + t.shape, (axis_name,) + t.axes, t.init, t.scale, t.dtype)
+    return jax.tree.map(f, tpl, is_leaf=lambda x: isinstance(x, PTpl))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, n_heads, head_dim); positions: broadcastable to (..., S)."""
+    *_, s, h, d = x.shape
+    freqs = rope_frequencies(d, theta)                       # (d/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_template(cfg) -> dict:
+    t = {"tok": PTpl((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"), "embed")}
+    if cfg.pos_emb == "learned":
+        table = min(cfg.max_seq_len, 32768)
+        t["pos"] = PTpl((table, cfg.d_model), ("seq_table", "embed"), "embed")
+    if not cfg.tie_embeddings:
+        t["head"] = PTpl((cfg.d_model, cfg.padded_vocab), ("embed", "vocab"),
+                         "normal")
+    return t
+
+
+def embed_tokens(cfg, p: dict, tokens: jax.Array, positions: jax.Array,
+                 dtype) -> jax.Array:
+    x = p["tok"].astype(dtype)[tokens]
+    if cfg.pos_emb == "learned":
+        table = p["pos"].shape[0]
+        x = x + p["pos"].astype(dtype)[jnp.clip(positions, 0, table - 1)]
+    return x
+
+
+def lm_logits(cfg, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, p["tok"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, p["head"].astype(x.dtype))
+    # mask vocab padding
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad = cfg.padded_vocab - cfg.vocab_size
+        mask = jnp.concatenate([jnp.zeros((cfg.vocab_size,), logits.dtype),
+                                jnp.full((pad,), -1e9, logits.dtype)])
+        logits = logits + mask
+    return logits
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  ignore_id: int = -1) -> jax.Array:
+    """Mean CE over non-ignored positions; logits (..., V), labels (...)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None].clip(0), axis=-1)[..., 0]
+    nll = lse - ll
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

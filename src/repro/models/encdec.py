@@ -1,0 +1,228 @@
+"""Encoder-decoder transformer (seamless-m4t backbone). The audio frontend is
+a stub: the encoder consumes precomputed frame embeddings (B, S_enc, D).
+
+Entry points mirror DecoderLM: loss / prefill / decode_step, where prefill
+runs the encoder once, fills the decoder self-attention cache, and caches the
+cross-attention K/V projected from the encoder memory.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models.common import (abstract_params, apply_norm, apply_rope,
+                                 cross_entropy, embed_template, embed_tokens,
+                                 init_params, lm_logits, norm_template,
+                                 stack_tpl)
+from repro.models.meshctx import constrain
+
+
+def enc_block_template(cfg) -> dict:
+    return {"norm1": norm_template(cfg), "attn": attn.attn_template(cfg),
+            "norm2": norm_template(cfg), "ffn": ffn_mod.ffn_template(cfg)}
+
+
+def dec_block_template(cfg) -> dict:
+    return {"norm1": norm_template(cfg), "self_attn": attn.attn_template(cfg),
+            "norm_c": norm_template(cfg),
+            "cross_attn": attn.attn_template(cfg, cross=True),
+            "norm2": norm_template(cfg), "ffn": ffn_mod.ffn_template(cfg)}
+
+
+def encdec_template(cfg) -> dict:
+    from repro.models.common import PTpl
+    return {
+        "embed": embed_template(cfg),
+        "enc_pos": PTpl((min(cfg.max_seq_len, 32768), cfg.d_model),
+                        ("seq_table", "embed"), "embed"),
+        "encoder": stack_tpl(enc_block_template(cfg), cfg.encoder_layers),
+        "enc_norm": norm_template(cfg),
+        "decoder": stack_tpl(dec_block_template(cfg), cfg.num_layers),
+        "final_norm": norm_template(cfg),
+    }
+
+
+@dataclass
+class EncDecModel:
+    cfg: Any
+    compute_dtype: Any = jnp.bfloat16
+    remat: str = "full"
+    kv_block: int = 1024
+    unroll: bool = False          # dry-run: unroll scans for cost analysis
+
+    def template(self) -> dict:
+        return encdec_template(self.cfg)
+
+    def init(self, rng: jax.Array) -> dict:
+        return init_params(self.template(), rng)
+
+    def abstract(self, dtype_override: Optional[str] = None):
+        return abstract_params(self.template(), dtype_override)
+
+    # ----------------------------------------------------------- encoder
+    def encode(self, params: dict, frames: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        dt = self.compute_dtype
+        B, S, _ = frames.shape
+        table = params["enc_pos"].shape[0]
+        pos = jnp.clip(jnp.arange(S), 0, table - 1)
+        x = frames.astype(dt) + params["enc_pos"].astype(dt)[pos]
+        x = constrain(x, P(("pod", "data"), None, None))
+
+        def block(x, p):
+            y = apply_norm(cfg, p["norm1"], x)
+            q, k, v = attn.project_qkv(cfg, p["attn"], y, y)
+            o = attn.blocked_attention(q, k, v, causal=False,
+                                       kv_block=self.kv_block,
+                                       unroll=self.unroll)
+            o = o.reshape(B, S, cfg.q_dim) @ p["attn"]["wo"].astype(dt)
+            x = x + o
+            x = x + ffn_mod.apply_ffn(cfg, p["ffn"],
+                                      apply_norm(cfg, p["norm2"], x))
+            return constrain(x, P(("pod", "data"), None, None))
+
+        if self.remat != "none":
+            block = jax.checkpoint(block)
+
+        def body(x, p):
+            return block(x, p), None
+
+        x, _ = jax.lax.scan(body, x, params["encoder"],
+                            unroll=self.cfg.encoder_layers if self.unroll
+                            else 1)
+        return apply_norm(cfg, params["enc_norm"], x)
+
+    # ----------------------------------------------------------- decoder
+    def _dec_block(self, p, x, memory, positions, causal_offset=0):
+        cfg = self.cfg
+        dt = self.compute_dtype
+        B, S, _ = x.shape
+        y = apply_norm(cfg, p["norm1"], x)
+        q, k, v = attn.project_qkv(cfg, p["self_attn"], y, y)
+        o = attn.blocked_attention(q, k, v, causal=True,
+                                   q_offset=causal_offset,
+                                   kv_block=self.kv_block,
+                                   unroll=self.unroll)
+        x = x + o.reshape(B, S, cfg.q_dim) @ p["self_attn"]["wo"].astype(dt)
+        y = apply_norm(cfg, p["norm_c"], x)
+        qc, kc, vc = attn.project_qkv(cfg, p["cross_attn"], y, memory)
+        oc = attn.cross_attention(qc, kc, vc, kv_block=self.kv_block,
+                                  unroll=self.unroll)
+        x = x + oc.reshape(B, S, cfg.q_dim) @ p["cross_attn"]["wo"].astype(dt)
+        x = x + ffn_mod.apply_ffn(cfg, p["ffn"], apply_norm(cfg, p["norm2"], x))
+        return constrain(x, P(("pod", "data"), None, None)), (k, v, kc, vc)
+
+    # -------------------------------------------------------------- loss
+    def loss(self, params: dict, batch: dict) -> jax.Array:
+        cfg = self.cfg
+        dt = self.compute_dtype
+        memory = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        x = embed_tokens(cfg, params["embed"], tokens, positions, dt)
+
+        blk = self._dec_block
+        if self.remat != "none":
+            blk = jax.checkpoint(blk, static_argnums=())
+
+        def body(x, p):
+            x, _ = blk(p, x, memory, positions)
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, params["decoder"],
+                            unroll=self.cfg.num_layers if self.unroll else 1)
+        del blk
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = lm_logits(cfg, params["embed"], x[:, :-1, :])
+        labels = batch.get("labels", tokens)[:, 1:]
+        return cross_entropy(logits, labels)
+
+    # ------------------------------------------------------------ prefill
+    def init_cache(self, batch: int, cache_len: int, mem_len: int):
+        cfg = self.cfg
+        L = cfg.num_layers
+        z = jnp.zeros((L, batch, cache_len, cfg.num_kv_heads, cfg.head_dim),
+                      self.compute_dtype)
+        zc = jnp.zeros((L, batch, mem_len, cfg.num_kv_heads, cfg.head_dim),
+                       self.compute_dtype)
+        return {"k": z, "v": z, "ck": zc, "cv": zc,
+                "pos": jnp.zeros((), jnp.int32)}
+
+    def prefill(self, params: dict, batch: dict, cache_len: int):
+        cfg = self.cfg
+        dt = self.compute_dtype
+        memory = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        mem_len = memory.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        x = embed_tokens(cfg, params["embed"], tokens, positions, dt)
+        cache = self.init_cache(B, cache_len, mem_len)
+
+        def body(x, p):
+            x, (k, v, kc, vc) = self._dec_block(p, x, memory, positions)
+            return x, (k.astype(dt), v.astype(dt), kc.astype(dt),
+                       vc.astype(dt))
+
+        x, (ks, vs, cks, cvs) = jax.lax.scan(
+            body, x, params["decoder"],
+            unroll=self.cfg.num_layers if self.unroll else 1)
+        T = cache_len
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], ks[:, :, :T], 0, axis=2)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], vs[:, :, :T], 0, axis=2)
+        cache["ck"] = cks
+        cache["cv"] = cvs
+        cache["pos"] = jnp.asarray(S, jnp.int32)
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = lm_logits(cfg, params["embed"], x[:, -1:, :])
+        return logits, cache
+
+    # -------------------------------------------------------- decode step
+    def decode_step(self, params: dict, cache: dict, tokens: jax.Array):
+        cfg = self.cfg
+        dt = self.compute_dtype
+        pos = cache["pos"]
+        B = tokens.shape[0]
+        x = embed_tokens(cfg, params["embed"], tokens,
+                         jnp.broadcast_to(pos, (B, 1)), dt)
+        T = cache["k"].shape[2]
+        mem_len = cache["ck"].shape[2]
+
+        def body(x, xs):
+            p, k_slot, v_slot, ck_slot, cv_slot = xs
+            y = apply_norm(cfg, p["norm1"], x)
+            q, k, v = attn.project_qkv(cfg, p["self_attn"], y, y)
+            nk, nv = attn.cache_write(k_slot, v_slot, k, v, pos)
+            valid = attn.decode_valid_mask("full", T, pos)
+            o = attn.decode_attention(q, nk, nv, valid)
+            x = x + o.reshape(B, 1, cfg.q_dim) @ p["self_attn"]["wo"].astype(dt)
+            y = apply_norm(cfg, p["norm_c"], x)
+            qc = (y @ p["cross_attn"]["wq"].astype(dt)).reshape(
+                B, 1, cfg.num_heads, cfg.head_dim)
+            oc = attn.decode_attention(qc, ck_slot, cv_slot,
+                                       jnp.ones((mem_len,), bool))
+            x = x + oc.reshape(B, 1, cfg.q_dim) @ p["cross_attn"]["wo"].astype(dt)
+            x = x + ffn_mod.apply_ffn(cfg, p["ffn"],
+                                      apply_norm(cfg, p["norm2"], x))
+            return x, (nk, nv)
+
+        x, (nks, nvs) = jax.lax.scan(
+            body, x, (params["decoder"], cache["k"], cache["v"],
+                      cache["ck"], cache["cv"]),
+            unroll=self.cfg.num_layers if self.unroll else 1)
+        new_cache = dict(cache)
+        new_cache["k"] = nks
+        new_cache["v"] = nvs
+        new_cache["pos"] = pos + 1
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = lm_logits(cfg, params["embed"], x)
+        return logits, new_cache

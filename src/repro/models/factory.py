@@ -1,0 +1,112 @@
+"""Model factory + input specs: build the right model class for an arch config
+and produce either concrete batches (smoke tests) or ShapeDtypeStruct stand-ins
+(dry-run) for every (arch × shape) cell.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.encdec import EncDecModel
+from repro.models.transformer import DecoderLM, init_cache
+
+
+def build_model(cfg: ArchConfig, *, compute_dtype=jnp.bfloat16,
+                remat: str = "full", kv_block: int = 1024,
+                unroll: bool = False):
+    if cfg.is_encdec:
+        return EncDecModel(cfg, compute_dtype=compute_dtype, remat=remat,
+                           kv_block=kv_block, unroll=unroll)
+    return DecoderLM(cfg, compute_dtype=compute_dtype, remat=remat,
+                     kv_block=kv_block, unroll=unroll)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs) per (arch × shape) — the dry-run contract
+# ---------------------------------------------------------------------------
+
+def batch_struct(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract inputs for the given cell's step function.
+
+    train  -> kwargs of train_step(params, opt_state, batch)
+    prefill-> kwargs of prefill(params, batch)
+    decode -> kwargs of decode_step(params, cache, tokens)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    if cfg.is_encdec:
+        if shape.kind == "train":
+            return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                   jnp.bfloat16),
+                    "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                    "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        if shape.kind == "prefill":
+            return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                   jnp.bfloat16),
+                    "tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        # decode: one token; cache built separately
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+
+    if cfg.frontend is not None:
+        n_pfx = cfg.frontend.num_prefix_tokens
+        if shape.kind in ("train", "prefill"):
+            d: Dict[str, Any] = {
+                "prefix_embeds": jax.ShapeDtypeStruct(
+                    (B, n_pfx, cfg.d_model), jnp.bfloat16),
+                "tokens": jax.ShapeDtypeStruct((B, S - n_pfx), i32),
+            }
+            if shape.kind == "train":
+                d["labels"] = jax.ShapeDtypeStruct((B, S - n_pfx), i32)
+            return d
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+
+    if shape.kind == "train":
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    if shape.kind == "prefill":
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+
+
+def cache_struct(cfg: ArchConfig, shape: ShapeConfig,
+                 dtype=jnp.bfloat16) -> Any:
+    """Abstract decode cache for decode cells (cache length = shape.seq_len)."""
+    assert shape.kind == "decode"
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.is_encdec:
+        from repro.models.encdec import EncDecModel
+        m = EncDecModel(cfg, compute_dtype=dtype)
+        # memory length: frontend tokens (encoder output len); self cache S
+        mem_len = 4096
+        return jax.eval_shape(lambda: m.init_cache(B, S, mem_len))
+    return jax.eval_shape(lambda: init_cache(cfg, B, S, dtype))
+
+
+def concrete_batch(cfg: ArchConfig, shape_kind: str, batch: int, seq: int,
+                   rng: Optional[jax.Array] = None) -> Dict[str, Any]:
+    """Small concrete batch for smoke tests (CPU)."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    kt, kf = jax.random.split(rng)
+    V = cfg.vocab_size
+    if cfg.is_encdec:
+        d = {"frames": jax.random.normal(kf, (batch, seq, cfg.d_model),
+                                         jnp.float32).astype(jnp.bfloat16),
+             "tokens": jax.random.randint(kt, (batch, seq), 0, V, jnp.int32)}
+        if shape_kind == "train":
+            d["labels"] = d["tokens"]
+        return d
+    d = {}
+    s_tok = seq
+    if cfg.frontend is not None:
+        n_pfx = cfg.frontend.num_prefix_tokens
+        d["prefix_embeds"] = jax.random.normal(
+            kf, (batch, n_pfx, cfg.d_model), jnp.float32).astype(jnp.bfloat16)
+        s_tok = max(1, seq - n_pfx)
+    d["tokens"] = jax.random.randint(kt, (batch, s_tok), 0, V, jnp.int32)
+    if shape_kind == "train":
+        d["labels"] = d["tokens"]
+    return d

@@ -1,0 +1,38 @@
+"""Feed-forward variants: SwiGLU, GELU MLP, GeGLU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import PTpl
+
+
+def ffn_template(cfg, d_ff: int = 0) -> dict:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    if cfg.ffn_kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": PTpl((D, F), ("embed", "mlp")),
+            "w_up":   PTpl((D, F), ("embed", "mlp")),
+            "w_down": PTpl((F, D), ("mlp", "embed")),
+        }
+    return {   # gelu_mlp
+        "w_up":   PTpl((D, F), ("embed", "mlp")),
+        "b_up":   PTpl((F,), ("mlp",), "zeros"),
+        "w_down": PTpl((F, D), ("mlp", "embed")),
+        "b_down": PTpl((D,), ("embed",), "zeros"),
+    }
+
+
+def apply_ffn(cfg, p: dict, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    if cfg.ffn_kind == "swiglu":
+        g = jax.nn.silu(x @ p["w_gate"].astype(dt))
+        u = x @ p["w_up"].astype(dt)
+        return (g * u) @ p["w_down"].astype(dt)
+    if cfg.ffn_kind == "geglu":
+        g = jax.nn.gelu(x @ p["w_gate"].astype(dt))
+        u = x @ p["w_up"].astype(dt)
+        return (g * u) @ p["w_down"].astype(dt)
+    h = jax.nn.gelu(x @ p["w_up"].astype(dt) + p["b_up"].astype(dt))
+    return h @ p["w_down"].astype(dt) + p["b_down"].astype(dt)

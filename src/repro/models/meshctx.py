@@ -1,0 +1,53 @@
+"""Ambient mesh context so model code can apply sharding constraints without
+threading a Mesh through every call. CPU tests run mesh-free (constraints
+become no-ops)."""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CURRENT: list = []
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    _CURRENT.append(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _CURRENT.pop()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CURRENT[-1] if _CURRENT else None
+
+
+def constrain(x: jax.Array, spec: P) -> jax.Array:
+    """with_sharding_constraint if a mesh is active, else identity.
+
+    Drops spec entries for mesh axes that don't exist (e.g. "pod" on the
+    single-pod mesh) and for dims that don't divide evenly.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    fixed = []
+    for dim, entry in zip(x.shape, spec + (None,) * (x.ndim - len(spec))):
+        if entry is None:
+            fixed.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        axes = tuple(a for a in axes if a in mesh.shape)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if not axes or dim % size != 0:
+            fixed.append(None)
+        else:
+            fixed.append(axes if len(axes) > 1 else axes[0])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))

@@ -1,0 +1,114 @@
+"""Capacity-factor token-choice MoE (GShard/Switch style), scatter-based.
+
+Instead of the classic (tokens × experts × capacity) dispatch one-hot einsum —
+which is O(T·E·C) memory and unusable at 32k sequence — tokens are scattered
+into a per-expert buffer of shape (E, C, D) and gathered back. Under GSPMD the
+buffer is sharded over the "model" axis (expert parallelism) so the scatter
+lowers to all-to-all style collectives.
+
+Top-k routing with renormalized probabilities, capacity dropping, and a
+Switch-style load-balancing auxiliary loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import PTpl
+from repro.models.meshctx import constrain
+
+
+def moe_template(cfg) -> dict:
+    m = cfg.moe
+    D, F, E = cfg.d_model, m.d_ff_expert, m.num_experts
+    assert cfg.ffn_kind in ("swiglu", "geglu"), "MoE experts use gated FFNs"
+    t = {
+        "router": PTpl((D, E), ("embed", "experts"), "normal"),
+        "w_gate": PTpl((E, D, F), ("experts", "embed", "mlp")),
+        "w_up":   PTpl((E, D, F), ("experts", "embed", "mlp")),
+        "w_down": PTpl((E, F, D), ("experts", "mlp", "embed")),
+    }
+    if m.shared_expert:
+        t["shared"] = {
+            "w_gate": PTpl((D, F), ("embed", "mlp")),
+            "w_up":   PTpl((D, F), ("embed", "mlp")),
+            "w_down": PTpl((F, D), ("mlp", "embed")),
+        }
+    return t
+
+
+def capacity(num_tokens: int, cfg) -> int:
+    m = cfg.moe
+    c = math.ceil(num_tokens * m.top_k / m.num_experts * m.capacity_factor)
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def _act(cfg):
+    return jax.nn.silu if cfg.ffn_kind == "swiglu" else jax.nn.gelu
+
+
+def apply_moe(cfg, p: dict, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out (B,S,D), aux_loss scalar)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    E, k = m.num_experts, m.top_k
+    T = B * S
+    C = capacity(T, cfg)
+    xf = x.reshape(T, D)
+
+    # ---- routing (fp32) ----------------------------------------------------
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    top_p, top_e = jax.lax.top_k(probs, k)                       # (T, k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance loss on the top-1 assignment.
+    f = jnp.mean(jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), axis=0)
+    pm = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f * pm) * m.aux_loss_weight
+
+    # ---- dispatch: rank each (token, choice) copy within its expert --------
+    # Sort-based ranking (Perf iteration E1): the textbook one-hot cumsum is
+    # O(N*E) and lowers to a quadratic-cost reduce-window; a stable argsort by
+    # expert id + per-expert start offsets is O(N log N) and gives identical
+    # ranks (stable sort preserves token order within an expert).
+    eid = top_e.reshape(T * k)                                   # (N,)
+    gate = top_p.reshape(T * k).astype(x.dtype)
+    src = jnp.repeat(jnp.arange(T), k)                           # (N,)
+    N = T * k
+    order = jnp.argsort(eid, stable=True)                        # (N,)
+    hist = jnp.zeros((E,), jnp.int32).at[eid].add(1)
+    starts = jnp.cumsum(hist) - hist                             # (E,) tiny
+    rank_sorted = jnp.arange(N, dtype=jnp.int32) - starts[eid[order]]
+    pos = jnp.zeros((N,), jnp.int32).at[order].set(rank_sorted)
+    keep = pos < C
+    slot = jnp.where(keep, eid * C + pos, E * C)                 # drop -> spill row
+
+    buf = jnp.zeros((E * C + 1, D), x.dtype).at[slot].add(xf[src])
+    buf = buf[: E * C].reshape(E, C, D)
+    buf = constrain(buf, P("model", None, None))                 # expert parallel
+
+    # ---- expert computation (batched over experts) --------------------------
+    act = _act(cfg)
+    g = act(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(x.dtype)))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(x.dtype))
+    eo = jnp.einsum("ecf,efd->ecd", g * u, p["w_down"].astype(x.dtype))
+    eo = constrain(eo, P("model", None, None))
+
+    # ---- combine: gather expert outputs back to tokens ----------------------
+    eo_flat = jnp.concatenate(
+        [eo.reshape(E * C, D), jnp.zeros((1, D), x.dtype)], axis=0)
+    y = eo_flat[slot] * gate[:, None]                            # gate at combine
+    out = jnp.zeros((T, D), x.dtype).at[src].add(y)
+
+    if m.shared_expert:
+        sp = p["shared"]
+        sg = act(xf @ sp["w_gate"].astype(x.dtype))
+        su = xf @ sp["w_up"].astype(x.dtype)
+        out = out + (sg * su) @ sp["w_down"].astype(x.dtype)
+
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,115 @@
+"""RecurrentGemma / Griffin recurrent block: causal conv + RG-LRU gated linear
+recurrence. Full-sequence path uses an associative scan (log-depth on TPU);
+decode is a single-step recurrence.
+
+RG-LRU (Griffin, arXiv:2402.19427):
+    r_t = sigmoid(W_a x_t),  i_t = sigmoid(W_x x_t)
+    log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import PTpl
+
+_C = 8.0
+
+
+def rglru_template(cfg) -> dict:
+    g = cfg.rglru
+    D = cfg.d_model
+    w = g.lru_width(D)
+    cw = g.conv_width
+    return {
+        "w_branch": PTpl((D, w), ("embed", "lru")),       # gelu branch
+        "w_rec":    PTpl((D, w), ("embed", "lru")),       # conv+LRU branch
+        "conv":     PTpl((cw, w), ("conv", "lru"), "normal", 1.0),
+        "w_a":      PTpl((w, w), ("lru", "lru")),         # recurrence gate
+        "w_i":      PTpl((w, w), ("lru", "lru")),         # input gate
+        "lam":      PTpl((w,), ("lru",), "ones"),         # Lambda
+        "wo":       PTpl((w, D), ("lru", "embed")),
+    }
+
+
+def _conv_causal(x: jax.Array, w: jax.Array) -> jax.Array:
+    cw = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(cw):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i]
+    return out
+
+
+def rglru_scan(x: jax.Array, a_log: jax.Array,
+               init_h: jax.Array = None) -> Tuple[jax.Array, jax.Array]:
+    """Linear recurrence h_t = a_t h_{t-1} + b_t via associative scan.
+
+    x: gated inputs b_t (B,S,w) fp32; a_log: log a_t (B,S,w) fp32 (<= 0).
+    Returns (h (B,S,w), final h (B,w)).
+    """
+    a = jnp.exp(a_log)
+    b = x
+    if init_h is not None:
+        # fold the carried state into the first step
+        b = b.at[:, 0, :].add(a[:, 0, :] * init_h)
+
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(op, (a, b), axis=1)
+    return h, h[:, -1, :]
+
+
+def apply_rglru(cfg, p: dict, x: jax.Array) -> jax.Array:
+    """Full-sequence Griffin recurrent block. x: (B,S,D)."""
+    dt_ = x.dtype
+    f32 = jnp.float32
+    br = jax.nn.gelu(x @ p["w_branch"].astype(dt_))
+    u = _conv_causal(x @ p["w_rec"].astype(dt_), p["conv"].astype(dt_))
+
+    uf = u.astype(f32)
+    r = jax.nn.sigmoid(uf @ p["w_a"].astype(f32))
+    i = jax.nn.sigmoid(uf @ p["w_i"].astype(f32))
+    a_log = -_C * jax.nn.softplus(p["lam"].astype(f32)) * r
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * a_log), 1e-9)) * (i * uf)
+    h, _ = rglru_scan(gated, a_log)
+    out = (h.astype(dt_) * br) @ p["wo"].astype(dt_)
+    return out
+
+
+def init_rglru_cache(cfg, batch: int, dtype=jnp.float32) -> dict:
+    g = cfg.rglru
+    w = g.lru_width(cfg.d_model)
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, g.conv_width - 1, w), dtype),
+    }
+
+
+def apply_rglru_decode(cfg, p: dict, x: jax.Array, cache: dict):
+    """Single-token step. x: (B,1,D)."""
+    dt_ = x.dtype
+    f32 = jnp.float32
+    x1 = x[:, 0, :]
+    br = jax.nn.gelu(x1 @ p["w_branch"].astype(dt_))
+
+    u_new = x1 @ p["w_rec"].astype(dt_)
+    window = jnp.concatenate([cache["conv"], u_new[:, None, :]], axis=1)
+    u = jnp.einsum("bwc,wc->bc", window, p["conv"].astype(dt_))
+    new_conv = window[:, 1:, :]
+
+    uf = u.astype(f32)
+    r = jax.nn.sigmoid(uf @ p["w_a"].astype(f32))
+    i = jax.nn.sigmoid(uf @ p["w_i"].astype(f32))
+    a_log = -_C * jax.nn.softplus(p["lam"].astype(f32)) * r
+    a = jnp.exp(a_log)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * a_log), 1e-9)) * (i * uf)
+    h = a * cache["h"] + b
+    out = (h.astype(dt_) * br) @ p["wo"].astype(dt_)
+    return out[:, None, :], {"h": h, "conv": new_conv}

@@ -1,0 +1,112 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+Every param template leaf carries logical axis names (PTpl.axes). A `Rules`
+object maps logical names to an ordered list of mesh-axis candidates; a
+candidate is used only when the dim size divides evenly by the mesh axis size
+and the mesh axis is not already taken by another dim of the same tensor.
+This is what lets e.g. qwen2's 28 query heads compile under 16-way TP — the
+packed projection dim (heads*head_dim = 3584) shards even though 28 doesn't.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import PTpl
+
+
+# Candidate mesh axes per logical axis, in preference order. Entries may be
+# tuples (meaning shard over the product of those mesh axes).
+TRAIN_RULES = {
+    "batch":      [("pod", "data"), ("data",)],
+    "seq":        [],                     # sequence kept unsharded in train
+    "embed":      [("data",)],            # FSDP: weights sharded over data
+    "vocab":      [("model",)],
+    "heads":      [("model",)],
+    "kv_heads":   [("model",)],
+    "head_dim":   [],
+    "qkv_out":    [("model",)],           # packed q/k/v projection output
+    "mlp":        [("model",)],
+    "experts":    [("model",)],
+    "layers":     [],
+    "seq_table":  [],
+    "state":      [],
+    "conv":       [],
+    "lru":        [("model",)],
+    "ssm_inner":  [("model",)],
+}
+
+SERVE_RULES = {
+    **TRAIN_RULES,
+    "batch":      [("data",), ("pod", "data")],
+    "embed":      [],                     # no FSDP at serving time
+    # decode KV cache: prefer kv-head sharding, fall back to head_dim
+    "kv_heads":   [("model",)],
+    "head_dim":   [],
+    "kv_seq":     [("data",)],            # context parallelism for long decode
+}
+
+
+@dataclass(frozen=True)
+class Rules:
+    table: dict
+    # head_dim may be sharded as a fallback when kv_heads doesn't divide
+    kv_head_dim_fallback: bool = True
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= mesh.shape[a]
+    return n
+
+
+def spec_for(tpl_axes: Sequence[str], shape: Sequence[int], mesh: Mesh,
+             rules: dict) -> P:
+    used: set = set()
+    out = []
+    for name, dim in zip(tpl_axes, shape):
+        choice = None
+        for cand in rules.get(name, []):
+            cand_t = cand if isinstance(cand, tuple) else (cand,)
+            if any(c in used for c in cand_t):
+                continue
+            if all(c in mesh.shape for c in cand_t) and dim % axis_size(mesh, cand_t) == 0:
+                choice = cand_t if len(cand_t) > 1 else cand_t[0]
+                used.update(cand_t)
+                break
+        out.append(choice)
+    return P(*out)
+
+
+def template_shardings(template, mesh: Mesh, rules: dict):
+    """NamedSharding pytree matching a param template pytree."""
+    def f(tpl: PTpl):
+        return NamedSharding(mesh, spec_for(tpl.axes, tpl.shape, mesh, rules))
+    return jax.tree.map(f, template, is_leaf=lambda x: isinstance(x, PTpl))
+
+
+def template_pspecs(template, mesh: Mesh, rules: dict):
+    def f(tpl: PTpl):
+        return spec_for(tpl.axes, tpl.shape, mesh, rules)
+    return jax.tree.map(f, template, is_leaf=lambda x: isinstance(x, PTpl))
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints
+# ---------------------------------------------------------------------------
+
+def batch_spec(mesh: Mesh, global_batch: int, kind: str) -> P:
+    """Sharding spec for the leading batch dim of activations/inputs."""
+    rules = TRAIN_RULES if kind == "train" else SERVE_RULES
+    for cand in rules["batch"]:
+        if all(c in mesh.shape for c in cand) and global_batch % axis_size(mesh, cand) == 0:
+            return P(cand if len(cand) > 1 else cand[0])
+    return P(None)
+
+
+def constrain(x: jax.Array, mesh: Mesh, spec: P) -> jax.Array:
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

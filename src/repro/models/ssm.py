@@ -1,0 +1,208 @@
+"""Mamba-2 SSD (state-space duality) block — chunked matmul-form scan for
+train/prefill (MXU-friendly), recurrent single-step for decode.
+
+Chunked SSD (Dao & Gu 2024): within a chunk the output is a masked
+attention-like quadratic term; across chunks a small recurrence carries the
+(H, P, N) state. Both forms are exact — tests check chunked == recurrent.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import PTpl
+
+
+def ssm_template(cfg) -> dict:
+    s = cfg.ssm
+    D = cfg.d_model
+    di = s.d_inner(D)
+    N = s.state_dim
+    H = s.num_heads(D)
+    cw = s.conv_width
+    return {
+        "wz":  PTpl((D, di), ("embed", "ssm_inner")),
+        "wx":  PTpl((D, di), ("embed", "ssm_inner")),
+        "wB":  PTpl((D, N), ("embed", "state")),
+        "wC":  PTpl((D, N), ("embed", "state")),
+        "wdt": PTpl((D, H), ("embed", "heads")),
+        "dt_bias": PTpl((H,), ("heads",), "zeros"),
+        "A_log": PTpl((H,), ("heads",), "ones"),
+        "D": PTpl((H,), ("heads",), "ones"),
+        "conv_x": PTpl((cw, di), ("conv", "ssm_inner"), "normal", 1.0),
+        "conv_B": PTpl((cw, N), ("conv", "state"), "normal", 1.0),
+        "conv_C": PTpl((cw, N), ("conv", "state"), "normal", 1.0),
+        "norm": PTpl((di,), ("ssm_inner",), "zeros"),
+        "wo":  PTpl((di, D), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv: x (B,S,C), w (cw,C)."""
+    cw = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(cw):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i]
+    return jax.nn.silu(out)
+
+
+def _conv_step(x_new: jax.Array, buf: jax.Array, w: jax.Array):
+    """Single-token causal conv. x_new (B,C), buf (B,cw-1,C) past inputs."""
+    window = jnp.concatenate([buf, x_new[:, None, :]], axis=1)   # (B,cw,C)
+    out = jnp.einsum("bwc,wc->bc", window, w)
+    new_buf = window[:, 1:, :]
+    return jax.nn.silu(out), new_buf
+
+
+def _gated_out(p, y: jax.Array, z: jax.Array, dtype) -> jax.Array:
+    """y * silu(z) -> rmsnorm -> out_proj."""
+    g = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    g = g * jax.lax.rsqrt(var + 1e-6) * (1.0 + p["norm"].astype(jnp.float32))
+    return (g.astype(dtype)) @ p["wo"].astype(dtype)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, chunk: int,
+                init_state: jax.Array = None) -> Tuple[jax.Array, jax.Array]:
+    """Exact chunked SSD.
+
+    x:  (b, S, H, P) head inputs
+    dt: (b, S, H) positive step sizes
+    A:  (H,) negative decay rates
+    B, C: (b, S, N) input/output projections (single group)
+    Returns (y (b,S,H,P), final_state (b,H,P,N)).
+    """
+    b, S, H, Pd = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    f32 = jnp.float32
+
+    xq = x.reshape(b, nc, Q, H, Pd).astype(f32)
+    dtq = dt.reshape(b, nc, Q, H).astype(f32)
+    Bq = B.reshape(b, nc, Q, N).astype(f32)
+    Cq = C.reshape(b, nc, Q, N).astype(f32)
+
+    la = dtq * A[None, None, None, :]             # log decay per step (<= 0)
+    cum = jnp.cumsum(la, axis=2)                  # (b,nc,Q,H) from chunk start
+
+    # --- intra-chunk (quadratic, causal-masked) ------------------------------
+    # L[i,j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (b,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cq, Bq)           # (b,nc,Q,Q)
+    M = scores[..., None] * L * dtq[:, :, None, :, :]        # weight dt_j
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xq)
+
+    # --- chunk states ---------------------------------------------------------
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)          # (b,nc,Q,H)
+    ZB = Bq[:, :, :, None, :] * (dtq * decay_to_end)[..., None]  # (b,nc,Q,H,N)
+    S_c = jnp.einsum("bcqhn,bcqhp->bchpn", ZB, xq)           # (b,nc,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (b,nc,H)
+
+    # --- inter-chunk recurrence (small sequential scan over nc) ---------------
+    if init_state is None:
+        init_state = jnp.zeros((b, H, Pd, N), f32)
+
+    def body(s_prev, inp):
+        dec, s_c = inp                                       # (b,H), (b,H,P,N)
+        s_new = s_prev * dec[:, :, None, None] + s_c
+        return s_new, s_prev
+
+    dec_t = jnp.moveaxis(chunk_decay, 1, 0)                  # (nc,b,H)
+    sc_t = jnp.moveaxis(S_c, 1, 0)                           # (nc,b,H,P,N)
+    final_state, s_prevs = jax.lax.scan(body, init_state.astype(f32),
+                                        (dec_t, sc_t))
+    S_prev = jnp.moveaxis(s_prevs, 0, 1)                     # (b,nc,H,P,N)
+
+    # --- inter-chunk contribution ---------------------------------------------
+    Cdec = Cq[:, :, :, None, :] * jnp.exp(cum)[..., None]    # (b,nc,Q,H,N)
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp", Cdec, S_prev)
+
+    y = (y_intra + y_inter).reshape(b, S, H, Pd)
+    return y, final_state
+
+
+def ssd_step(state: jax.Array, x: jax.Array, dt: jax.Array, A: jax.Array,
+             B: jax.Array, C: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrence.
+
+    state (b,H,P,N); x (b,H,P); dt (b,H); B,C (b,N).
+    """
+    f32 = jnp.float32
+    a = jnp.exp(dt.astype(f32) * A[None, :])                 # (b,H)
+    upd = (dt.astype(f32)[:, :, None, None]
+           * x.astype(f32)[..., None] * B.astype(f32)[:, None, None, :])
+    new_state = state * a[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C.astype(f32))
+    return y, new_state
+
+
+def apply_ssm(cfg, p: dict, x: jax.Array) -> jax.Array:
+    """Full-sequence SSD block (train/prefill). x: (B,S,D)."""
+    s = cfg.ssm
+    b, S, D = x.shape
+    di = s.d_inner(D)
+    H = s.num_heads(D)
+    Pd = s.head_dim
+    dt_ = x.dtype
+
+    z = x @ p["wz"].astype(dt_)
+    xin = _causal_conv(x @ p["wx"].astype(dt_), p["conv_x"].astype(dt_))
+    Bt = _causal_conv(x @ p["wB"].astype(dt_), p["conv_B"].astype(dt_))
+    Ct = _causal_conv(x @ p["wC"].astype(dt_), p["conv_C"].astype(dt_))
+    dt = jax.nn.softplus((x @ p["wdt"].astype(dt_)).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    xh = xin.reshape(b, S, H, Pd)
+    y, _ = ssd_chunked(xh, dt, A, Bt, Ct, s.chunk_size)
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    return _gated_out(p, y.reshape(b, S, di), z, dt_)
+
+
+def init_ssm_cache(cfg, batch: int, dtype=jnp.float32) -> dict:
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    H = s.num_heads(cfg.d_model)
+    return {
+        "state": jnp.zeros((batch, H, s.head_dim, s.state_dim), jnp.float32),
+        "conv_x": jnp.zeros((batch, s.conv_width - 1, di), dtype),
+        "conv_B": jnp.zeros((batch, s.conv_width - 1, s.state_dim), dtype),
+        "conv_C": jnp.zeros((batch, s.conv_width - 1, s.state_dim), dtype),
+    }
+
+
+def apply_ssm_decode(cfg, p: dict, x: jax.Array, cache: dict):
+    """Single-token step. x: (B,1,D) -> (y (B,1,D), new_cache)."""
+    s = cfg.ssm
+    b, _, D = x.shape
+    di = s.d_inner(D)
+    H = s.num_heads(D)
+    Pd = s.head_dim
+    dt_ = x.dtype
+    x1 = x[:, 0, :]
+
+    z = x1 @ p["wz"].astype(dt_)
+    xin, cx = _conv_step(x1 @ p["wx"].astype(dt_), cache["conv_x"],
+                         p["conv_x"].astype(dt_))
+    Bt, cB = _conv_step(x1 @ p["wB"].astype(dt_), cache["conv_B"],
+                        p["conv_B"].astype(dt_))
+    Ct, cC = _conv_step(x1 @ p["wC"].astype(dt_), cache["conv_C"],
+                        p["conv_C"].astype(dt_))
+    dt = jax.nn.softplus((x1 @ p["wdt"].astype(dt_)).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    xh = xin.reshape(b, H, Pd)
+    y, new_state = ssd_step(cache["state"], xh, dt, A, Bt, Ct)
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, :, None]
+    out = _gated_out(p, y.reshape(b, di), z, dt_)
+    new_cache = {"state": new_state, "conv_x": cx, "conv_B": cB, "conv_C": cC}
+    return out[:, None, :], new_cache

@@ -1,0 +1,555 @@
+"""Decoder-only LM covering dense / GQA / MQA / MoE / SSM / hybrid / VLM
+families, with three entry points:
+
+    loss(params, batch)                    — training objective
+    prefill(params, batch, cache_len)      — full-sequence forward + cache fill
+    decode_step(params, cache, tokens)     — one token against the cache
+
+The layer stack is grouped by the config's block pattern and scanned with
+`lax.scan` over pattern repetitions (stacked params), keeping HLO size and
+compile time O(pattern) instead of O(depth) — essential for 62-/88-layer
+archs in the dry-run. A non-divisible tail (e.g. recurrentgemma 26 = 3×8 + 2)
+is applied unstacked.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (PTpl, abstract_params, apply_norm, apply_rope,
+                                 cross_entropy, embed_template, embed_tokens,
+                                 init_params, lm_logits, norm_template,
+                                 stack_tpl)
+from repro.models.meshctx import constrain
+
+
+# ---------------------------------------------------------------------------
+# Block templates
+# ---------------------------------------------------------------------------
+
+def block_template(cfg, kind: str) -> dict:
+    if kind in ("full", "local", "chunked"):
+        t = {"norm1": norm_template(cfg), "attn": attn.attn_template(cfg),
+             "norm2": norm_template(cfg)}
+        t["ffn"] = (moe_mod.moe_template(cfg) if cfg.moe is not None
+                    else ffn_mod.ffn_template(cfg))
+        return t
+    if kind == "rglru":
+        return {"norm1": norm_template(cfg), "rec": rglru_mod.rglru_template(cfg),
+                "norm2": norm_template(cfg), "ffn": ffn_mod.ffn_template(cfg)}
+    if kind == "ssm":
+        return {"norm1": norm_template(cfg), "ssm": ssm_mod.ssm_template(cfg)}
+    raise ValueError(kind)
+
+
+def lm_template(cfg) -> dict:
+    pat = cfg.block_pattern
+    n_rep = cfg.num_layers // len(pat)
+    tail_kinds = cfg.layer_kinds()[n_rep * len(pat):]
+    t: Dict[str, Any] = {"embed": embed_template(cfg)}
+    t["blocks"] = [stack_tpl(block_template(cfg, k), n_rep) for k in pat]
+    t["tail"] = [block_template(cfg, k) for k in tail_kinds]
+    t["final_norm"] = norm_template(cfg)
+    if cfg.frontend is not None:
+        # stub modality projector: precomputed frontend embeddings -> d_model
+        t["projector"] = {
+            "w": PTpl((cfg.d_model, cfg.d_model), ("embed", "mlp")),
+            "b": PTpl((cfg.d_model,), ("embed",), "zeros"),
+        }
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Block application — full-sequence mode
+# ---------------------------------------------------------------------------
+
+def _attend_full_seq(cfg, kind: str, p: dict, x: jax.Array,
+                     positions: jax.Array, kv_block: int,
+                     unroll: bool = False):
+    """Self-attention over a full sequence; returns (out, (k, v)).
+
+    Sequence-parallel attention (Perf iteration A1/B1): query rows shard over
+    the "model" axis while the (GQA-small) K/V replicate across it — all
+    score/softmax/AV math is then local to each chip, eliminating the
+    per-kv-block all-reduce flood that plain head-misaligned TP produces
+    (qwen2's 28 heads don't divide a 16-way axis; 4096-row sequences do).
+    This is the TP reading of the paper's GQA observation: shared K/V is
+    small enough to replicate.
+    """
+    q, k, v = attn.project_qkv(cfg, p, x, x)
+    if cfg.pos_emb == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if kind == "full":
+        bspec = ("pod", "data")
+        q = constrain(q, P(bspec, "model", None, None))
+        k = constrain(k, P(bspec, None, None, None))
+        v = constrain(v, P(bspec, None, None, None))
+        o = attn.blocked_attention(q, k, v, causal=True, kv_block=kv_block,
+                                   unroll=unroll)
+        o = constrain(o, P(bspec, "model", None, None))
+    elif kind == "local":
+        o = attn.local_attention(q, k, v, cfg.local_window)
+    else:
+        o = attn.chunked_attention(q, k, v, cfg.local_window)
+    o = o.reshape(*x.shape[:2], cfg.q_dim)
+    return o @ p["wo"].astype(x.dtype), (k, v)
+
+
+def apply_block(cfg, kind: str, p: dict, x: jax.Array, positions: jax.Array,
+                kv_block: int, unroll: bool = False):
+    """Returns (x_out, aux_loss, kv_or_None)."""
+    aux = jnp.zeros((), jnp.float32)
+    kv = None
+    if kind in ("full", "local", "chunked"):
+        h, kv = _attend_full_seq(cfg, kind, p["attn"],
+                                 apply_norm(cfg, p["norm1"], x), positions,
+                                 kv_block, unroll)
+        x = x + h
+        y = apply_norm(cfg, p["norm2"], x)
+        if cfg.moe is not None:
+            f, aux = moe_mod.apply_moe(cfg, p["ffn"], y)
+        else:
+            f = ffn_mod.apply_ffn(cfg, p["ffn"], y)
+        x = x + f
+    elif kind == "rglru":
+        x = x + rglru_mod.apply_rglru(cfg, p["rec"],
+                                      apply_norm(cfg, p["norm1"], x))
+        x = x + ffn_mod.apply_ffn(cfg, p["ffn"],
+                                  apply_norm(cfg, p["norm2"], x))
+    elif kind == "ssm":
+        x = x + ssm_mod.apply_ssm(cfg, p["ssm"],
+                                  apply_norm(cfg, p["norm1"], x))
+    else:
+        raise ValueError(kind)
+    # Perf iteration B5: for pure full-attention stacks, keep the residual
+    # stream sequence-sharded over "model" (Megatron-SP style) — norms, FFN
+    # rows and attention all operate on local sequence shards, so per-layer
+    # collectives shrink to (B, S/tp, D)-sized partial reductions.
+    if cfg.block_pattern == ("full",):
+        x = constrain(x, P(("pod", "data"), "model", None))
+    else:
+        x = constrain(x, P(("pod", "data"), None, None))
+    return x, aux, kv
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def _slot_cache_len(cfg, kind: str, cache_len: int) -> int:
+    if kind in ("local", "chunked"):
+        return min(cfg.local_window, cache_len)
+    return cache_len
+
+
+def init_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16) -> dict:
+    """Decode cache pytree: one entry per pattern slot (stacked n_rep) plus
+    unstacked tail entries and a scalar position."""
+    pat = cfg.block_pattern
+    n_rep = cfg.num_layers // len(pat)
+    tail_kinds = cfg.layer_kinds()[n_rep * len(pat):]
+
+    def slot(kind, stack: Optional[int]):
+        def maybe_stack(a):
+            return a if stack is None else jnp.broadcast_to(a, (stack,) + a.shape)
+        if kind in ("full", "local", "chunked"):
+            T = _slot_cache_len(cfg, kind, cache_len)
+            z = jnp.zeros((batch, T, cfg.num_kv_heads, cfg.head_dim), dtype)
+            return {"k": maybe_stack(z), "v": maybe_stack(z)}
+        if kind == "rglru":
+            c = rglru_mod.init_rglru_cache(cfg, batch, dtype)
+        else:
+            c = ssm_mod.init_ssm_cache(cfg, batch, dtype)
+        return jax.tree.map(maybe_stack, c)
+
+    return {
+        "slots": [slot(k, n_rep) for k in pat],
+        "tail": [slot(k, None) for k in tail_kinds],
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_specs(cfg, batch: int, cache_len: int, mesh,
+                dtype=jnp.bfloat16):
+    """PartitionSpec pytree for the decode cache.
+
+    Policy: shard the batch dim over "data" (and "pod" when present and
+    divisible); for KV tensors additionally shard kv_heads over "model" when
+    divisible, else head_dim, else the sequence dim (context parallelism for
+    long_500k's batch=1). Recurrent states shard their width over "model".
+    """
+    shapes = jax.eval_shape(lambda: init_cache(cfg, batch, cache_len, dtype))
+
+    def ax_ok(name, d):
+        return name in mesh.shape and d % mesh.shape[name] == 0
+
+    def spec_of(leaf):
+        shp = leaf.shape
+        spec = [None] * len(shp)
+        # find the batch dim: first dim equal to `batch` (after optional stack)
+        dims = list(range(len(shp)))
+        bi = None
+        for i in dims:
+            if shp[i] == batch and (i == 0 or shp[0] != batch):
+                bi = i
+                break
+        if shp and shp[0] == batch:
+            bi = 0
+        if bi is not None:
+            if ax_ok("data", shp[bi]):
+                spec[bi] = "data"
+        if len(shp) >= 2 and leaf.dtype != jnp.int32:
+            # KV caches: (..., B, T, K, h). Prefer kv-heads over "model"; when
+            # they don't divide (GQA with few kv heads), shard the SEQUENCE
+            # dim instead — decode attention then computes partial softmax
+            # sums locally and all-reduces only (B,K,G)-sized statistics,
+            # instead of all-gathering the whole cache (Perf iteration C1).
+            if len(shp) >= 4 and shp[-2] == cfg.num_kv_heads \
+                    and shp[-1] == cfg.head_dim:
+                if ax_ok("model", shp[-2]):
+                    spec[-2] = "model"
+                elif ax_ok("model", shp[-3]):
+                    spec[-3] = "model"     # sequence (context parallel)
+                elif ax_ok("model", shp[-1]):
+                    spec[-1] = "model"
+                elif spec[bi] != "data" and ax_ok("data", shp[-3]):
+                    spec[-3] = "data"      # shard seq when batch can't shard
+            else:
+                # recurrent states: shard trailing width over model
+                if ax_ok("model", shp[-1]):
+                    spec[-1] = "model"
+        return P(*spec)
+
+    return jax.tree.map(spec_of, shapes)
+
+
+# ---------------------------------------------------------------------------
+# Block application — decode mode
+# ---------------------------------------------------------------------------
+
+def apply_block_decode(cfg, kind: str, p: dict, x: jax.Array, cache: dict,
+                       pos: jax.Array):
+    """x: (B,1,D). Returns (x_out, new_cache)."""
+    if kind in ("full", "local", "chunked"):
+        y = apply_norm(cfg, p["norm1"], x)
+        q, k, v = attn.project_qkv(cfg, p["attn"], y, y)
+        if cfg.pos_emb == "rope":
+            posv = pos[None] if pos.ndim == 0 else pos
+            q = apply_rope(q, jnp.broadcast_to(posv, (x.shape[0], 1)),
+                           cfg.rope_theta)
+            k = apply_rope(k, jnp.broadcast_to(posv, (x.shape[0], 1)),
+                           cfg.rope_theta)
+        T = cache["k"].shape[1]
+        if kind == "full":
+            widx = pos
+        else:
+            widx = pos % jnp.int32(T)
+        ck, cv = attn.cache_write(cache["k"], cache["v"], k, v, widx)
+        valid = attn.decode_valid_mask(kind, T, pos, cfg.local_window)
+        o = attn.decode_attention(q, ck, cv, valid)
+        o = o.reshape(x.shape[0], 1, cfg.q_dim) @ p["attn"]["wo"].astype(x.dtype)
+        x = x + o
+        y2 = apply_norm(cfg, p["norm2"], x)
+        if cfg.moe is not None:
+            f, _ = moe_mod.apply_moe(cfg, p["ffn"], y2)
+        else:
+            f = ffn_mod.apply_ffn(cfg, p["ffn"], y2)
+        x = x + f
+        return x, {"k": ck, "v": cv}
+    if kind == "rglru":
+        h, new_c = rglru_mod.apply_rglru_decode(
+            cfg, p["rec"], apply_norm(cfg, p["norm1"], x), cache)
+        x = x + h
+        x = x + ffn_mod.apply_ffn(cfg, p["ffn"], apply_norm(cfg, p["norm2"], x))
+        return x, new_c
+    if kind == "ssm":
+        h, new_c = ssm_mod.apply_ssm_decode(
+            cfg, p["ssm"], apply_norm(cfg, p["norm1"], x), cache)
+        return x + h, new_c
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+@dataclass
+class DecoderLM:
+    cfg: Any
+    compute_dtype: Any = jnp.bfloat16
+    remat: str = "full"            # none | full | dots
+    kv_block: int = 1024
+    # unroll lax.scan loops (layer stack + attention kv blocks). The dry-run
+    # sets this so compiled.cost_analysis() counts every iteration's
+    # FLOPs/bytes/collectives — HLO cost analysis visits loop bodies once.
+    unroll: bool = False
+
+    # ------------------------------------------------------------- params
+    def template(self) -> dict:
+        return lm_template(self.cfg)
+
+    def init(self, rng: jax.Array) -> dict:
+        return init_params(self.template(), rng)
+
+    def abstract(self, dtype_override: Optional[str] = None):
+        return abstract_params(self.template(), dtype_override)
+
+    # ------------------------------------------------------------ helpers
+    def _maybe_remat(self, fn):
+        if self.remat == "none":
+            return fn
+        if self.remat == "dots":
+            pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+            return jax.checkpoint(fn, policy=pol)
+        return jax.checkpoint(fn)
+
+    def _stack_forward(self, params: dict, x: jax.Array,
+                       positions: jax.Array):
+        """Scan over pattern groups + unstacked tail. Returns (x, aux)."""
+        cfg = self.cfg
+        pat = cfg.block_pattern
+        n_rep = cfg.num_layers // len(pat)
+        kvb = self.kv_block
+
+        def group(x, slot_params):
+            aux = jnp.zeros((), jnp.float32)
+            for i, kind in enumerate(pat):
+                x, a, _ = apply_block(cfg, kind, slot_params[i], x, positions,
+                                      kvb, self.unroll)
+                aux = aux + a
+            return x, aux
+
+        group = self._maybe_remat(group)
+
+        def body(carry, slot_params):
+            x, aux = carry
+            x, a = group(x, slot_params)
+            return (x, aux + a), None
+
+        if n_rep > 0:
+            (x, aux), _ = jax.lax.scan(
+                body, (x, jnp.zeros((), jnp.float32)), tuple(params["blocks"]),
+                unroll=n_rep if self.unroll else 1)
+        else:
+            aux = jnp.zeros((), jnp.float32)
+        tail_kinds = cfg.layer_kinds()[n_rep * len(pat):]
+        for tp, kind in zip(params["tail"], tail_kinds):
+            x, a, _ = apply_block(cfg, kind, tp, x, positions, kvb,
+                                  self.unroll)
+            aux = aux + a
+        return x, aux
+
+    def _embed_inputs(self, params: dict, batch: dict) -> Tuple[jax.Array, jax.Array]:
+        """tokens (+ optional prefix embeds) -> (x (B,S,D), positions (B,S))."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S_tok = tokens.shape
+        pos_tok = jnp.broadcast_to(jnp.arange(S_tok), (B, S_tok))
+        n_pfx = 0
+        if cfg.frontend is not None and "prefix_embeds" in batch:
+            n_pfx = batch["prefix_embeds"].shape[1]
+            pos_tok = pos_tok + n_pfx
+        x = embed_tokens(cfg, params["embed"], tokens, pos_tok,
+                         self.compute_dtype)
+        if n_pfx:
+            pr = batch["prefix_embeds"].astype(self.compute_dtype)
+            pr = pr @ params["projector"]["w"].astype(self.compute_dtype) \
+                + params["projector"]["b"].astype(self.compute_dtype)
+            x = jnp.concatenate([pr, x], axis=1)
+            positions = jnp.concatenate(
+                [jnp.broadcast_to(jnp.arange(n_pfx), (B, n_pfx)), pos_tok],
+                axis=1)
+        else:
+            positions = pos_tok
+        return x, positions
+
+    # -------------------------------------------------------------- loss
+    def loss(self, params: dict, batch: dict) -> jax.Array:
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+        x = constrain(x, P(("pod", "data"), None, None))
+        x, aux = self._stack_forward(params, x, positions[0])
+        x = apply_norm(cfg, params["final_norm"], x)
+        n_pfx = x.shape[1] - batch["tokens"].shape[1]
+        if n_pfx:
+            x = x[:, n_pfx:, :]
+        logits = lm_logits(cfg, params["embed"], x[:, :-1, :])
+        labels = batch.get("labels", batch["tokens"])[:, 1:]
+        return cross_entropy(logits, labels) + aux
+
+    # ------------------------------------------------------------ prefill
+    def prefill(self, params: dict, batch: dict, cache_len: int):
+        """Returns (last-position logits, filled cache)."""
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+        S = x.shape[1]
+        B = x.shape[0]
+        pat = cfg.block_pattern
+        n_rep = cfg.num_layers // len(pat)
+        kvb = self.kv_block
+        cache = init_cache(cfg, B, cache_len, self.compute_dtype)
+
+        # full-sequence forward, capturing per-layer kv / states
+        def run_block(x, kind, p, slot_cache):
+            if kind in ("full", "local", "chunked"):
+                x, _, (k, v) = apply_block(cfg, kind, p, x, positions[0], kvb,
+                                           self.unroll)
+                T = slot_cache["k"].shape[1]
+                if kind == "full" or S <= T:
+                    k_w = k[:, :T]
+                    v_w = v[:, :T]
+                    ck = jax.lax.dynamic_update_slice_in_dim(
+                        slot_cache["k"], k_w.astype(slot_cache["k"].dtype), 0, 1)
+                    cv = jax.lax.dynamic_update_slice_in_dim(
+                        slot_cache["v"], v_w.astype(slot_cache["v"].dtype), 0, 1)
+                else:
+                    # ring: last T positions at slots (S-T+i) % T
+                    kw = k[:, -T:].astype(slot_cache["k"].dtype)
+                    vw = v[:, -T:].astype(slot_cache["v"].dtype)
+                    idx = (S - T + jnp.arange(T)) % T
+                    ck = slot_cache["k"].at[:, idx].set(kw)
+                    cv = slot_cache["v"].at[:, idx].set(vw)
+                return x, {"k": ck, "v": cv}
+            if kind == "rglru":
+                y = apply_norm(cfg, p["norm1"], x)
+                h_out, final = _rglru_prefill(cfg, p["rec"], y)
+                x = x + h_out
+                x = x + ffn_mod.apply_ffn(cfg, p["ffn"],
+                                          apply_norm(cfg, p["norm2"], x))
+                new_c = {"h": final["h"],
+                         "conv": final["conv"].astype(slot_cache["conv"].dtype)}
+                return x, new_c
+            # ssm
+            y = apply_norm(cfg, p["norm1"], x)
+            h_out, final = _ssm_prefill(cfg, p["ssm"], y)
+            x = x + h_out
+            new_c = {"state": final["state"],
+                     "conv_x": final["conv_x"].astype(slot_cache["conv_x"].dtype),
+                     "conv_B": final["conv_B"].astype(slot_cache["conv_B"].dtype),
+                     "conv_C": final["conv_C"].astype(slot_cache["conv_C"].dtype)}
+            return x, new_c
+
+        def body(x, xs):
+            slot_params, slot_caches = xs
+            new_caches = []
+            for i, kind in enumerate(pat):
+                x, nc = run_block(x, kind, slot_params[i], slot_caches[i])
+                new_caches.append(nc)
+            return x, tuple(new_caches)
+
+        if n_rep > 0:
+            x, new_slots = jax.lax.scan(
+                body, x, (tuple(params["blocks"]), tuple(cache["slots"])),
+                unroll=n_rep if self.unroll else 1)
+            cache["slots"] = list(new_slots)
+        tail_kinds = cfg.layer_kinds()[n_rep * len(pat):]
+        new_tail = []
+        for tp, kind, tc in zip(params["tail"], tail_kinds, cache["tail"]):
+            x, nc = run_block(x, kind, tp, tc)
+            new_tail.append(nc)
+        cache["tail"] = new_tail
+        cache["pos"] = jnp.asarray(S, jnp.int32)
+
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = lm_logits(cfg, params["embed"], x[:, -1:, :])
+        return logits, cache
+
+    # -------------------------------------------------------- decode step
+    def decode_step(self, params: dict, cache: dict, tokens: jax.Array):
+        """tokens: (B, 1) -> (logits (B,1,V), new cache)."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        B = tokens.shape[0]
+        x = embed_tokens(cfg, params["embed"], tokens,
+                         jnp.broadcast_to(pos, (B, 1)), self.compute_dtype)
+        pat = cfg.block_pattern
+        n_rep = cfg.num_layers // len(pat)
+
+        def body(x, xs):
+            slot_params, slot_caches = xs
+            new_caches = []
+            for i, kind in enumerate(pat):
+                x, nc = apply_block_decode(cfg, kind, slot_params[i], x,
+                                           slot_caches[i], pos)
+                new_caches.append(nc)
+            return x, tuple(new_caches)
+
+        new_cache = dict(cache)
+        if n_rep > 0:
+            x, new_slots = jax.lax.scan(
+                body, x, (tuple(params["blocks"]), tuple(cache["slots"])),
+                unroll=n_rep if self.unroll else 1)
+            new_cache["slots"] = list(new_slots)
+        tail_kinds = cfg.layer_kinds()[n_rep * len(pat):]
+        new_tail = []
+        for tp, kind, tc in zip(params["tail"], tail_kinds, cache["tail"]):
+            x, nc = apply_block_decode(cfg, kind, tp, x, tc, pos)
+            new_tail.append(nc)
+        new_cache["tail"] = new_tail
+        new_cache["pos"] = pos + 1
+
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = lm_logits(cfg, params["embed"], x)
+        return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill variants of the recurrent blocks that also return final state
+# ---------------------------------------------------------------------------
+
+def _rglru_prefill(cfg, p, x):
+    dt_ = x.dtype
+    f32 = jnp.float32
+    br = jax.nn.gelu(x @ p["w_branch"].astype(dt_))
+    u_lin = x @ p["w_rec"].astype(dt_)
+    u = rglru_mod._conv_causal(u_lin, p["conv"].astype(dt_))
+    uf = u.astype(f32)
+    r = jax.nn.sigmoid(uf @ p["w_a"].astype(f32))
+    i = jax.nn.sigmoid(uf @ p["w_i"].astype(f32))
+    a_log = -rglru_mod._C * jax.nn.softplus(p["lam"].astype(f32)) * r
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * a_log), 1e-9)) * (i * uf)
+    h, h_last = rglru_mod.rglru_scan(gated, a_log)
+    out = (h.astype(dt_) * br) @ p["wo"].astype(dt_)
+    cw = cfg.rglru.conv_width
+    conv_buf = u_lin[:, -(cw - 1):, :]
+    return out, {"h": h_last, "conv": conv_buf}
+
+
+def _ssm_prefill(cfg, p, x):
+    s = cfg.ssm
+    b, S, D = x.shape
+    di = s.d_inner(D)
+    H = s.num_heads(D)
+    Pd = s.head_dim
+    dt_ = x.dtype
+    z = x @ p["wz"].astype(dt_)
+    x_lin = x @ p["wx"].astype(dt_)
+    B_lin = x @ p["wB"].astype(dt_)
+    C_lin = x @ p["wC"].astype(dt_)
+    xin = ssm_mod._causal_conv(x_lin, p["conv_x"].astype(dt_))
+    Bt = ssm_mod._causal_conv(B_lin, p["conv_B"].astype(dt_))
+    Ct = ssm_mod._causal_conv(C_lin, p["conv_C"].astype(dt_))
+    dt = jax.nn.softplus((x @ p["wdt"].astype(dt_)).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(b, S, H, Pd)
+    y, final_state = ssm_mod.ssd_chunked(xh, dt, A, Bt, Ct, s.chunk_size)
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    out = ssm_mod._gated_out(p, y.reshape(b, S, di), z, dt_)
+    cw = s.conv_width
+    final = {"state": final_state,
+             "conv_x": x_lin[:, -(cw - 1):, :],
+             "conv_B": B_lin[:, -(cw - 1):, :],
+             "conv_C": C_lin[:, -(cw - 1):, :]}
+    return out, final

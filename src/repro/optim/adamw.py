@@ -1,0 +1,67 @@
+"""AdamW with global-norm clipping — pure-pytree implementation (no optax
+dependency). Optimizer state is two pytrees (m, v) mirroring the params, so
+ZeRO-1 sharding is just a different NamedSharding on those trees.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array]      # schedule: step -> lr
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params: Any) -> AdamWState:
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                          jax.tree.map(jnp.copy, zeros))
+
+    def update(self, grads: Any, state: AdamWState,
+               params: Any) -> Tuple[Any, AdamWState, dict]:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+        step = state.step + 1
+        lr = self.lr(step)
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        new_m = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g,
+                             state.m, grads)
+        new_v = jax.tree.map(lambda v, g: self.b2 * v + (1 - self.b2) * g * g,
+                             state.v, grads)
+
+        def upd(p, m, v):
+            mh = m / b1c
+            vh = v / b2c
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            if self.weight_decay > 0:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, new_m, new_v)
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_params, AdamWState(step, new_m, new_v), metrics
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))

@@ -1,0 +1,57 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+Two modes used at scale:
+  * bf16   — cast gradients to bf16 before the DP all-reduce (2x bytes off the
+             wire; XLA keeps the reduction in fp32 accumulation).
+  * int8ef — symmetric per-leaf int8 with error feedback: the quantization
+             residual is carried into the next step, keeping the compressed
+             SGD direction unbiased over time.
+
+The compression hooks into train/step.py before gradients cross the DP axes —
+under GSPMD that is exactly the tensor that rides the all-reduce.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_bf16(grads: Any) -> Any:
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def init_error_state(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def compress_int8_ef(grads: Any, err: Any) -> Tuple[Any, Any]:
+    """Returns (dequantized grads to feed the optimizer, new error state).
+
+    q = round(clip((g+e)/s)) with per-leaf amax scaling; e' = (g+e) - q*s.
+    """
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        s = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(x / s), -127, 127)
+        deq = q * s
+        return deq, x - deq
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    deq = tdef.unflatten([o[0] for o in outs])
+    new_err = tdef.unflatten([o[1] for o in outs])
+    return deq, new_err
+
+
+def apply_compression(grads: Any, mode: str,
+                      err: Optional[Any] = None) -> Tuple[Any, Optional[Any]]:
+    if mode == "none":
+        return grads, err
+    if mode == "bf16":
+        return compress_bf16(grads), err
+    if mode == "int8ef":
+        assert err is not None
+        return compress_int8_ef(grads, err)
+    raise ValueError(mode)

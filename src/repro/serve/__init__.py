@@ -1,0 +1,2 @@
+from repro.serve.engine import BatchedServer, ServeConfig, ServeStats  # noqa: F401
+from repro.serve.scheduler import ContinuousBatcher, Request, kv_slot_budget  # noqa: F401

@@ -1,0 +1,82 @@
+"""Batched serving engine: prefill + decode loop with sampling.
+
+The decode path is exactly what the decode_32k / long_500k dry-run cells
+lower; on CPU the examples run it with reduced configs. KV caches are
+preallocated to `max_len` (static shapes — one compiled decode_step serves
+every position).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class ServeConfig:
+    max_len: int = 256
+    max_new_tokens: int = 32
+    temperature: float = 0.0          # 0 => greedy
+    seed: int = 0
+
+
+@dataclass
+class ServeStats:
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    tokens_generated: int = 0
+
+    @property
+    def decode_tokens_per_s(self) -> float:
+        return self.tokens_generated / self.decode_s if self.decode_s else 0.0
+
+
+class BatchedServer:
+    def __init__(self, model, params, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, cache_len=cfg.max_len))
+        self._decode = jax.jit(model.decode_step)
+
+    def _sample(self, logits: jax.Array, rng: jax.Array) -> jax.Array:
+        logits = logits[:, -1, :]
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return jax.random.categorical(
+            rng, logits / self.cfg.temperature, axis=-1)[:, None].astype(
+            jnp.int32)
+
+    def generate(self, batch: Dict[str, Any],
+                 max_new_tokens: Optional[int] = None) -> Dict[str, Any]:
+        """batch: model inputs with 'tokens' (B, S_prompt) [+ frames/prefix].
+
+        Returns {'tokens': (B, S_new), 'stats': ServeStats}."""
+        n_new = max_new_tokens or self.cfg.max_new_tokens
+        rng = jax.random.PRNGKey(self.cfg.seed)
+        stats = ServeStats()
+
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, batch)
+        logits.block_until_ready()
+        stats.prefill_s = time.perf_counter() - t0
+
+        rng, k = jax.random.split(rng)
+        tok = self._sample(logits, k)
+        out = [np.asarray(tok)]
+
+        t0 = time.perf_counter()
+        for _ in range(n_new - 1):
+            logits, cache = self._decode(self.params, cache, tok)
+            rng, k = jax.random.split(rng)
+            tok = self._sample(logits, k)
+            out.append(np.asarray(tok))
+        jax.block_until_ready(tok)
+        stats.decode_s = time.perf_counter() - t0
+        stats.tokens_generated = n_new * tok.shape[0]
+        return {"tokens": np.concatenate(out, axis=1), "stats": stats}

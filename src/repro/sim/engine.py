@@ -1,0 +1,399 @@
+"""Discrete-event, cycle-level simulator (TRAPTI Stage I).
+
+List-scheduling DES over the workload graph on the accelerator template:
+
+  * ops become ready when every producer has completed;
+  * each op runs on one systolic array (matmuls: tiled 128x128 MXU-style time
+    model; vector ops: per-array vector unit);
+  * every operand is staged in the array's attached on-chip memory — misses
+    are fetched from DRAM (or a peer memory in multi-level hierarchies) over
+    shared, serialized bandwidth servers (this is where memory-induced stalls
+    and port contention come from);
+  * the memory manager tracks each tensor as needed/obsolete, evicts LRU
+    (obsolete first, matching the paper's policy), and counts capacity-induced
+    write-backs of needed tensors;
+  * every allocation/transition is recorded into the time-resolved occupancy
+    trace — the central Stage-I artifact.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.workload import WorkloadGraph
+from repro.sim.accelerator import AcceleratorConfig, MemConfig
+from repro.sim.trace import AccessStats, OccupancyTrace, OpStats
+
+REFILL_BYTES = 32 * 1024       # FIFO refill granularity for latency charging
+
+
+class _BWServer:
+    """Per-port bandwidth channels: a transfer occupies the earliest-free
+    port at that port's share of bandwidth and pays the access latency once
+    per REFILL_BYTES chunk (FIFO refill turnaround)."""
+
+    def __init__(self, cfg: MemConfig):
+        self.cfg = cfg
+        self.ports = [0.0] * cfg.ports
+        self.port_bw = cfg.eff_bw / cfg.ports
+        self.busy_time = 0.0
+
+    def transfer(self, t: float, nbytes: int) -> float:
+        if nbytes <= 0:
+            return t
+        chunks = -(-nbytes // REFILL_BYTES)
+        dur = nbytes / self.port_bw + chunks * self.cfg.latency_ns * 1e-9
+        p = min(range(len(self.ports)), key=lambda i: self.ports[i])
+        start = max(t, self.ports[p])
+        self.ports[p] = start + dur
+        self.busy_time += dur
+        return self.ports[p]
+
+
+class _MemState:
+    def __init__(self, cfg: MemConfig):
+        self.cfg = cfg
+        self.resident: Dict[int, int] = {}        # tid -> bytes
+        self.last_touch: Dict[int, float] = {}
+        self.needed_bytes = 0
+        self.obsolete_bytes = 0
+        self.trace = OccupancyTrace(cfg.name, cfg.capacity)
+        self.writebacks = 0
+        self.writeback_bytes = 0
+        self.peak_snapshot: List[Tuple[str, int, str]] = []
+        self._peak_seen = 0
+
+    @property
+    def used(self) -> int:
+        return self.needed_bytes + self.obsolete_bytes
+
+
+@dataclass
+class SimResult:
+    graph_name: str
+    accel_name: str
+    total_time: float
+    traces: Dict[str, OccupancyTrace]
+    access: AccessStats
+    ops: OpStats
+    writebacks: int
+    writeback_bytes: int
+    total_macs: int
+    total_vector_ops: int
+    dram_traffic_bytes: int
+    peak_macs_per_s: float
+    peak_snapshots: Dict[str, List[Tuple[str, int, str]]] = field(
+        default_factory=dict)
+    busy_fraction: float = 0.0
+
+    @property
+    def pe_utilization(self) -> float:
+        return self.total_macs / (self.total_time * self.peak_macs_per_s)
+
+    def peak_needed(self, mem: str = "sram") -> int:
+        return self.traces[mem].peak_needed()
+
+
+class Engine:
+    """`policy` selects the list scheduler:
+      * "fifo"    — ready-time order (paper-faithful baseline).
+      * "mempeak" — occupancy-aware (beyond-paper): among ops ready by the
+        time a unit frees, prefer the one with the smallest net SRAM growth
+        (output allocation minus bytes its dying inputs release). This
+        drains score/intermediate tensors before producing new ones, cutting
+        peak needed occupancy — which Stage II converts into smaller minimum
+        SRAM and more gate-eligible banks."""
+
+    def __init__(self, graph: WorkloadGraph, accel: AcceleratorConfig,
+                 policy: str = "fifo"):
+        assert policy in ("fifo", "mempeak"), policy
+        self.g = graph
+        self.accel = accel
+        self.policy = policy
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> SimResult:
+        g, accel = self.g, self.accel
+        mems = {m.name: _MemState(m) for m in accel.memories}
+        bw = {m.name: _BWServer(m) for m in accel.memories}
+        dram = accel.dram_name
+        access = AccessStats()
+        opstats = OpStats()
+
+        # tensor bookkeeping
+        remaining = {t.tid: len(t.consumers) for t in g.tensors.values()}
+        produced = {t.tid: (t.producer is None) for t in g.tensors.values()}
+        # weights / graph inputs start resident in DRAM; set for activations
+        # only after a capacity write-back
+        in_dram = {t.tid: (t.producer is None) for t in g.tensors.values()}
+
+        pending = {op.oid: sum(0 if produced[i] else 1 for i in op.inputs)
+                   for op in g.ops.values()}
+
+        ready: List[Tuple[float, int]] = []
+        for op in g.ops.values():
+            if pending[op.oid] == 0:
+                heapq.heappush(ready, (0.0, op.oid))
+
+        unit_free = [0.0] * accel.sa_count
+        unit_mem = list(accel.sa_memory)
+        sa_rate = accel.sa_dim * accel.sa_dim * accel.freq_hz
+        vpu_rate = accel.vpu_lanes * accel.freq_hz
+
+        def snapshot(mem: _MemState):
+            if mem.needed_bytes > mem._peak_seen:
+                mem._peak_seen = mem.needed_bytes
+                mem.peak_snapshot = [
+                    (g.tensors[tid].name, sz, state_bucket(tid))
+                    for tid, sz in mem.resident.items()]
+
+        def state_bucket(tid: int) -> str:
+            return "needed" if remaining[tid] > 0 or not produced[tid] else "obsolete"
+
+        def add_resident(ms: _MemState, tid: int, t: float):
+            if tid in ms.resident:
+                ms.last_touch[tid] = t
+                return
+            sz = g.tensors[tid].size
+            ms.resident[tid] = sz
+            ms.last_touch[tid] = t
+            if state_bucket(tid) == "needed":
+                ms.needed_bytes += sz
+                ms.trace.event(t, sz, 0)
+            else:
+                ms.obsolete_bytes += sz
+                ms.trace.event(t, 0, sz)
+            snapshot(ms)
+
+        def drop_resident(ms: _MemState, tid: int, t: float):
+            sz = ms.resident.pop(tid)
+            ms.last_touch.pop(tid, None)
+            if state_bucket(tid) == "needed":
+                ms.needed_bytes -= sz
+                ms.trace.event(t, -sz, 0)
+            else:
+                ms.obsolete_bytes -= sz
+                ms.trace.event(t, 0, -sz)
+
+        def find_copy(tid: int, exclude: Optional[str] = None) -> Optional[str]:
+            """Preferred source holding tid: any on-chip memory, else DRAM."""
+            for name, m in mems.items():
+                if name != exclude and tid in m.resident:
+                    return name
+            t = g.tensors[tid]
+            if t.producer is None or in_dram.get(tid, False):
+                return dram
+            return None
+
+        def evict_for(ms: _MemState, need: int, t: float) -> float:
+            """Free `need` bytes; returns time after any write-backs."""
+            if ms.used + need <= ms.cfg.capacity:
+                return t
+            # 1) obsolete victims, LRU order (dead data, free to drop)
+            victims = sorted(
+                (tid for tid in ms.resident if state_bucket(tid) == "obsolete"),
+                key=lambda tid: ms.last_touch.get(tid, 0.0))
+            for tid in victims:
+                if ms.used + need <= ms.cfg.capacity:
+                    break
+                drop_resident(ms, tid, t)
+            # 2) needed victims: free if a copy exists elsewhere, else write
+            #    back to DRAM (counted — the capacity criterion of Stage I)
+            if ms.used + need > ms.cfg.capacity:
+                victims = sorted(
+                    (tid for tid in ms.resident
+                     if state_bucket(tid) == "needed"),
+                    key=lambda tid: ms.last_touch.get(tid, 0.0))
+                for tid in victims:
+                    if ms.used + need <= ms.cfg.capacity:
+                        break
+                    sz = ms.resident[tid]
+                    if find_copy(tid, exclude=ms.cfg.name) is None:
+                        t = bw[ms.cfg.name].transfer(t, sz)      # SRAM read
+                        t = bw[dram].transfer(t, sz)             # DRAM write
+                        access.add_read(ms.cfg.name, sz)
+                        access.add_write(dram, sz)
+                        ms.writebacks += 1
+                        ms.writeback_bytes += sz
+                        in_dram[tid] = True
+                    drop_resident(ms, tid, t)
+            return t
+
+        total_macs = 0
+        total_vops = 0
+        dram_traffic = 0
+        end_time = 0.0
+        n_done = 0
+        busy_total: Dict[int, float] = {}
+
+        pool: List[Tuple[float, int]] = []      # candidates for "mempeak"
+
+        def mem_delta(oid: int) -> int:
+            op = g.ops[oid]
+            freed = sum(g.tensors[t].size for t in op.inputs
+                        if remaining[t] == 1)
+            return g.tensors[op.output].size - freed
+
+        while ready or pool:
+            if self.policy == "fifo":
+                rt, oid = heapq.heappop(ready)
+            else:
+                # admit everything ready by the time the next unit frees
+                horizon = min(unit_free)
+                if ready:
+                    horizon = max(horizon, ready[0][0])
+                while ready and ready[0][0] <= horizon:
+                    pool.append(heapq.heappop(ready))
+                k = min(range(len(pool)),
+                        key=lambda i: (mem_delta(pool[i][1]), pool[i][0],
+                                       pool[i][1]))
+                rt, oid = pool.pop(k)
+            op = g.ops[oid]
+            # pick the attached unit that can start earliest
+            u = min(range(accel.sa_count),
+                    key=lambda i: (max(unit_free[i], rt), i))
+            ms = mems[unit_mem[u]]
+            t = max(unit_free[u], rt)
+            t0_sched = t
+
+            # ---- stage inputs into this unit's memory ----------------------
+            in_bytes = 0
+            t_mem = t
+            for tid in op.inputs:
+                sz = g.tensors[tid].size
+                in_bytes += sz
+                if tid in ms.resident:
+                    ms.last_touch[tid] = t
+                    continue
+                src = find_copy(tid, exclude=ms.cfg.name)
+                assert src is not None, \
+                    f"lost tensor {g.tensors[tid].name}"
+                # Dedicated memories talk only to the shared SRAM (paper
+                # Fig. 10): DRAM fetches and DM<->DM hops stage through it,
+                # and it keeps the copy as backup storage. This is the data
+                # hopping the paper identifies as the multi-level cost.
+                if src != "sram" and ms.cfg.name != "sram" and "sram" in mems:
+                    stage = mems["sram"]
+                    if tid not in stage.resident:
+                        t_mem = evict_for(stage, sz, t_mem)
+                        t_mem = bw[src].transfer(t_mem, sz)
+                        access.add_read(src, sz)
+                        if src == dram:
+                            dram_traffic += sz
+                        t_mem = bw["sram"].transfer(t_mem, sz)
+                        access.add_write("sram", sz)
+                        add_resident(stage, tid, t_mem)
+                    src = "sram"
+                t_mem = evict_for(ms, sz, t_mem)
+                t_mem = bw[src].transfer(t_mem, sz)
+                access.add_read(src, sz)
+                if src == dram:
+                    dram_traffic += sz
+                t_mem = bw[ms.cfg.name].transfer(t_mem, sz)
+                access.add_write(ms.cfg.name, sz)
+                add_resident(ms, tid, t_mem)
+
+            # ---- allocate output -------------------------------------------
+            out_t = g.tensors[op.output]
+            t_mem = evict_for(ms, out_t.size, t_mem)
+
+            # ---- operand streaming (SRAM reads into the FIFOs) --------------
+            t_stream = bw[ms.cfg.name].transfer(t_mem, in_bytes)
+            access.add_read(ms.cfg.name, in_bytes)
+
+            # ---- compute -----------------------------------------------------
+            if op.op_type == "matmul":
+                R, K, C = op.mnk
+                fill = 1.0 + (2.0 * accel.sa_dim) / max(K, 1)
+                compute = op.macs / sa_rate * fill
+            else:
+                compute = op.vector_ops / vpu_rate
+            c_start = max(t, t_stream)
+            finish = c_start + compute
+
+            # ---- output write (overlapped streaming, charged to BW) ---------
+            bw[ms.cfg.name].transfer(finish, out_t.size)
+            access.add_write(ms.cfg.name, out_t.size)
+            add_resident(ms, op.output, finish)
+
+            unit_free[u] = finish
+            busy_total[u] = busy_total.get(u, 0.0) + (finish - t)
+            end_time = max(end_time, finish)
+            total_macs += op.macs
+            total_vops += op.vector_ops
+            opstats.add(op.tag, compute, max(0.0, t_stream - t),
+                        max(0.0, t - rt))
+
+            # ---- completion: outputs exist; inputs may turn obsolete --------
+            produced[op.output] = True
+            for tid in op.inputs:
+                remaining[tid] -= 1
+                if remaining[tid] == 0:
+                    for m2 in mems.values():
+                        if tid not in m2.resident:
+                            continue
+                        if (op.op_type == "softmax"
+                                and g.tensors[tid].size == out_t.size):
+                            # in-place: probabilities overwrite the scores.
+                            # The tensor was in the needed bucket until this
+                            # very completion event.
+                            sz = m2.resident.pop(tid)
+                            m2.last_touch.pop(tid, None)
+                            m2.needed_bytes -= sz
+                            m2.trace.event(finish, -sz, 0)
+                            continue
+                        sz = m2.resident[tid]
+                        m2.needed_bytes -= sz
+                        m2.obsolete_bytes += sz
+                        m2.trace.event(finish, -sz, sz)
+            # output was allocated as needed; fix bucket if it has no readers
+            if remaining[op.output] == 0:
+                sz = ms.resident.get(op.output)
+                if sz is not None:
+                    ms.needed_bytes -= sz
+                    ms.obsolete_bytes += sz
+                    ms.trace.event(finish, -sz, sz)
+
+            for cons in g.tensors[op.output].consumers:
+                pending[cons] -= 1
+                if pending[cons] == 0:
+                    heapq.heappush(ready, (finish, cons))
+            n_done += 1
+
+        assert n_done == len(g.ops), (n_done, len(g.ops))
+        wb = sum(m.writebacks for m in mems.values())
+        wbb = sum(m.writeback_bytes for m in mems.values())
+        return SimResult(
+            graph_name=g.name, accel_name=accel.name, total_time=end_time,
+            traces={name: m.trace for name, m in mems.items()},
+            access=access, ops=opstats, writebacks=wb, writeback_bytes=wbb,
+            total_macs=total_macs, total_vector_ops=total_vops,
+            dram_traffic_bytes=dram_traffic,
+            peak_macs_per_s=accel.peak_macs_per_s,
+            peak_snapshots={n: m.peak_snapshot for n, m in mems.items()},
+            busy_fraction=(sum(busy_total.values())
+                           / (accel.sa_count * end_time) if end_time else 0.0))
+
+
+def simulate(graph: WorkloadGraph, accel: AcceleratorConfig,
+             policy: str = "fifo") -> SimResult:
+    return Engine(graph, accel, policy=policy).run()
+
+
+def find_min_sram(graph: WorkloadGraph, accel: AcceleratorConfig,
+                  lo_mib: int = 8, hi_mib: int = 256,
+                  step_mib: int = 16) -> Tuple[int, SimResult]:
+    """Paper's blue loop: smallest SRAM (stepped) with zero capacity-induced
+    write-backs; returns (capacity_mib, result at that capacity)."""
+    best = None
+    for mib in range(lo_mib, hi_mib + 1, step_mib):
+        res = simulate(graph, accel.with_sram_capacity(mib * 2**20))
+        if res.writebacks == 0:
+            best = (mib, res)
+            break
+    if best is None:
+        res = simulate(graph, accel.with_sram_capacity(hi_mib * 2**20))
+        best = (hi_mib, res)
+    return best

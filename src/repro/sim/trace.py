@@ -1,0 +1,111 @@
+"""Time-resolved occupancy traces and access statistics (Stage-I outputs)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+@dataclass
+class OccupancyTrace:
+    """Piecewise-constant needed/obsolete occupancy of one memory over time.
+
+    The engine is a list scheduler, so state mutations are emitted in
+    processing order with non-monotonic simulated timestamps; we therefore
+    record *delta events* (t, d_needed, d_obsolete) and integrate after a
+    stable sort by time — the resulting step function is exact. `segments()`
+    yields (duration, needed, obsolete, total) rows — the artifact Stage II
+    consumes (Eq. 1/4 of the paper)."""
+    mem_name: str
+    capacity: int
+    ev_times: List[float] = field(default_factory=list)
+    ev_dneeded: List[int] = field(default_factory=list)
+    ev_dobsolete: List[int] = field(default_factory=list)
+
+    def event(self, t: float, d_needed: int, d_obsolete: int) -> None:
+        if d_needed == 0 and d_obsolete == 0:
+            return
+        self.ev_times.append(t)
+        self.ev_dneeded.append(int(d_needed))
+        self.ev_dobsolete.append(int(d_obsolete))
+
+    # ------------------------------------------------------------- views
+    def as_arrays(self):
+        """Sorted, integrated (times, needed, obsolete) step function."""
+        t = np.asarray(self.ev_times, np.float64)
+        dn = np.asarray(self.ev_dneeded, np.int64)
+        do = np.asarray(self.ev_dobsolete, np.int64)
+        order = np.argsort(t, kind="stable")
+        t = t[order]
+        n = np.cumsum(dn[order])
+        o = np.cumsum(do[order])
+        # collapse duplicate timestamps (keep last state at each time)
+        if len(t):
+            last = np.r_[t[1:] != t[:-1], True]
+            t, n, o = t[last], n[last], o[last]
+        return t, n, o
+
+    def segments(self, end_time: float):
+        """(durations, needed, obsolete, total) arrays, one row per segment."""
+        t, n, o = self.as_arrays()
+        if len(t) == 0:
+            return (np.zeros(0), np.zeros(0, np.int64), np.zeros(0, np.int64),
+                    np.zeros(0, np.int64))
+        edges = np.append(t, max(end_time, t[-1]))
+        dur = np.diff(edges)
+        keep = dur > 0
+        return dur[keep], n[keep], o[keep], (n + o)[keep]
+
+    def peak_needed(self) -> int:
+        _, n, _ = self.as_arrays()
+        return int(n.max()) if len(n) else 0
+
+    def peak_total(self) -> int:
+        _, n, o = self.as_arrays()
+        return int((n + o).max()) if len(n) else 0
+
+    def time_weighted_mean(self, end_time: float) -> float:
+        dur, n, o, tot = self.segments(end_time)
+        if dur.sum() <= 0:
+            return 0.0
+        return float((tot * dur).sum() / dur.sum())
+
+    def occupancy_series(self, end_time: float, use: str = "total"):
+        """(durations, bytes) for Stage II; `use` selects needed|total."""
+        dur, n, o, tot = self.segments(end_time)
+        return dur, (n if use == "needed" else tot)
+
+
+@dataclass
+class AccessStats:
+    reads_bytes: Dict[str, int] = field(default_factory=dict)
+    writes_bytes: Dict[str, int] = field(default_factory=dict)
+    access_width: int = 64         # bytes per SRAM access word
+
+    def add_read(self, mem: str, b: int) -> None:
+        self.reads_bytes[mem] = self.reads_bytes.get(mem, 0) + int(b)
+
+    def add_write(self, mem: str, b: int) -> None:
+        self.writes_bytes[mem] = self.writes_bytes.get(mem, 0) + int(b)
+
+    def n_reads(self, mem: str) -> int:
+        return -(-self.reads_bytes.get(mem, 0) // self.access_width)
+
+    def n_writes(self, mem: str) -> int:
+        return -(-self.writes_bytes.get(mem, 0) // self.access_width)
+
+
+@dataclass
+class OpStats:
+    """Per-tag latency decomposition (paper Fig. 6)."""
+    compute: Dict[str, float] = field(default_factory=dict)
+    memory: Dict[str, float] = field(default_factory=dict)
+    idle: Dict[str, float] = field(default_factory=dict)
+    count: Dict[str, int] = field(default_factory=dict)
+
+    def add(self, tag: str, compute: float, memory: float, idle: float):
+        self.compute[tag] = self.compute.get(tag, 0.0) + compute
+        self.memory[tag] = self.memory.get(tag, 0.0) + memory
+        self.idle[tag] = self.idle.get(tag, 0.0) + idle
+        self.count[tag] = self.count.get(tag, 0) + 1

@@ -1,0 +1,3 @@
+from repro.train.step import make_train_step, make_eval_step  # noqa: F401
+from repro.train.loop import LoopConfig, StragglerMonitor, TrainLoop  # noqa: F401
+from repro.train import checkpoint  # noqa: F401

@@ -1,0 +1,146 @@
+"""Atomic, async, multihost-aware checkpointing.
+
+Layout:  <dir>/step_<N>/
+            index.json            (tree structure, shapes, dtypes, metadata)
+            p<proc>_l<leaf>.npy   (one file per leaf, per process)
+
+Writes go to a tmp dir + os.rename (atomic on POSIX), so a crash mid-save
+never corrupts the latest checkpoint. `AsyncCheckpointer` runs saves on a
+background thread (training continues); `latest_step`/`restore` implement
+preemption recovery. Each process writes only its addressable leaves — on a
+real multihost pod process 0 additionally writes the index.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat], treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any,
+         metadata: Optional[Dict] = None,
+         process_index: Optional[int] = None) -> str:
+    proc = jax.process_index() if process_index is None else process_index
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + f".tmp_p{proc}"
+    os.makedirs(tmp, exist_ok=True)
+
+    flat, _ = _leaf_paths(tree)
+    index = {"step": int(step), "metadata": metadata or {},
+             "leaves": []}
+    for i, (kpath, leaf) in enumerate(flat):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"p{proc}_l{i:05d}.npy"
+        # store raw bytes as uint8 so extension dtypes (bfloat16, ...) survive
+        np.save(os.path.join(tmp, fname),
+                np.frombuffer(arr.tobytes(), np.uint8))
+        index["leaves"].append({"key": kpath, "file": fname,
+                                "shape": list(arr.shape),
+                                "dtype": str(arr.dtype)})
+    if proc == 0:
+        with open(os.path.join(tmp, "index.json"), "w") as f:
+            json.dump(index, f)
+    if os.path.exists(final):
+        shutil.rmtree(tmp)            # another process/run already committed
+    else:
+        os.rename(tmp, final)         # atomic commit
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp") \
+                and "tmp_p" not in name:
+            try:
+                steps.append(int(name.split("_")[1]))
+            except (ValueError, IndexError):
+                continue
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, tree_like: Any, step: Optional[int] = None,
+            process_index: Optional[int] = None) -> Tuple[int, Any]:
+    """Restore into the structure of `tree_like` (shapes validated)."""
+    proc = jax.process_index() if process_index is None else process_index
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "index.json")) as f:
+        index = json.load(f)
+    flat, treedef = _leaf_paths(tree_like)
+    assert len(flat) == len(index["leaves"]), \
+        f"leaf count mismatch: {len(flat)} vs {len(index['leaves'])}"
+    leaves = []
+    for (kpath, like), meta in zip(flat, index["leaves"]):
+        assert kpath == meta["key"], (kpath, meta["key"])
+        raw = np.load(os.path.join(d, meta["file"].replace(
+            "p0_", f"p{proc}_") if proc else meta["file"]))
+        arr = np.frombuffer(raw.tobytes(), _resolve_dtype(
+            meta["dtype"])).reshape(meta["shape"])
+        assert list(arr.shape) == list(np.shape(like)), (kpath, arr.shape)
+        leaves.append(arr)
+    return step, jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _resolve_dtype(name: str):
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def prune(ckpt_dir: str, keep_last: int = 3) -> None:
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(
+        int(n.split("_")[1]) for n in os.listdir(ckpt_dir)
+        if n.startswith("step_") and "tmp" not in n)
+    for s in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget background saves; `wait()` joins outstanding work."""
+
+    def __init__(self, ckpt_dir: str, keep_last: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep_last = keep_last
+        self._thread: Optional[threading.Thread] = None
+        self.last_saved: Optional[int] = None
+
+    def save_async(self, step: int, tree: Any,
+                   metadata: Optional[Dict] = None) -> None:
+        self.wait()
+        # device_get on the caller thread so the arrays are snapshot now
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            save(self.ckpt_dir, step, host_tree, metadata)
+            prune(self.ckpt_dir, self.keep_last)
+            self.last_saved = step
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

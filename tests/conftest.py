@@ -1,0 +1,8 @@
+import os
+
+# keep tests on 1 CPU device; the dry-run (and only it) uses 512
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,95 @@
+"""Beyond-paper features: mempeak scheduler, decode workload graphs,
+roofline HLO parsing."""
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.core.workload import build_decode_graph, build_graph
+from repro.launch.roofline import (collective_bytes, min_hbm_bytes,
+                                   model_flops)
+from repro.sim.accelerator import baseline_accelerator
+from repro.sim.engine import simulate
+
+
+def test_mempeak_reduces_peak_occupancy():
+    g = build_graph(get_arch("dsr1d-qwen-1.5b"), M=2048, subops=4)
+    a = baseline_accelerator(128)
+    fifo = simulate(g, a, policy="fifo")
+    mem = simulate(g, a, policy="mempeak")
+    assert mem.traces["sram"].peak_needed() < 0.7 * fifo.traces["sram"].peak_needed()
+    assert mem.writebacks == 0
+    # same work is done either way
+    assert mem.total_macs == fifo.total_macs
+
+
+def test_mempeak_deterministic():
+    cfg = reduced(get_arch("gpt2-xl"))
+    g = build_graph(cfg, M=256, subops=4)
+    a = baseline_accelerator(64)
+    r1 = simulate(g, a, policy="mempeak")
+    r2 = simulate(g, a, policy="mempeak")
+    assert r1.total_time == r2.total_time
+    assert r1.traces["sram"].peak_needed() == r2.traces["sram"].peak_needed()
+
+
+def test_decode_graph_kv_scaling():
+    """Fig.-1 mechanism: decode energy/traffic scales with kv-head count."""
+    from dataclasses import replace
+    base = get_arch("dsr1d-qwen-1.5b")
+    mha = replace(base, name="tmp-mha", num_kv_heads=base.num_heads)
+    g_gqa = build_decode_graph(base, context_len=2048, batch=16)
+    g_mha = build_decode_graph(mha, context_len=2048, batch=16)
+
+    def kv_bytes(g):
+        return sum(t.size for t in g.tensors.values() if t.kind == "kv")
+
+    ratio = kv_bytes(g_mha) / kv_bytes(g_gqa)
+    assert 5.0 < ratio < 7.0          # 12 kv heads vs 2 -> ~6x
+    a = baseline_accelerator(128)
+    t_ratio = simulate(g_mha, a).total_time / simulate(g_gqa, a).total_time
+    assert t_ratio > 2.0              # paper Fig. 1: 3.14x
+
+
+def test_collective_bytes_parses_hlo_text():
+    hlo = """
+  %all-reduce.1 = f32[1024,512]{1,0} all-reduce(%x), replica_groups=[4,16]<=[64]
+  %all-gather = bf16[4096,128]{1,0} all-gather(%y), replica_groups=[2,8]<=[16]
+  %reduce-scatter.3 = f32[64]{0} reduce-scatter(%z), replica_groups=[4,16]<=[64]
+  %all-reduce-start = f32[256]{0} all-reduce-start(%w), replica_groups=[1,2]<=[2]
+  %all-reduce-done = f32[256]{0} all-reduce-done(%all-reduce-start)
+  %add = f32[9999]{0} add(%a, %b)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 1024 * 512 * 4 + 256 * 4     # -done not counted
+    assert out["all-gather"] == 4096 * 128 * 2
+    assert out["reduce-scatter"] == 64 * 4 * 16              # x group size
+    assert out["all-to-all"] == 0
+
+
+def test_model_flops_sane():
+    from repro.configs import SHAPES
+    cfg = get_arch("qwen2-7b")
+    tr = model_flops(cfg, SHAPES["train_4k"])
+    pf = model_flops(cfg, SHAPES["prefill_32k"])
+    dc = model_flops(cfg, SHAPES["decode_32k"])
+    assert tr == pytest.approx(6 * cfg.param_count() * 256 * 4096, rel=1e-6)
+    assert pf == pytest.approx(2 * cfg.param_count() * 32 * 32768, rel=1e-6)
+    assert dc < pf / 1000             # one token per sequence
+
+    moe = get_arch("olmoe-1b-7b")
+    assert model_flops(moe, SHAPES["train_4k"]) \
+        == pytest.approx(6 * moe.active_param_count() * 256 * 4096, rel=1e-6)
+
+
+def test_min_hbm_bytes_decode_counts_kv():
+    from repro.configs import SHAPES
+    cfg = get_arch("qwen2-7b")
+    b = min_hbm_bytes(cfg, SHAPES["decode_32k"], 256)
+    # weights bf16 / 256 chips is the floor
+    assert b > cfg.param_count() * 2 / 256
+    # local-window archs cap the decode KV term
+    rg = get_arch("recurrentgemma-2b")
+    b_rg = min_hbm_bytes(rg, SHAPES["long_500k"], 256)
+    b_rg32 = min_hbm_bytes(rg, SHAPES["decode_32k"], 256)
+    # long_500k batch is 128x smaller; per-batch KV is window-capped
+    assert b_rg < b_rg32

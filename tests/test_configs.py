@@ -1,0 +1,82 @@
+"""Config registry: identity, analytic param counts, shape rules."""
+import pytest
+
+from repro.configs import (ASSIGNED_ARCHS, PAPER_ARCHS, SHAPES, get_arch,
+                           list_archs, reduced, shape_supported)
+
+
+def test_all_assigned_archs_registered():
+    assert len(ASSIGNED_ARCHS) == 10
+    for a in ASSIGNED_ARCHS + PAPER_ARCHS:
+        cfg = get_arch(a)
+        assert cfg.name == a
+
+
+@pytest.mark.parametrize("name,lo,hi", [
+    ("qwen2-7b", 7.0e9, 8.2e9),
+    ("tinyllama-1.1b", 1.0e9, 1.2e9),
+    ("deepseek-coder-33b", 32e9, 35e9),
+    ("granite-34b", 32e9, 36e9),
+    ("olmoe-1b-7b", 6.5e9, 7.3e9),
+    ("llama4-scout-17b-a16e", 100e9, 112e9),
+    ("mamba2-130m", 0.11e9, 0.15e9),
+    ("recurrentgemma-2b", 2.4e9, 3.0e9),
+    ("internvl2-2b", 1.7e9, 2.1e9),
+    ("seamless-m4t-large-v2", 1.4e9, 2.0e9),
+])
+def test_param_counts_in_published_range(name, lo, hi):
+    assert lo <= get_arch(name).param_count() <= hi
+
+
+def test_moe_active_params():
+    o = get_arch("olmoe-1b-7b")
+    assert 1.0e9 <= o.active_param_count() <= 1.5e9
+    l4 = get_arch("llama4-scout-17b-a16e")
+    assert 15e9 <= l4.active_param_count() <= 19e9
+
+
+def test_padded_vocab_shards_evenly():
+    for a in list_archs():
+        assert get_arch(a).padded_vocab % 16 == 0
+
+
+def test_shape_skip_rules():
+    long = SHAPES["long_500k"]
+    ok, _ = shape_supported(get_arch("mamba2-130m"), long)
+    assert ok
+    ok, _ = shape_supported(get_arch("recurrentgemma-2b"), long)
+    assert ok
+    ok, _ = shape_supported(get_arch("llama4-scout-17b-a16e"), long)
+    assert ok
+    for a in ("qwen2-7b", "deepseek-coder-33b", "olmoe-1b-7b",
+              "seamless-m4t-large-v2", "internvl2-2b"):
+        ok, reason = shape_supported(get_arch(a), long)
+        assert not ok and "full-attention" in reason
+    for s in ("train_4k", "prefill_32k", "decode_32k"):
+        for a in ASSIGNED_ARCHS:
+            ok, _ = shape_supported(get_arch(a), SHAPES[s])
+            assert ok
+
+
+def test_reduced_preserves_family():
+    for a in list_archs():
+        cfg = get_arch(a)
+        r = reduced(cfg)
+        assert r.family == cfg.family
+        assert r.block_pattern == cfg.block_pattern
+        assert (r.moe is None) == (cfg.moe is None)
+        assert (r.ssm is None) == (cfg.ssm is None)
+        assert r.is_encdec == cfg.is_encdec
+        assert r.param_count() < 5e6
+
+
+def test_paper_table1_mac_consistency():
+    """Table I: GPT-2 XL 1.48B/3.66T, DS-R1D 1.31B/3.04T (excl. embeddings)."""
+    from repro.core.workload import build_graph
+    g1 = build_graph(get_arch("gpt2-xl"), M=2048, subops=4)
+    g2 = build_graph(get_arch("dsr1d-qwen-1.5b"), M=2048, subops=4)
+    assert abs(g1.total_macs() / 3.66e12 - 1) < 0.01
+    assert abs(g2.total_macs() / 3.04e12 - 1) < 0.01
+    # weights (int8 bytes == param count, embeddings excluded like the paper)
+    assert abs(g1.total_weight_bytes() / 1.48e9 - 1) < 0.02
+    assert abs(g2.total_weight_bytes() / 1.31e9 - 1) < 0.03

@@ -1,0 +1,134 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.bank_energy import bank_activity_stats, candidate_grid
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.gqa_decode import gqa_decode, gqa_decode_ref
+from repro.kernels.int8_matmul import (int8_matmul, int8_matmul_ref,
+                                       quantize_cols, quantize_rows)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# --- flash attention ---------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,K,S,T,d", [
+    (1, 2, 2, 128, 128, 64),       # MHA
+    (2, 4, 1, 128, 256, 64),       # MQA
+    (1, 8, 2, 256, 128, 128),      # GQA group 4
+    (2, 6, 3, 384, 384, 32),       # non-pow2 heads, small head_dim
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(B, H, K, S, T, d, dtype, causal):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (B, H, S, d), dtype)
+    k = _rand(ks[1], (B, K, T, d), dtype)
+    v = _rand(ks[2], (B, K, T, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, backend="interpret",
+                          block_q=128, block_k=128)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_block_shape_independence():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(ks[0], (1, 2, 256, 64), jnp.float32)
+    k = _rand(ks[1], (1, 2, 256, 64), jnp.float32)
+    v = _rand(ks[2], (1, 2, 256, 64), jnp.float32)
+    o1 = flash_attention(q, k, v, backend="interpret", block_q=64, block_k=128)
+    o2 = flash_attention(q, k, v, backend="interpret", block_q=128, block_k=64)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+# --- gqa decode ---------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,K,T,d", [
+    (1, 4, 4, 256, 64),
+    (2, 8, 2, 512, 64),
+    (4, 16, 1, 256, 128),
+    (2, 12, 3, 768, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gqa_decode_sweep(B, H, K, T, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    q = _rand(ks[0], (B, H, d), dtype)
+    k = _rand(ks[1], (B, K, T, d), dtype)
+    v = _rand(ks[2], (B, K, T, d), dtype)
+    lengths = jax.random.randint(ks[3], (B,), 1, T + 1, jnp.int32)
+    out = gqa_decode(q, k, v, lengths, backend="interpret")
+    ref = gqa_decode_ref(q, k, v, lengths)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_gqa_decode_respects_length_mask():
+    """Entries beyond `lengths` must not affect the output."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    B, H, K, T, d = 1, 4, 2, 256, 64
+    q = _rand(ks[0], (B, H, d), jnp.float32)
+    k = _rand(ks[1], (B, K, T, d), jnp.float32)
+    v = _rand(ks[2], (B, K, T, d), jnp.float32)
+    lengths = jnp.array([100], jnp.int32)
+    o1 = gqa_decode(q, k, v, lengths, backend="interpret")
+    k2 = k.at[:, :, 150:].set(99.0)
+    v2 = v.at[:, :, 150:].set(-99.0)
+    o2 = gqa_decode(q, k2, v2, lengths, backend="interpret")
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)
+
+
+# --- int8 matmul ---------------------------------------------------------------
+
+@pytest.mark.parametrize("M,K,N", [
+    (128, 128, 128), (256, 384, 128), (128, 512, 384), (384, 256, 256),
+])
+def test_int8_matmul_sweep(M, K, N):
+    ks = jax.random.split(jax.random.PRNGKey(4), 2)
+    x = jax.random.normal(ks[0], (M, K)) * 3.0
+    w = jax.random.normal(ks[1], (K, N))
+    xq, sx = quantize_rows(x)
+    wq, sw = quantize_cols(w)
+    out = int8_matmul(xq, wq, sx, sw, backend="interpret")
+    ref = int8_matmul_ref(xq, wq, sx, sw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-5)
+    # end-to-end quantization error vs fp32 stays small
+    full = np.asarray(x @ w)
+    rel = np.abs(np.asarray(out) - full).max() / np.abs(full).max()
+    assert rel < 0.03
+
+
+def test_int8_matmul_exact_integers():
+    """Integer inputs with unit scales must be exact."""
+    rng = np.random.default_rng(0)
+    xq = jnp.asarray(rng.integers(-127, 128, (128, 256)), jnp.int8)
+    wq = jnp.asarray(rng.integers(-127, 128, (256, 128)), jnp.int8)
+    sx = jnp.ones((128, 1), jnp.float32)
+    sw = jnp.ones((1, 128), jnp.float32)
+    out = int8_matmul(xq, wq, sx, sw, backend="interpret")
+    ref = np.asarray(xq, np.int64) @ np.asarray(wq, np.int64)
+    np.testing.assert_array_equal(np.asarray(out, np.int64), ref)
+
+
+# --- bank energy ----------------------------------------------------------------
+
+@pytest.mark.parametrize("nseg", [17, 256, 1000, 4096])
+def test_bank_energy_padding_and_grid(nseg):
+    rng = np.random.default_rng(5)
+    d = rng.random(nseg).astype(np.float32) * 1e-3
+    occ = (rng.random(nseg) * 128 * 2**20).astype(np.float32)
+    us, nb, meta = candidate_grid(
+        [c * 2**20 for c in (48, 64, 128)], [1, 4, 16], 0.9)
+    out_i = np.asarray(bank_activity_stats(d, occ, us, nb,
+                                           backend="interpret", block_s=256))
+    out_r = np.asarray(bank_activity_stats(d, occ, us, nb, backend="ref"))
+    np.testing.assert_allclose(out_i, out_r, rtol=1e-5, atol=1e-4)

@@ -1,0 +1,116 @@
+"""Continuous batching scheduler + elastic restart."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.models import build_model
+from repro.serve.scheduler import ContinuousBatcher, Request, kv_slot_budget
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = reduced(get_arch("tinyllama-1.1b"), layers=2)
+    m = build_model(cfg, compute_dtype=jnp.float32, remat="none")
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def test_continuous_batching_completes_all(small):
+    cfg, m, params = small
+    cb = ContinuousBatcher(m, params, num_slots=2, max_len=64)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    tokens=rng.integers(0, cfg.vocab_size, 8 + i),
+                    max_new_tokens=4 + i % 3)
+            for i in range(5)]
+    for r in reqs:
+        cb.submit(r)
+    done = cb.run()
+    assert len(done) == 5
+    assert cb.stats.finished == 5
+    assert cb.stats.prefills == 5
+    # more requests than slots -> overlapping lifetimes
+    assert cb.stats.peak_active_slots == 2
+    for r in done:
+        assert len(r.output) == r.max_new_tokens
+        assert all(0 <= t for t in r.output)
+
+
+def test_continuous_batching_matches_dedicated_server(small):
+    """A request decoded via the slot scheduler must produce the same greedy
+    tokens as a single dedicated generate() call."""
+    cfg, m, params = small
+    from repro.serve import BatchedServer, ServeConfig
+    prompt = np.arange(10) % cfg.vocab_size
+    srv = BatchedServer(m, params, ServeConfig(max_len=64, max_new_tokens=6))
+    ref = srv.generate({"tokens": jnp.asarray(prompt[None, :], jnp.int32)})
+
+    cb = ContinuousBatcher(m, params, num_slots=3, max_len=64)
+    cb.submit(Request(rid=0, tokens=prompt, max_new_tokens=6))
+    # add competing traffic to prove slot independence
+    rng = np.random.default_rng(1)
+    for i in range(3):
+        cb.submit(Request(rid=i + 1,
+                          tokens=rng.integers(0, cfg.vocab_size, 7),
+                          max_new_tokens=5))
+    done = cb.run()
+    mine = next(r for r in done if r.rid == 0)
+    np.testing.assert_array_equal(np.asarray(mine.output),
+                                  np.asarray(ref["tokens"][0]))
+
+
+def test_eos_frees_slot_early(small):
+    cfg, m, params = small
+    cb = ContinuousBatcher(m, params, num_slots=1, max_len=64)
+    prompt = np.arange(8) % cfg.vocab_size
+    # discover the greedy second token, then use it as "EOS"
+    probe = ContinuousBatcher(m, params, num_slots=1, max_len=64)
+    probe.submit(Request(rid=0, tokens=prompt, max_new_tokens=3))
+    out = probe.run()[0].output
+    eos = out[1]
+    cb.submit(Request(rid=1, tokens=prompt, max_new_tokens=10, eos_id=eos))
+    done = cb.run()
+    assert len(done[0].output) <= 2 + 1
+
+
+def test_kv_slot_budget_gqa_advantage():
+    """The serving form of the paper's claim: GQA supports ~H/K more slots."""
+    from dataclasses import replace
+    gqa = get_arch("dsr1d-qwen-1.5b")                 # H=12, K=2
+    mha = replace(gqa, name="tmp", num_kv_heads=gqa.num_heads)
+    hbm = 16e9
+    n_gqa = kv_slot_budget(gqa, hbm, max_len=32768)
+    n_mha = kv_slot_budget(mha, hbm, max_len=32768)
+    assert n_gqa > 4 * n_mha
+    # attention-free archs: slots bounded only by the small SSM state
+    # (75 MB/slot at any context length vs GQA's ~0.94 GB at 32k)
+    assert kv_slot_budget(get_arch("mamba2-130m"), hbm, 32768) > 100
+
+
+def test_elastic_restart_across_device_counts(tmp_path):
+    """Checkpoint written under one 'cluster size' restores under another —
+    host-sharded leaves are device-count independent by construction."""
+    from repro.data import DataConfig, SyntheticTokens
+    from repro.optim import AdamW, constant
+    from repro.train import LoopConfig, TrainLoop
+    from repro.launch.mesh import make_host_mesh
+
+    cfg = reduced(get_arch("tinyllama-1.1b"), layers=2)
+    data = SyntheticTokens(DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                                      global_batch=4, seed=5))
+    opt = AdamW(lr=constant(1e-3))
+    m = build_model(cfg, compute_dtype=jnp.float32, remat="none")
+    ckdir = str(tmp_path / "elastic")
+    loop = TrainLoop(m, opt, data, LoopConfig(total_steps=6, ckpt_every=3,
+                                              ckpt_dir=ckdir))
+    out1 = loop.run()
+    # "elastic event": a new mesh over whatever devices exist now
+    mesh = make_host_mesh()
+    assert mesh.size >= 1
+    loop2 = TrainLoop(m, opt, data, LoopConfig(total_steps=8, ckpt_every=4,
+                                               ckpt_dir=ckdir))
+    out2 = loop2.run()
+    assert out2["history"][0]["step"] == 6
+    assert out2["history"][-1]["step"] == 7

@@ -1,0 +1,53 @@
+"""Drowsy retention + policy sensitivity (paper Sec. V future work)."""
+import numpy as np
+import pytest
+
+from repro.core.gating import Policy, evaluate
+from repro.core.sensitivity import (DROWSY_LEAK_FRACTION, evaluate_drowsy,
+                                    policy_sensitivity)
+
+MIB = 2**20
+
+
+def _trace():
+    d = np.array([1e-3, 1e-3] * 16)
+    occ = np.array([100 * MIB, 1 * MIB] * 16, np.int64)
+    return d, occ
+
+
+def test_drowsy_bounded_by_on_and_off():
+    d, occ = _trace()
+    kw = dict(capacity=128 * MIB, banks=8, n_reads=100, n_writes=100)
+    off_only = evaluate(d, occ, policy=Policy.aggressive(), **kw)
+    none = evaluate(d, occ, policy=Policy.none(), **kw)
+    # with a conservative off-threshold that forbids gating, drowsy must land
+    # between always-on and off-only
+    dr = evaluate_drowsy(d, occ, capacity=128 * MIB, banks=8,
+                         n_reads=100, n_writes=100, off_multiple=1e9)
+    assert off_only.e_total <= dr.e_total <= none.e_total
+    assert dr.n_off == 0 and dr.n_drowsy > 0
+    # drowsy leakage is the retention fraction of the idle leakage
+    idle_leak_full = none.e_leak - (
+        evaluate(d, occ, policy=Policy.aggressive(), **kw).e_leak)
+    assert dr.e_leak_drowsy == pytest.approx(
+        idle_leak_full * DROWSY_LEAK_FRACTION, rel=0.35)
+
+
+def test_drowsy_prefers_off_for_long_idles():
+    d, occ = _trace()
+    dr = evaluate_drowsy(d, occ, capacity=128 * MIB, banks=8,
+                         n_reads=0, n_writes=0, off_multiple=1.0)
+    assert dr.n_off > 0
+    assert dr.e_leak_drowsy == 0.0 or dr.n_drowsy >= 0
+
+
+def test_sensitivity_monotone_in_threshold():
+    d, occ = _trace()
+    sens = policy_sensitivity(d, occ, capacity=128 * MIB, banks=8,
+                              n_reads=100, n_writes=100)
+    th = list(sens["threshold"].values())
+    assert all(b >= a - 1e-12 for a, b in zip(th, th[1:]))   # monotone up
+    sw = sens["sw_scale"]
+    assert sw[100.0] >= sw[0.1]
+    # drowsy degrades more slowly than off-only as the threshold grows
+    assert sens["drowsy"][1e5] < sens["threshold"][1e5]

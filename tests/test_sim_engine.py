@@ -1,0 +1,103 @@
+"""Stage-I engine: trace integrity, eviction/write-back behavior, determinism,
+multi-level residency."""
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.core.workload import build_graph
+from repro.sim.accelerator import (baseline_accelerator,
+                                   multilevel_accelerator, sram_latency_ns)
+from repro.sim.engine import find_min_sram, simulate
+
+
+@pytest.fixture(scope="module")
+def ds_result():
+    g = build_graph(get_arch("dsr1d-qwen-1.5b"), M=2048, subops=4)
+    return simulate(g, baseline_accelerator(128))
+
+
+def test_all_ops_complete(ds_result):
+    assert ds_result.total_time > 0
+    assert abs(ds_result.total_macs / 3.04e12 - 1) < 0.01   # paper Table I
+
+
+def test_trace_conserves_time(ds_result):
+    tr = ds_result.traces["sram"]
+    dur, n, o, tot = tr.segments(ds_result.total_time)
+    assert abs(dur.sum() - ds_result.total_time) / ds_result.total_time < 0.01
+    assert (n >= 0).all() and (o >= 0).all()
+
+
+def test_occupancy_never_exceeds_capacity_materially(ds_result):
+    tr = ds_result.traces["sram"]
+    # in-flight staging may transiently overshoot; bounded at < 5%
+    assert tr.peak_total() <= 128 * 2**20 * 1.05
+
+
+def test_paper_claims_c1_c2(ds_result):
+    """C1/C2: GQA peak and latency substantially below MHA."""
+    g = build_graph(get_arch("gpt2-xl"), M=2048, subops=4)
+    gpt = simulate(g, baseline_accelerator(128))
+    peak_ratio = gpt.peak_needed() / ds_result.peak_needed()
+    time_ratio = gpt.total_time / ds_result.total_time
+    assert peak_ratio > 1.8, peak_ratio          # paper: 2.72x, ours ~2.06x
+    assert time_ratio > 1.7, time_ratio          # paper: 1.89x, ours ~2.05x
+    # absolute latency within 15% of the paper's 593.9 / 313.6 ms
+    assert abs(gpt.total_time - 0.5939) / 0.5939 < 0.15
+    assert abs(ds_result.total_time - 0.3136) / 0.3136 < 0.15
+    # GPT-2 XL peak within 5% of the paper's 107.3 MiB
+    assert abs(gpt.peak_needed() / 2**20 - 107.3) / 107.3 < 0.05
+
+
+def test_tiny_sram_forces_writebacks():
+    cfg = reduced(get_arch("dsr1d-qwen-1.5b"))
+    g = build_graph(cfg, M=256, subops=4)
+    small = simulate(g, baseline_accelerator(8).with_sram_capacity(64 * 1024))
+    big = simulate(g, baseline_accelerator(64))
+    assert small.writebacks > 0
+    assert big.writebacks == 0
+    assert small.total_time > big.total_time
+
+
+def test_find_min_sram_monotone():
+    cfg = reduced(get_arch("gpt2-xl"))
+    g = build_graph(cfg, M=512, subops=4)
+    mib, res = find_min_sram(g, baseline_accelerator(128), lo_mib=1,
+                             hi_mib=64, step_mib=1)
+    assert res.writebacks == 0
+    assert res.peak_needed() <= mib * 2**20
+
+
+def test_determinism(ds_result):
+    g = build_graph(get_arch("dsr1d-qwen-1.5b"), M=2048, subops=4)
+    r2 = simulate(g, baseline_accelerator(128))
+    assert r2.total_time == ds_result.total_time
+    assert r2.peak_needed() == ds_result.peak_needed()
+    assert r2.access.reads_bytes == ds_result.access.reads_bytes
+
+
+def test_multilevel_hierarchy():
+    g = build_graph(get_arch("dsr1d-qwen-1.5b"), M=2048, subops=4)
+    r = simulate(g, multilevel_accelerator(64))
+    for mem in ("sram", "dm1", "dm2"):
+        assert r.traces[mem].peak_needed() > 0
+        assert r.traces[mem].peak_needed() <= 64 * 2**20
+    # paper Sec IV-D: multilevel is slower due to data hopping via the SRAM
+    base = simulate(g, baseline_accelerator(128))
+    assert r.total_time > base.total_time
+    assert r.pe_utilization < base.pe_utilization
+
+
+def test_sram_latency_model_matches_paper_points():
+    # paper: 32 ns @ 128 MiB, 22 ns @ 64 MiB
+    assert abs(sram_latency_ns(128 * 2**20) - 32.0) < 2.0
+    assert abs(sram_latency_ns(64 * 2**20) - 22.0) < 2.5
+
+
+def test_per_op_breakdown_covers_all_tags(ds_result):
+    ops = ds_result.ops
+    assert "attn.qk" in ops.compute
+    assert "ffn" in ops.compute
+    for tag, c in ops.compute.items():
+        assert c >= 0
+        assert ops.memory.get(tag, 0) >= 0

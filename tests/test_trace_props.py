@@ -1,0 +1,109 @@
+"""Hypothesis property tests on Stage-II invariants and the trace pipeline."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.banking import (active_bank_seconds, bank_activity,
+                                bank_on_matrix, idle_runs)
+from repro.core.cacti import characterize
+from repro.core.gating import Policy, evaluate
+
+MIB = 2**20
+
+trace_st = st.integers(min_value=1, max_value=200).flatmap(
+    lambda n: st.tuples(
+        st.lists(st.floats(1e-6, 10.0), min_size=n, max_size=n),
+        st.lists(st.integers(0, 256 * MIB), min_size=n, max_size=n)))
+
+cb_st = st.tuples(st.sampled_from([16, 32, 64, 128, 256]),
+                  st.sampled_from([1, 2, 4, 8, 16, 32]))
+
+
+@given(trace_st, cb_st, st.floats(0.1, 1.0))
+@settings(max_examples=60, deadline=None)
+def test_bank_activity_bounds_and_monotonicity(trace, cb, alpha):
+    d, occ = np.asarray(trace[0]), np.asarray(trace[1], np.int64)
+    c_mib, b = cb
+    act = bank_activity(occ, alpha, c_mib * MIB, b)
+    assert (act >= 0).all() and (act <= b).all()
+    # monotone in occupancy
+    order = np.argsort(occ)
+    assert (np.diff(act[order]) >= 0).all()
+    # covers occupancy when not clipped
+    usable = alpha * c_mib * MIB / b
+    unclipped = act < b
+    assert (act[unclipped] * usable >= occ[unclipped] - 1e-6).all()
+
+
+@given(trace_st, cb_st)
+@settings(max_examples=40, deadline=None)
+def test_on_matrix_consistent_with_activity(trace, cb):
+    d, occ = np.asarray(trace[0]), np.asarray(trace[1], np.int64)
+    c_mib, b = cb
+    act = bank_activity(occ, 0.9, c_mib * MIB, b)
+    on = bank_on_matrix(act, b)
+    assert (on.sum(axis=1) == act).all()
+    # banks fill lowest-first: on[:, j] implies on[:, i] for i < j
+    for j in range(1, b):
+        assert (on[:, j] <= on[:, j - 1]).all()
+
+
+@given(trace_st)
+@settings(max_examples=40, deadline=None)
+def test_idle_runs_cover_idle_time_exactly(trace):
+    d = np.asarray(trace[0])
+    on = np.asarray(trace[1], np.int64) % 2 == 0
+    run_d, starts, ends = idle_runs(d, on)
+    assert run_d.sum() == np.float64(d[~on].sum()).round(10).item() or \
+        abs(run_d.sum() - d[~on].sum()) < 1e-6
+    # runs are disjoint and ordered
+    for i in range(1, len(starts)):
+        assert starts[i] >= ends[i - 1]
+
+
+@given(trace_st, cb_st)
+@settings(max_examples=30, deadline=None)
+def test_gating_never_increases_leakage_beyond_none(trace, cb):
+    d, occ = np.asarray(trace[0]), np.asarray(trace[1], np.int64)
+    c_mib, b = cb
+    if c_mib * MIB < occ.max():
+        occ = np.minimum(occ, c_mib * MIB)
+    kw = dict(capacity=c_mib * MIB, banks=b, n_reads=100, n_writes=100)
+    none = evaluate(d, occ, policy=Policy.none(), **kw)
+    gated = evaluate(d, occ, policy=Policy.aggressive(), **kw)
+    # gating is applied only when it passes break-even, so total never worse
+    assert gated.e_leak + gated.e_sw <= none.e_leak * (1 + 1e-9) + 1e-12
+    assert gated.e_dyn == none.e_dyn
+    assert gated.n_transitions >= 0
+
+
+@given(st.sampled_from([16, 32, 64, 128]), st.sampled_from([1, 2, 4, 8, 16]))
+@settings(max_examples=30, deadline=None)
+def test_cacti_surrogate_sanity(c_mib, b):
+    ch = characterize(c_mib * MIB, b)
+    assert ch.area_mm2 > 0
+    assert ch.leak_w_per_bank > 0
+    assert ch.e_read_j > 0 and ch.e_write_j > ch.e_read_j * 0.99
+    assert ch.break_even_s > 0
+    # smaller banks -> lower per-bank leakage
+    if b > 1:
+        assert ch.leak_w_per_bank < characterize(c_mib * MIB, 1).leak_w_per_bank
+
+
+@given(trace_st, st.sampled_from([1, 2, 4, 8, 16, 32]))
+@settings(max_examples=30, deadline=None)
+def test_bank_energy_kernel_matches_numpy_reference(trace, b):
+    """Pallas bank_energy (interpret mode) == banking.py reference math."""
+    from repro.kernels.bank_energy import bank_activity_stats
+    d = np.asarray(trace[0], np.float32)
+    occ = np.asarray(trace[1], np.float32)
+    cap = 128 * MIB
+    alpha = 0.9
+    out = np.asarray(bank_activity_stats(
+        d, occ, np.asarray([alpha * cap / b], np.float32),
+        np.asarray([float(b)], np.float32), backend="interpret",
+        block_s=64))
+    act = bank_activity(occ.astype(np.int64), alpha, cap, b)
+    expect_seconds = active_bank_seconds(d, act)
+    expect_trans = np.abs(np.diff(act.astype(np.float64))).sum()
+    assert abs(out[0, 0] - expect_seconds) <= max(1e-3 * expect_seconds, 1e-3)
+    assert abs(out[0, 1] - expect_trans) <= 1e-3 * max(expect_trans, 1.0)
