@@ -1,0 +1,47 @@
+"""Traffic-campaign benchmarks: trace generation throughput and the
+vectorized candidate-grid evaluation path."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import timed
+from repro.configs import get_arch
+from repro.traffic import LengthModel, generate, simulate_traffic
+from repro.traffic.campaign import fast_candidate_energies
+
+MIB = 2**20
+
+
+def bench_traffic_trace():
+    """Occupancy-trace construction for one 60 s GQA scenario."""
+    cfg = get_arch("dsr1d-qwen-1.5b")
+    reqs = generate("poisson", 4.0, 60.0, seed=0,
+                    lengths=LengthModel(max_len=1024))
+
+    def run():
+        return simulate_traffic(cfg, reqs, num_slots=8, max_len=1024)
+
+    sim, us = timed(run)
+    return us, (f"events={len(sim.trace.ev_times)} "
+                f"peak={sim.trace.peak_needed()/MIB:.1f}MiB")
+
+
+def bench_traffic_fast_grid():
+    """Jit'd (C x B) candidate grid on a resampled traffic trace — the
+    thousand-scenario campaign inner loop."""
+    cfg = get_arch("dsr1d-qwen-1.5b")
+    reqs = generate("bursty", 4.0, 60.0, seed=0,
+                    lengths=LengthModel(max_len=1024))
+    sim = simulate_traffic(cfg, reqs, num_slots=8, max_len=1024)
+    trace = sim.trace.resampled(0.05, sim.total_time)
+    dur, occ = trace.occupancy_series(sim.total_time, use="needed")
+    caps = list(range(32, 256 + 1, 16))
+    banks = [1, 2, 4, 8, 16, 32]
+    kw = dict(capacities_mib=caps, banks=banks, alpha=0.9,
+              n_reads=sim.bundle.access.n_reads("kv"),
+              n_writes=sim.bundle.access.n_writes("kv"), backend="ref")
+
+    fast_candidate_energies(dur, occ, **kw)       # compile
+    out, us = timed(fast_candidate_energies, dur, occ, **kw)
+    return us, (f"candidates={len(out)} segs={len(dur)} "
+                f"best={np.min(out)*1e3:.1f}mJ")

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# CI entrypoint: deps + tier-1 suite + a <60 s traffic-campaign smoke run.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install -q -e ".[test]"
+
+# tier-1 (ROADMAP.md)
+PYTHONPATH=src python -m pytest -x -q
+
+# traffic-campaign smoke: small grid, CPU jnp backend, must stay under a minute
+PYTHONPATH=src timeout 60 python -m repro.launch.traffic \
+    --model dsr1d_qwen_1_5b --arrival poisson --rate 2 --seed 0 \
+    --horizon 6 --slots 4 --max-len 512 --banks 1 8 --fast-backend ref \
+    > /tmp/traffic_smoke.out
+grep -q "online controller vs offline oracle" /tmp/traffic_smoke.out
+grep -q "dsr1d-qwen-1.5b" /tmp/traffic_smoke.out
+grep -q "gpt2-xl" /tmp/traffic_smoke.out
+echo "ci: OK"

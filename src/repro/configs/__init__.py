@@ -2,7 +2,7 @@
 from repro.configs.base import (
     ArchConfig, MoEConfig, SSMConfig, RGLRUConfig, FrontendConfig,
     ShapeConfig, SHAPES, LONG_CONTEXT_OK,
-    get_arch, list_archs, reduced, register, shape_supported,
+    get_arch, list_archs, reduced, register, resolve_arch, shape_supported,
 )
 
 # Assigned architectures (10)
@@ -31,5 +31,6 @@ PAPER_ARCHS = ("gpt2-xl", "dsr1d-qwen-1.5b")
 __all__ = [
     "ArchConfig", "MoEConfig", "SSMConfig", "RGLRUConfig", "FrontendConfig",
     "ShapeConfig", "SHAPES", "LONG_CONTEXT_OK", "get_arch", "list_archs",
-    "reduced", "register", "shape_supported", "ASSIGNED_ARCHS", "PAPER_ARCHS",
+    "reduced", "register", "resolve_arch", "shape_supported",
+    "ASSIGNED_ARCHS", "PAPER_ARCHS",
 ]

@@ -280,6 +280,22 @@ def get_arch(name: str) -> ArchConfig:
     return _REGISTRY[name]
 
 
+def resolve_arch(name: str) -> ArchConfig:
+    """`get_arch` that also accepts module-style spellings: separators and
+    case are ignored, so "dsr1d_qwen_1_5b" == "dsr1d-qwen-1.5b"."""
+    from repro import configs as _c  # noqa: F401
+    if name in _REGISTRY:
+        return _REGISTRY[name]
+
+    def canon(s: str) -> str:
+        return "".join(ch for ch in s.lower() if ch.isalnum())
+
+    matches = [k for k in _REGISTRY if canon(k) == canon(name)]
+    if len(matches) != 1:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[matches[0]]
+
+
 def list_archs() -> list:
     from repro import configs as _c  # noqa: F401
     return sorted(_REGISTRY)

@@ -9,15 +9,22 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core.gating import GatingResult, Policy, evaluate
 from repro.sim.engine import SimResult
+from repro.sim.trace import TraceBundle
 
 MIB = 2**20
 DEFAULT_BANKS = (1, 2, 4, 8, 16, 32)
+
+# Anything exposing .graph_name / .total_time / .traces / .access satisfies
+# Stage II's input contract: the cycle-level SimResult, or an externally built
+# TraceBundle (serving-traffic simulator, instrumented ContinuousBatcher,
+# replayed production logs).
+TraceSource = Union[SimResult, TraceBundle]
 
 
 @dataclass
@@ -66,13 +73,14 @@ def min_capacity_mib(peak_needed_bytes: int, step_mib: int = 16) -> int:
     return step_mib * math.ceil(peak_needed_bytes / (step_mib * MIB))
 
 
-def sweep(sim: SimResult, *, mem_name: str = "sram",
+def sweep(sim: TraceSource, *, mem_name: str = "sram",
           capacities_mib: Optional[Sequence[int]] = None,
           banks: Sequence[int] = DEFAULT_BANKS,
           policy: Optional[Policy] = None,
           max_capacity_mib: int = 128,
           occupancy_kind: str = "needed") -> SweepTable:
-    """Sweep (C, B) for one memory of one Stage-I run.
+    """Sweep (C, B) for one memory of one Stage-I run (or any TraceSource —
+    e.g. a traffic-generated TraceBundle with mem_name="kv").
 
     `occupancy_kind="needed"`: only retention-required bytes pin banks —
     obsolete data needs no retention, so its banks are gate-eligible (this is
@@ -119,7 +127,7 @@ def pareto_points(tables: Sequence[SweepTable]):
     return pts
 
 
-def alpha_sensitivity(sim: SimResult, *, capacity_mib: int, banks: int,
+def alpha_sensitivity(sim: TraceSource, *, capacity_mib: int, banks: int,
                       alphas: Sequence[float] = (1.0, 0.9, 0.75, 0.5),
                       mem_name: str = "sram") -> Dict[float, GatingResult]:
     """Fig.-8 support: how alpha moves bank activity / energy at fixed (C,B)."""

@@ -1,0 +1,153 @@
+"""Serving-traffic campaign CLI — traffic as a first-class TRAPTI workload.
+
+Sweeps traffic intensity x model x (C, B) and reports online-controller vs
+offline-oracle vs no-gating energy under *identical* request streams, plus a
+Stage-II banking sweep run directly on the traffic-generated trace. The MHA
+reference (gpt2-xl) is always included next to the requested models, so every
+report carries the paper's MHA-vs-GQA comparison under load.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.traffic \
+        --model dsr1d_qwen_1_5b --arrival poisson --rate 4 --seed 0
+    PYTHONPATH=src python -m repro.launch.traffic \
+        --arrival bursty --rate 2 8 --horizon 20 --json out.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import resolve_arch
+from repro.core.explorer import MIB, sweep
+from repro.traffic.campaign import DEFAULT_BANKS, CampaignReport, run_campaign
+from repro.traffic.controller import ControllerConfig
+from repro.traffic.generators import LengthModel
+
+MHA_REFERENCE = "gpt2-xl"
+
+
+def build_report_dict(report: CampaignReport) -> dict:
+    rows = []
+    for r in report.rows:
+        c = r.comparison
+        rows.append({
+            "arch": r.scenario.arch, "arrival": r.scenario.arrival,
+            "rate": r.scenario.rate, "seed": r.scenario.seed,
+            "capacity_mib": r.capacity_mib, "banks": r.banks,
+            "peak_mib": r.peak_mib, "mean_mib": r.mean_mib,
+            "e_none_j": c.none.e_total, "e_oracle_j": c.oracle.e_total,
+            "e_online_j": c.online.e_total,
+            "online_vs_none_pct": c.online_vs_none_pct,
+            "online_vs_oracle_pct": c.online_vs_oracle_pct,
+            "wake_violations": c.online.wake_violations,
+            "stall_s": c.online.stall_s,
+            "p95_latency_s": r.p95_latency_s,
+        })
+    return {"rows": rows}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", nargs="+", default=["dsr1d-qwen-1.5b"],
+                    help="arch name(s); '_' spellings accepted "
+                         "(dsr1d_qwen_1_5b == dsr1d-qwen-1.5b)")
+    ap.add_argument("--arrival", nargs="+", default=["poisson"],
+                    choices=["poisson", "bursty", "diurnal"])
+    ap.add_argument("--rate", nargs="+", type=float, default=[4.0],
+                    help="mean request rate(s) [req/s]")
+    ap.add_argument("--seed", nargs="+", type=int, default=[0])
+    ap.add_argument("--horizon", type=float, default=30.0)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=1024)
+    ap.add_argument("--capacity", nargs="+", type=int, default=None,
+                    help="capacities [MiB]; default: derived from each "
+                         "trace's peak")
+    ap.add_argument("--banks", nargs="+", type=int,
+                    default=list(DEFAULT_BANKS))
+    ap.add_argument("--alpha", type=float, default=0.9)
+    ap.add_argument("--hysteresis", type=float, default=2.0,
+                    help="online gate-off threshold, x break-even time")
+    ap.add_argument("--resample-dt", type=float, default=None,
+                    help="coarsen traces to this grid [s] before evaluation")
+    ap.add_argument("--no-mha-ref", action="store_true",
+                    help="skip the always-on gpt2-xl MHA reference")
+    ap.add_argument("--fast-backend", default="auto",
+                    choices=["auto", "ref", "pallas", "interpret"])
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+
+    try:
+        archs = [resolve_arch(m).name for m in args.model]
+    except KeyError as e:
+        ap.error(str(e))
+    if not args.no_mha_ref and MHA_REFERENCE not in archs:
+        archs = [MHA_REFERENCE] + archs
+    # dedupe, keep order
+    archs = list(dict.fromkeys(archs))
+
+    print(f"traffic campaign: models={archs} arrivals={args.arrival} "
+          f"rates={args.rate} seeds={args.seed} horizon={args.horizon}s "
+          f"slots={args.slots} max_len={args.max_len}")
+
+    report = run_campaign(
+        archs, arrivals=args.arrival, rates=args.rate, seeds=args.seed,
+        horizon_s=args.horizon, num_slots=args.slots, max_len=args.max_len,
+        capacities_mib=args.capacity, banks=args.banks,
+        ctrl=ControllerConfig(alpha=args.alpha,
+                              hysteresis_multiple=args.hysteresis),
+        lengths=LengthModel(max_len=args.max_len),
+        resample_dt=args.resample_dt, fast_backend=args.fast_backend)
+
+    print("\n# online controller vs offline oracle vs no gating")
+    print(report.format())
+    if not report.rows:
+        print("  (no rows: every requested --capacity sits below the traffic "
+              "peak; drop --capacity to derive it from the trace)")
+
+    print("\n# best (C, B) per scenario by online energy")
+    for r in sorted(report.best_per_scenario(),
+                    key=lambda r: (r.scenario.traffic_key, r.scenario.arch)):
+        c = r.comparison
+        print(f"  {r.scenario.arch:>20} {r.scenario.arrival}@"
+              f"{r.scenario.rate:g}/s seed={r.scenario.seed}: "
+              f"C={r.capacity_mib} MiB B={r.banks}  peak={r.peak_mib:.1f} MiB  "
+              f"{c.format()}")
+
+    # ---- MHA vs GQA headline under identical traffic ------------------------
+    # group best rows by traffic key so each comparison really uses the same
+    # request stream for both architectures
+    by_traffic = {}
+    for r in report.best_per_scenario():
+        by_traffic.setdefault(r.scenario.traffic_key, {})[r.scenario.arch] = r
+    for tkey, by_arch in sorted(by_traffic.items()):
+        ref = by_arch.get(MHA_REFERENCE)
+        if ref is None or len(by_arch) < 2:
+            continue
+        for a, r in sorted(by_arch.items()):
+            if a == MHA_REFERENCE:
+                continue
+            print(f"\n# {a} vs {MHA_REFERENCE} under identical traffic "
+                  f"({tkey[0]}@{tkey[1]:g}/s seed={tkey[2]}): "
+                  f"peak {ref.peak_mib / max(r.peak_mib, 1e-9):.2f}x lower, "
+                  f"online energy {ref.e_online / max(r.e_online, 1e-12):.2f}x"
+                  f" lower")
+
+    # ---- Stage II runs unmodified on the traffic trace ----------------------
+    print("\n# Stage-II sweep() on the traffic-generated trace")
+    for (arch, tkey), sim in report.sims.items():
+        if arch != archs[-1]:
+            continue
+        table = sweep(sim.bundle, mem_name="kv",
+                      max_capacity_mib=max(
+                          128, int(sim.trace.peak_needed() / MIB) + 16))
+        print(table.format())
+        break
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(build_report_dict(report), f, indent=1)
+        print(f"\nwrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

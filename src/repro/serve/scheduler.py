@@ -28,6 +28,51 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.sim.trace import AccessStats, OccupancyTrace, TraceBundle
+
+
+# ---------------------------------------------------------------------------
+# KV-cache geometry (shared by the batcher's trace emission and the analytic
+# traffic simulator in repro.traffic.occupancy)
+# ---------------------------------------------------------------------------
+
+def slot_state_bytes(cfg) -> int:
+    """Sequence-length-independent per-slot state (SSM + RG-LRU blocks)."""
+    total = 0
+    kinds = cfg.layer_kinds()
+    if cfg.ssm is not None:
+        s = cfg.ssm
+        n_ssm = sum(1 for k in kinds if k == "ssm")
+        total += s.num_heads(cfg.d_model) * s.head_dim * s.state_dim * 4 * n_ssm
+    if cfg.rglru is not None:
+        r = cfg.rglru
+        w = r.lru_width(cfg.d_model)
+        n_rg = sum(1 for k in kinds if k == "rglru")
+        # fp32 recurrent state + the causal-conv tail window (fp16)
+        total += n_rg * (w * 4 + r.conv_width * w * 2)
+    return total
+
+
+def kv_bytes_at(cfg, pos: int, kv_dtype_bytes: int = 2) -> int:
+    """KV-cache bytes held by ONE sequence at context length `pos`.
+
+    Full-attention layers grow linearly; sliding-window layers saturate at
+    `local_window` tokens; SSM/RG-LRU blocks contribute nothing here (their
+    fixed state is `slot_state_bytes`). This is the per-request curve the
+    paper's time-resolved occupancy analysis composes over a batch."""
+    per_full = 0
+    per_local = 0
+    for kind in cfg.layer_kinds():
+        if kind == "full":
+            per_full += 1
+        elif kind in ("local", "chunked") and cfg.local_window:
+            per_local += 1
+    row = 2 * cfg.kv_dim * kv_dtype_bytes            # K + V for one token
+    total = per_full * pos * row
+    if per_local:
+        total += per_local * min(cfg.local_window, pos) * row
+    return total
+
 
 @dataclass
 class Request:
@@ -52,13 +97,24 @@ class SchedulerStats:
     decode_steps: int = 0
     prefills: int = 0
     peak_active_slots: int = 0
+    admitted_kv_bytes: int = 0
+    retired_kv_bytes: int = 0
 
 
 class ContinuousBatcher:
-    """FCFS continuous batching over `num_slots` decode slots."""
+    """FCFS continuous batching over `num_slots` decode slots.
+
+    When the model carries an `ArchConfig` (`model.cfg`), the batcher also
+    emits a time-resolved slot-occupancy trace: every admission, decoded
+    token, and retirement becomes an `OccupancyTrace` event on a logical
+    clock (`step_time_s` per decode iteration, `prefill_tok_s` per prefilled
+    token), so the live serving engine produces the exact Stage-I artifact
+    that `core.explorer.sweep` / `core.gating.evaluate` consume offline.
+    """
 
     def __init__(self, model, params, *, num_slots: int = 4,
-                 max_len: int = 128):
+                 max_len: int = 128, kv_dtype_bytes: int = 2,
+                 step_time_s: float = 1e-3, prefill_tok_s: float = 5e-5):
         self.model = model
         self.params = params
         self.num_slots = num_slots
@@ -78,6 +134,21 @@ class ContinuousBatcher:
         self._caches: List[Any] = [None] * num_slots
         self._next_tok: List[Optional[int]] = [None] * num_slots
 
+        # ---- slot-occupancy trace (logical clock) -------------------------
+        self.cfg = getattr(model, "cfg", None)
+        self.kv_dtype_bytes = kv_dtype_bytes
+        self.step_time_s = step_time_s
+        self.prefill_tok_s = prefill_tok_s
+        self._sim_t = 0.0
+        self._slot_bytes = [0] * num_slots           # resident KV per slot
+        self._slot_ctx = [0] * num_slots             # context length per slot
+        cap = 0
+        if self.cfg is not None:
+            cap = num_slots * (kv_bytes_at(self.cfg, max_len, kv_dtype_bytes)
+                               + slot_state_bytes(self.cfg))
+        self.trace = OccupancyTrace("kv", cap)
+        self.access = AccessStats()
+
     # ------------------------------------------------------------ client API
     def submit(self, req: Request) -> None:
         req.submitted_s = time.perf_counter()
@@ -88,12 +159,33 @@ class ContinuousBatcher:
         for _ in range(max_steps):
             if not self.queue and all(s is None for s in self.slots):
                 break
-            self._admit()
+            self._admit(done)
             self._step(done)
         return done
 
+    def occupancy_bundle(self) -> TraceBundle:
+        """The Stage-II view of this serving run: feed to explorer.sweep()."""
+        if self.cfg is None:
+            raise ValueError("model carries no ArchConfig; no trace emitted")
+        return TraceBundle(graph_name=f"{self.cfg.name}-serve",
+                           total_time=max(self._sim_t, self.step_time_s),
+                           traces={"kv": self.trace}, access=self.access)
+
     # ------------------------------------------------------------- internals
-    def _admit(self) -> None:
+    def _retire(self, i: int, req: Request, done: List[Request]) -> None:
+        req.finished_s = time.perf_counter()
+        done.append(req)
+        self.slots[i] = None
+        self._caches[i] = None
+        self._next_tok[i] = None
+        self.stats.finished += 1
+        if self._slot_bytes[i]:
+            self.trace.event(self._sim_t, -self._slot_bytes[i], 0)
+            self.stats.retired_kv_bytes += self._slot_bytes[i]
+        self._slot_bytes[i] = 0
+        self._slot_ctx[i] = 0
+
+    def _admit(self, done: List[Request]) -> None:
         for i in range(self.num_slots):
             if self.slots[i] is not None or not self.queue:
                 continue
@@ -107,14 +199,32 @@ class ContinuousBatcher:
             req.output.append(tok)
             self.stats.admitted += 1
             self.stats.prefills += 1
-        self.stats.peak_active_slots = max(
-            self.stats.peak_active_slots,
-            sum(s is not None for s in self.slots))
+            self.stats.peak_active_slots = max(
+                self.stats.peak_active_slots,
+                sum(s is not None for s in self.slots))
+            # trace: the prefill writes the whole prompt's KV into the slot
+            # (clamped to the jitted cache bound, like the cache itself)
+            ctx = min(int(len(req.tokens)), self.max_len)
+            self._sim_t += ctx * self.prefill_tok_s
+            if self.cfg is not None:
+                b = (kv_bytes_at(self.cfg, ctx, self.kv_dtype_bytes)
+                     + slot_state_bytes(self.cfg))
+                self._slot_bytes[i] = b
+                self._slot_ctx[i] = ctx
+                self.trace.event(self._sim_t, b, 0)
+                self.access.add_write("kv", b)
+                self.stats.admitted_kv_bytes += b
+            # the prefill already produced the first new token: retire now if
+            # it satisfies the request (counts against max_new_tokens / EOS)
+            if (req.max_new_tokens <= 1
+                    or (req.eos_id is not None and tok == req.eos_id)):
+                self._retire(i, req, done)
 
     def _step(self, done: List[Request]) -> None:
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return
+        self._sim_t += self.step_time_s
         for i in active:
             req = self.slots[i]
             tok = jnp.asarray([[self._next_tok[i]]], jnp.int32)
@@ -124,34 +234,36 @@ class ContinuousBatcher:
             req.output.append(nxt)
             self._next_tok[i] = nxt
             self.stats.decode_steps += 1
+            if self.cfg is not None:
+                # attention reads the whole resident KV, then appends one row
+                # (the bounded cache stops growing at max_len)
+                ctx = self._slot_ctx[i]
+                self.access.add_read("kv", self._slot_bytes[i])
+                nxt_ctx = min(ctx + 1, self.max_len)
+                d = (kv_bytes_at(self.cfg, nxt_ctx, self.kv_dtype_bytes)
+                     - kv_bytes_at(self.cfg, ctx, self.kv_dtype_bytes))
+                self._slot_ctx[i] = nxt_ctx
+                if d:
+                    self._slot_bytes[i] += d
+                    self.trace.event(self._sim_t, d, 0)
+                    self.access.add_write("kv", d)
+                    self.stats.admitted_kv_bytes += d
             hit_eos = req.eos_id is not None and nxt == req.eos_id
             if hit_eos or len(req.output) >= req.max_new_tokens:
-                req.finished_s = time.perf_counter()
-                done.append(req)
-                self.slots[i] = None
-                self._caches[i] = None
-                self._next_tok[i] = None
-                self.stats.finished += 1
+                self._retire(i, req, done)
 
 
 def kv_slot_budget(cfg, hbm_bytes: float, max_len: int,
                    weight_dtype_bytes: int = 2,
-                   kv_dtype_bytes: int = 2) -> int:
+                   kv_dtype_bytes: int = 2) -> Optional[int]:
     """How many concurrent sequences fit a given HBM budget — the serving
     reading of the paper's KV-occupancy analysis. GQA divides the per-slot
-    bytes by H/K vs MHA."""
+    bytes by H/K vs MHA.
+
+    Returns ``None`` when the architecture holds no per-sequence state at all
+    (stateless w.r.t. context): concurrency is then unbounded by memory."""
     weights = cfg.param_count() * weight_dtype_bytes
-    per_slot = 0
-    for kind in cfg.layer_kinds():
-        if kind in ("full",):
-            per_slot += 2 * max_len * cfg.kv_dim * kv_dtype_bytes
-        elif kind in ("local", "chunked") and cfg.local_window:
-            per_slot += 2 * min(cfg.local_window, max_len) * cfg.kv_dim \
-                * kv_dtype_bytes
-    if cfg.ssm is not None:
-        s = cfg.ssm
-        per_slot += (s.num_heads(cfg.d_model) * s.head_dim * s.state_dim * 4
-                     * cfg.num_layers)
+    per_slot = kv_bytes_at(cfg, max_len, kv_dtype_bytes) + slot_state_bytes(cfg)
     if per_slot == 0:
-        return 10**9
+        return None
     return max(0, int((hbm_bytes - weights) // per_slot))

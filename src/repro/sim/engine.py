@@ -386,14 +386,31 @@ def find_min_sram(graph: WorkloadGraph, accel: AcceleratorConfig,
                   lo_mib: int = 8, hi_mib: int = 256,
                   step_mib: int = 16) -> Tuple[int, SimResult]:
     """Paper's blue loop: smallest SRAM (stepped) with zero capacity-induced
-    write-backs; returns (capacity_mib, result at that capacity)."""
-    best = None
-    for mib in range(lo_mib, hi_mib + 1, step_mib):
-        res = simulate(graph, accel.with_sram_capacity(mib * 2**20))
-        if res.writebacks == 0:
-            best = (mib, res)
-            break
-    if best is None:
-        res = simulate(graph, accel.with_sram_capacity(hi_mib * 2**20))
-        best = (hi_mib, res)
-    return best
+    write-backs; returns (capacity_mib, result at that capacity).
+
+    Write-back count is monotone non-increasing in capacity (a larger SRAM
+    strictly relaxes the eviction pressure under the same schedule), so the
+    grid scan is a bisection: O(log n) simulations instead of O(n). The
+    premise is exact for the "fifo" scheduler used here; capacity-dependent
+    timing can in principle reorder a "mempeak" schedule, where this remains
+    a first-order assumption."""
+    grid = list(range(lo_mib, hi_mib + 1, step_mib)) or [lo_mib]
+    if grid[-1] != hi_mib:
+        grid.append(hi_mib)          # always probe the stated upper bound
+    results: Dict[int, SimResult] = {}
+
+    def run(mib: int) -> SimResult:
+        if mib not in results:
+            results[mib] = simulate(graph, accel.with_sram_capacity(mib * 2**20))
+        return results[mib]
+
+    lo, hi = 0, len(grid) - 1
+    if run(grid[hi]).writebacks > 0:          # even the largest still spills
+        return grid[hi], run(grid[hi])
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if run(grid[mid]).writebacks == 0:
+            hi = mid
+        else:
+            lo = mid + 1
+    return grid[lo], run(grid[lo])

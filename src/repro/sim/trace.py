@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -76,6 +76,53 @@ class OccupancyTrace:
         dur, n, o, tot = self.segments(end_time)
         return dur, (n if use == "needed" else tot)
 
+    # ------------------------------------------------------- transformations
+    def merged(self, *others: "OccupancyTrace",
+               mem_name: Optional[str] = None) -> "OccupancyTrace":
+        """Superpose delta-event streams from several traces (e.g. per-tenant
+        occupancy curves) into one. Exact: deltas commute under the stable
+        time sort performed by `as_arrays`."""
+        out = OccupancyTrace(mem_name or self.mem_name,
+                             self.capacity + sum(t.capacity for t in others))
+        for tr in (self, *others):
+            out.ev_times.extend(tr.ev_times)
+            out.ev_dneeded.extend(tr.ev_dneeded)
+            out.ev_dobsolete.extend(tr.ev_dobsolete)
+        return out
+
+    def resampled(self, dt: float, end_time: float) -> "OccupancyTrace":
+        """Snap the step function to a uniform `dt` grid (right-edge sample).
+
+        Bounds the segment count to ~end_time/dt regardless of event density
+        — the knob that keeps thousand-scenario campaign sweeps inside a
+        fixed jit-padded shape. Peak occupancy is preserved up to the grid
+        resolution (each grid cell reports its last value, so short spikes
+        inside a cell may be clipped; choose dt accordingly)."""
+        if dt <= 0:
+            raise ValueError(f"dt must be positive, got {dt}")
+        t, n, o = self.as_arrays()
+        out = OccupancyTrace(self.mem_name, self.capacity)
+        if len(t) == 0:
+            return out
+        grid = np.arange(0.0, max(end_time, t[-1]) + dt, dt)
+        # value in force at each grid edge (step function is right-continuous)
+        idx = np.searchsorted(t, grid, side="right") - 1
+        gn = np.where(idx >= 0, n[np.maximum(idx, 0)], 0)
+        go = np.where(idx >= 0, o[np.maximum(idx, 0)], 0)
+        prev_n = prev_o = 0
+        for g, vn, vo in zip(grid, gn, go):
+            out.event(float(g), int(vn - prev_n), int(vo - prev_o))
+            prev_n, prev_o = int(vn), int(vo)
+        return out
+
+
+def merge_traces(traces: Sequence["OccupancyTrace"],
+                 mem_name: str = "merged") -> "OccupancyTrace":
+    """Module-level convenience over `OccupancyTrace.merged`."""
+    if not traces:
+        return OccupancyTrace(mem_name, 0)
+    return traces[0].merged(*traces[1:], mem_name=mem_name)
+
 
 @dataclass
 class AccessStats:
@@ -94,6 +141,23 @@ class AccessStats:
 
     def n_writes(self, mem: str) -> int:
         return -(-self.writes_bytes.get(mem, 0) // self.access_width)
+
+
+@dataclass
+class TraceBundle:
+    """The minimal Stage-I artifact contract consumed by Stage II.
+
+    `sim.engine.SimResult` satisfies it structurally; this lightweight form
+    lets externally built traces — the analytic traffic simulator, an
+    instrumented `ContinuousBatcher`, or a replayed production log — flow
+    into `core.explorer.sweep` / `core.gating.evaluate` unchanged."""
+    graph_name: str
+    total_time: float
+    traces: Dict[str, "OccupancyTrace"]
+    access: "AccessStats"
+
+    def peak_needed(self, mem: str = "kv") -> int:
+        return self.traces[mem].peak_needed()
 
 
 @dataclass

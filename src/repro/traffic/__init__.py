@@ -1,0 +1,18 @@
+"""Serving-traffic subsystem: multi-tenant KV occupancy as a Stage-I workload.
+
+`generators` draws seeded request streams, `occupancy` composes them into
+time-resolved occupancy traces (Stage-II compatible via `sim.trace.TraceBundle`),
+`controller` runs the online power-gating policy against the live trace, and
+`campaign` sweeps traffic intensity x model x (C, B) grids.
+"""
+from repro.traffic.generators import (LengthModel, RequestSpec, bursty,  # noqa: F401
+                                      diurnal, generate, poisson, replay)
+from repro.traffic.occupancy import (TimingModel, TrafficSim,  # noqa: F401
+                                     TrafficStats, simulate_traffic,
+                                     utilization_summary)
+from repro.traffic.controller import (ControllerComparison,  # noqa: F401
+                                      ControllerConfig, OnlineResult, compare,
+                                      simulate_online)
+from repro.traffic.campaign import (CampaignReport, CampaignRow,  # noqa: F401
+                                    Scenario, fast_candidate_energies,
+                                    run_campaign, run_scenario)

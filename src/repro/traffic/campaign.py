@@ -1,0 +1,224 @@
+"""Traffic campaigns: intensity x model x (C, B, policy) sweeps + Pareto.
+
+Two evaluation paths over the same traffic-generated occupancy traces:
+
+  * exact     — `controller.compare` per (C, B): online timeout controller
+                vs offline oracle vs no-gating, with wake-latency violations.
+  * fast grid — the whole (C x B) candidate grid in one jit'd call through
+                `kernels.bank_energy.bank_activity_stats` (Pallas on TPU,
+                jnp reference elsewhere). Models ideal gating (a bank leaks
+                only while required; each on/off toggle pays half a
+                transition pair), which lower-bounds the oracle — the right
+                objective for pruning thousand-scenario campaigns in
+                seconds before exact re-evaluation of the survivors.
+
+Traces are resampled onto a uniform grid before the fast path so every
+scenario shares one padded segment shape (one compilation, batched sweep).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs import resolve_arch
+from repro.core.cacti import characterize
+from repro.core.explorer import DEFAULT_BANKS, MIB, min_capacity_mib  # noqa: F401 (re-exported)
+from repro.kernels.bank_energy import bank_activity_stats, candidate_grid
+from repro.traffic.controller import ControllerComparison, ControllerConfig, \
+    compare
+from repro.traffic.generators import LengthModel, generate
+from repro.traffic.occupancy import TrafficSim, simulate_traffic, \
+    utilization_summary
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One cell of the campaign grid (arch x traffic point)."""
+    arch: str
+    arrival: str = "poisson"
+    rate: float = 4.0
+    seed: int = 0
+    horizon_s: float = 30.0
+    num_slots: int = 8
+    max_len: int = 2048
+
+    @property
+    def traffic_key(self) -> Tuple:
+        """Scenarios sharing this key see byte-identical request streams."""
+        return (self.arrival, self.rate, self.seed, self.horizon_s)
+
+
+@dataclass
+class CampaignRow:
+    scenario: Scenario
+    capacity_mib: int
+    banks: int
+    comparison: ControllerComparison
+    peak_mib: float
+    mean_mib: float
+    p95_latency_s: float
+
+    @property
+    def e_online(self) -> float:
+        return self.comparison.online.e_total
+
+    @property
+    def e_oracle(self) -> float:
+        return self.comparison.oracle.e_total
+
+    @property
+    def e_none(self) -> float:
+        return self.comparison.none.e_total
+
+
+@dataclass
+class CampaignReport:
+    rows: List[CampaignRow] = field(default_factory=list)
+    fast_grid: Dict[Tuple, np.ndarray] = field(default_factory=dict)
+    sims: Dict[Tuple, TrafficSim] = field(default_factory=dict)
+
+    def best_per_scenario(self) -> List[CampaignRow]:
+        best: Dict[Tuple, CampaignRow] = {}
+        for r in self.rows:
+            k = (r.scenario.arch, r.scenario.traffic_key)
+            if k not in best or r.e_online < best[k].e_online:
+                best[k] = r
+        return list(best.values())
+
+    def pareto_points(self) -> List[Tuple[float, float, str, int, int]]:
+        """(area, online energy, arch, C, B) — the Fig.-9 scatter under
+        traffic instead of a single inference."""
+        return [(r.comparison.online.gating.area_mm2, r.e_online,
+                 r.scenario.arch, r.capacity_mib, r.banks)
+                for r in self.rows]
+
+    def format(self) -> str:
+        lines = [f"{'arch':>20} {'arrival':>8} {'rate':>5} {'C':>5} {'B':>3} "
+                 f"{'peak':>7} {'E_none':>8} {'E_oracle':>9} {'E_online':>9} "
+                 f"{'dNone%':>7} {'dOrcl%':>7} {'wakes':>6} {'p95[s]':>7}"]
+        for r in self.rows:
+            c = r.comparison
+            lines.append(
+                f"{r.scenario.arch:>20} {r.scenario.arrival:>8} "
+                f"{r.scenario.rate:>5.1f} {r.capacity_mib:>5} {r.banks:>3} "
+                f"{r.peak_mib:>6.1f}M {r.e_none*1e3:>8.1f} "
+                f"{r.e_oracle*1e3:>9.1f} {r.e_online*1e3:>9.1f} "
+                f"{c.online_vs_none_pct:>+7.1f} {c.online_vs_oracle_pct:>+7.1f} "
+                f"{c.online.wake_violations:>6} {r.p95_latency_s:>7.2f}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized fast path
+# ---------------------------------------------------------------------------
+
+def fast_candidate_energies(durations: np.ndarray, occupancy: np.ndarray, *,
+                            capacities_mib: Sequence[int],
+                            banks: Sequence[int], alpha: float,
+                            n_reads: int, n_writes: int,
+                            backend: str = "auto") -> np.ndarray:
+    """Per-candidate energy lower bound for every (C, B) in one jit call.
+
+    Returns shape (len(capacities) * len(banks),) J, ordered like
+    `candidate_grid` (C-major): dynamic energy + leakage of the banks the
+    occupancy *requires* per segment. Switch energy is deliberately excluded
+    — charging it per idle run can exceed what any threshold policy pays on
+    sub-break-even runs, which would break the bound. Without it the value
+    is a true lower bound on `gating.evaluate` under every policy (required
+    leakage and dynamic accesses are unavoidable, switching is >= 0), which
+    is what makes it safe for pruning."""
+    caps = [int(c * MIB) for c in capacities_mib]
+    usable, nb, meta = candidate_grid(caps, banks, alpha)
+    stats = np.asarray(bank_activity_stats(
+        np.asarray(durations, np.float32), np.asarray(occupancy, np.float32),
+        usable, nb, backend=backend))
+    out = np.zeros(len(meta))
+    for i, (cap, b) in enumerate(meta):
+        ch = characterize(cap, b)
+        e_dyn = n_reads * ch.e_read_j + n_writes * ch.e_write_j
+        out[i] = e_dyn + ch.leak_w_per_bank * float(stats[i, 0])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Campaign driver
+# ---------------------------------------------------------------------------
+
+def run_scenario(scn: Scenario, *, capacities_mib: Optional[Sequence[int]],
+                 banks: Sequence[int], ctrl: ControllerConfig,
+                 lengths: Optional[LengthModel] = None,
+                 resample_dt: Optional[float] = None,
+                 fast_backend: str = "auto") -> Tuple[
+                     TrafficSim, List[CampaignRow], np.ndarray]:
+    """Simulate one scenario's traffic, then evaluate its (C, B) grid."""
+    cfg = resolve_arch(scn.arch)
+    lengths = lengths or LengthModel(max_len=scn.max_len)
+    reqs = generate(scn.arrival, scn.rate, scn.horizon_s, seed=scn.seed,
+                    lengths=lengths)
+    sim = simulate_traffic(cfg, reqs, num_slots=scn.num_slots,
+                           max_len=scn.max_len)
+    trace = sim.trace
+    if resample_dt:
+        trace = trace.resampled(resample_dt, sim.total_time)
+    dur, occ = trace.occupancy_series(sim.total_time, use="needed")
+    n_r = sim.bundle.access.n_reads("kv")
+    n_w = sim.bundle.access.n_writes("kv")
+    peak = trace.peak_needed()
+
+    if capacities_mib is None:
+        lo = max(min_capacity_mib(peak), 16)
+        capacities_mib = sorted({lo, 2 * lo})
+
+    util = utilization_summary(sim)
+    rows: List[CampaignRow] = []
+    for c_mib in capacities_mib:
+        cap = int(c_mib * MIB)
+        if cap < peak:
+            continue
+        for b in banks:
+            cmp_ = compare(dur, occ, capacity=cap, banks=b,
+                           n_reads=n_r, n_writes=n_w, cfg=ctrl)
+            rows.append(CampaignRow(
+                scn, c_mib, b, cmp_,
+                peak_mib=util["peak_bytes"] / MIB,
+                mean_mib=util["mean_bytes"] / MIB,
+                p95_latency_s=util["p95_latency_s"]))
+
+    fast = fast_candidate_energies(
+        dur, occ, capacities_mib=list(capacities_mib), banks=list(banks),
+        alpha=ctrl.alpha, n_reads=n_r, n_writes=n_w, backend=fast_backend)
+    return sim, rows, fast
+
+
+def run_campaign(archs: Sequence[str], *, arrivals: Sequence[str] = ("poisson",),
+                 rates: Sequence[float] = (4.0,), seeds: Sequence[int] = (0,),
+                 horizon_s: float = 30.0, num_slots: int = 8,
+                 max_len: int = 2048,
+                 capacities_mib: Optional[Sequence[int]] = None,
+                 banks: Sequence[int] = DEFAULT_BANKS,
+                 ctrl: Optional[ControllerConfig] = None,
+                 lengths: Optional[LengthModel] = None,
+                 resample_dt: Optional[float] = None,
+                 fast_backend: str = "auto") -> CampaignReport:
+    """The full grid. Identical (arrival, rate, seed) cells share one request
+    stream across architectures, so MHA-vs-GQA rows are directly comparable."""
+    ctrl = ctrl or ControllerConfig()
+    report = CampaignReport()
+    for arrival in arrivals:
+        for rate in rates:
+            for seed in seeds:
+                for arch in archs:
+                    scn = Scenario(arch=arch, arrival=arrival, rate=rate,
+                                   seed=seed, horizon_s=horizon_s,
+                                   num_slots=num_slots, max_len=max_len)
+                    sim, rows, fast = run_scenario(
+                        scn, capacities_mib=capacities_mib, banks=banks,
+                        ctrl=ctrl, lengths=lengths, resample_dt=resample_dt,
+                        fast_backend=fast_backend)
+                    key = (arch, scn.traffic_key)
+                    report.sims[key] = sim
+                    report.rows.extend(rows)
+                    report.fast_grid[key] = fast
+    return report

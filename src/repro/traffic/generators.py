@@ -1,0 +1,160 @@
+"""Seeded serving-traffic generators: request arrival processes + lengths.
+
+Production KV occupancy is driven by *load*, not by a single sequence's
+length: requests arrive and finish at different times, so the on-chip KV
+footprint fluctuates with concurrency — the regime where time-resolved
+analysis (and therefore power gating) pays off most. Each generator here is a
+pure function of its seed and emits a list of `RequestSpec`s; the same spec
+list replayed against two architectures gives the MHA-vs-GQA comparison
+under *identical* traffic.
+
+Arrival processes:
+  * "poisson"  — homogeneous Poisson(rate) over [0, horizon).
+  * "bursty"   — 2-state Markov-modulated Poisson process (MMPP-2): calm and
+                 burst states with different rates, exponential dwell times.
+  * "diurnal"  — non-homogeneous Poisson with a sinusoidal rate profile
+                 (one "day" compressed into `period_s`), drawn by thinning.
+  * "replay"   — explicit arrival times (trace replay from a log).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class RequestSpec:
+    """One request of a traffic trace: all times in seconds."""
+    rid: int
+    arrival_s: float
+    prompt_len: int
+    output_len: int
+
+
+@dataclass(frozen=True)
+class LengthModel:
+    """Lognormal prompt / output token-length distributions, clamped to
+    [min_len, max_len]. Defaults loosely follow public serving traces
+    (short chatty prompts, a heavy tail of long generations)."""
+    prompt_mean: float = 128.0
+    prompt_sigma: float = 0.8        # sigma of underlying normal
+    output_mean: float = 64.0
+    output_sigma: float = 0.6
+    min_len: int = 1
+    max_len: int = 2048
+
+    def draw(self, rng: np.random.Generator, n: int):
+        def lognorm(mean, sigma):
+            mu = np.log(mean) - 0.5 * sigma ** 2
+            v = np.exp(rng.normal(mu, sigma, size=n))
+            return np.clip(np.rint(v).astype(np.int64),
+                           self.min_len, self.max_len)
+        return lognorm(self.prompt_mean, self.prompt_sigma), \
+            lognorm(self.output_mean, self.output_sigma)
+
+
+def _specs(arrivals: np.ndarray, lengths: LengthModel,
+           rng: np.random.Generator) -> List[RequestSpec]:
+    arrivals = np.sort(np.asarray(arrivals, np.float64))
+    p, o = lengths.draw(rng, len(arrivals))
+    return [RequestSpec(rid=i, arrival_s=float(t), prompt_len=int(pi),
+                        output_len=int(oi))
+            for i, (t, pi, oi) in enumerate(zip(arrivals, p, o))]
+
+
+# ---------------------------------------------------------------------------
+# Arrival processes
+# ---------------------------------------------------------------------------
+
+def poisson(rate: float, horizon_s: float, *, seed: int = 0,
+            lengths: Optional[LengthModel] = None) -> List[RequestSpec]:
+    """Homogeneous Poisson arrivals at `rate` req/s over [0, horizon)."""
+    rng = np.random.default_rng(seed)
+    n = rng.poisson(rate * horizon_s)
+    arrivals = rng.uniform(0.0, horizon_s, size=n)
+    return _specs(arrivals, lengths or LengthModel(), rng)
+
+
+def bursty(rate: float, horizon_s: float, *, seed: int = 0,
+           burst_factor: float = 8.0, calm_dwell_s: float = 4.0,
+           burst_dwell_s: float = 1.0,
+           lengths: Optional[LengthModel] = None) -> List[RequestSpec]:
+    """MMPP-2: calm state at `rate_calm`, burst state at
+    `burst_factor * rate_calm`, with the calm rate chosen so the long-run
+    mean equals `rate`. Exponential dwell times in each state."""
+    rng = np.random.default_rng(seed)
+    pi_burst = burst_dwell_s / (calm_dwell_s + burst_dwell_s)
+    rate_calm = rate / (1 - pi_burst + pi_burst * burst_factor)
+    arrivals: List[float] = []
+    t, in_burst = 0.0, False
+    while t < horizon_s:
+        dwell = rng.exponential(burst_dwell_s if in_burst else calm_dwell_s)
+        end = min(t + dwell, horizon_s)
+        r = rate_calm * (burst_factor if in_burst else 1.0)
+        n = rng.poisson(r * (end - t))
+        arrivals.extend(rng.uniform(t, end, size=n))
+        t, in_burst = end, not in_burst
+    return _specs(np.asarray(arrivals), lengths or LengthModel(), rng)
+
+
+def diurnal(rate: float, horizon_s: float, *, seed: int = 0,
+            peak_to_trough: float = 4.0, period_s: Optional[float] = None,
+            lengths: Optional[LengthModel] = None) -> List[RequestSpec]:
+    """Non-homogeneous Poisson whose rate ramps sinusoidally between trough
+    and peak (mean = `rate`), one full cycle per `period_s` (default: the
+    horizon). Sampled exactly by thinning against the peak rate."""
+    rng = np.random.default_rng(seed)
+    period = period_s or horizon_s
+    # mean of trough + (peak-trough) * (1+sin)/2 over a cycle is the midpoint
+    trough = 2.0 * rate / (1.0 + peak_to_trough)
+    peak = peak_to_trough * trough
+
+    def lam(t):
+        phase = 2 * np.pi * t / period
+        return trough + (peak - trough) * 0.5 * (1 + np.sin(phase - np.pi / 2))
+
+    n_cand = rng.poisson(peak * horizon_s)
+    cand = rng.uniform(0.0, horizon_s, size=n_cand)
+    keep = rng.uniform(0.0, peak, size=n_cand) < lam(cand)
+    return _specs(cand[keep], lengths or LengthModel(), rng)
+
+
+def replay(arrival_times_s: Sequence[float], *, seed: int = 0,
+           prompt_lens: Optional[Sequence[int]] = None,
+           output_lens: Optional[Sequence[int]] = None,
+           lengths: Optional[LengthModel] = None) -> List[RequestSpec]:
+    """Trace replay: explicit arrivals; lengths taken from the log when
+    given, else drawn from the (seeded) length model."""
+    rng = np.random.default_rng(seed)
+    times = np.asarray(arrival_times_s, np.float64)
+    if (prompt_lens is None) != (output_lens is None):
+        raise ValueError("replay needs both prompt_lens and output_lens "
+                         "(or neither)")
+    if prompt_lens is not None:
+        if not (len(times) == len(prompt_lens) == len(output_lens)):
+            raise ValueError("replay arrays must have equal length")
+        order = np.argsort(times, kind="stable")   # keep log pairing intact
+        return [RequestSpec(i, float(times[j]), int(prompt_lens[j]),
+                            int(output_lens[j]))
+                for i, j in enumerate(order)]
+    return _specs(times, lengths or LengthModel(), rng)
+
+
+GENERATORS: Dict[str, object] = {
+    "poisson": poisson,
+    "bursty": bursty,
+    "diurnal": diurnal,
+}
+
+
+def generate(arrival: str, rate: float, horizon_s: float, *, seed: int = 0,
+             lengths: Optional[LengthModel] = None,
+             **kwargs) -> List[RequestSpec]:
+    """Dispatch by arrival-process name ("replay" needs `replay()` directly)."""
+    if arrival not in GENERATORS:
+        raise KeyError(f"unknown arrival process {arrival!r}; "
+                       f"known: {sorted(GENERATORS)} (+ replay)")
+    fn = GENERATORS[arrival]
+    return fn(rate, horizon_s, seed=seed, lengths=lengths, **kwargs)

@@ -1,6 +1,10 @@
 """Hypothesis property tests on Stage-II invariants and the trace pipeline."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.banking import (active_bank_seconds, bank_activity,
                                 bank_on_matrix, idle_runs)
