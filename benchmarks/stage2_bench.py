@@ -1,0 +1,137 @@
+"""Stage-II evaluation throughput: batched engine vs the legacy loop.
+
+Evaluates an identical (C x B x alpha x policy) candidate grid against one
+traffic-generated occupancy trace twice — per-candidate scalar
+`gating.evaluate`/`evaluate_drowsy` loops vs one batched
+`evaluate_candidates` call — verifies they agree to 1e-6 relative, and
+writes `BENCH_stage2.json` (candidates/sec both ways, speedup, prune-phase
+timing) to start the Stage-II perf trajectory.
+
+Run:  PYTHONPATH=src python -m benchmarks.stage2_bench [out.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.core.candidates import Candidate, evaluate_candidates
+from repro.core.gating import Policy, evaluate
+from repro.core.sensitivity import evaluate_drowsy
+from repro.traffic import LengthModel, generate, simulate_traffic
+from repro.configs import get_arch
+
+MIB = 2**20
+DEFAULT_OUT = "BENCH_stage2.json"
+
+
+def _trace(horizon_s: float = 60.0, resample_dt: float = 0.004):
+    cfg = get_arch("dsr1d-qwen-1.5b")
+    reqs = generate("bursty", 6.0, horizon_s, seed=0,
+                    lengths=LengthModel(max_len=1024))
+    sim = simulate_traffic(cfg, reqs, num_slots=8, max_len=1024)
+    trace = sim.trace.resampled(resample_dt, sim.total_time)
+    dur, occ = trace.occupancy_series(sim.total_time, use="needed")
+    return (dur, occ, sim.bundle.access.n_reads("kv"),
+            sim.bundle.access.n_writes("kv"))
+
+
+def _grid(peak_mib: int):
+    lo = max(16, peak_mib)
+    caps = [lo + 16 * k for k in range(6)]
+    cands = []
+    for c in caps:
+        for b in (1, 2, 4, 8, 16, 32):
+            for alpha in (0.85, 0.9, 0.95, 1.0):
+                for mgm in (1.0, 5.0):
+                    cands.append(Candidate(c * MIB, b, alpha, "gate", mgm))
+            for mgm in (1.0, 1e3):
+                cands.append(Candidate(c * MIB, b, 0.9, "drowsy", mgm))
+    return cands
+
+
+def _best_of(f, repeats: int = 3) -> float:
+    """Min wall time over repeats — standard noise control for short runs."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        f()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _legacy(dur, occ, cands, n_r, n_w) -> np.ndarray:
+    out = np.zeros(len(cands))
+    for i, c in enumerate(cands):
+        if c.policy == "drowsy":
+            out[i] = evaluate_drowsy(
+                dur, occ, capacity=c.capacity, banks=c.banks, alpha=c.alpha,
+                n_reads=n_r, n_writes=n_w,
+                off_multiple=c.min_gate_multiple).e_total
+        else:
+            pol = Policy("g", c.alpha, c.policy == "gate",
+                         c.min_gate_multiple)
+            out[i] = evaluate(dur, occ, capacity=c.capacity, banks=c.banks,
+                              policy=pol, n_reads=n_r, n_writes=n_w).e_total
+    return out
+
+
+def bench_stage2(out_path: str = DEFAULT_OUT):
+    dur, occ, n_r, n_w = _trace()
+    cands = _grid(int(np.ceil(occ.max() / MIB)))
+    kw = dict(n_reads=n_r, n_writes=n_w)
+
+    legacy = _legacy(dur, occ, cands, n_r, n_w)
+    t_legacy = _best_of(lambda: _legacy(dur, occ, cands, n_r, n_w))
+
+    res = evaluate_candidates(dur, occ, cands, **kw)      # also warms caches
+    t_batched = _best_of(lambda: evaluate_candidates(dur, occ, cands, **kw))
+
+    rel = np.abs(res.e_total - legacy) / np.maximum(np.abs(legacy), 1e-30)
+    assert rel.max() < 1e-6, f"batched != legacy (max rel {rel.max():.2e})"
+
+    pruned = evaluate_candidates(dur, occ, cands, prune=True, **kw)
+    t_prune = _best_of(
+        lambda: evaluate_candidates(dur, occ, cands, prune=True, **kw))
+    assert pruned.argmin() == res.argmin()
+
+    report = {
+        "segments": int(len(dur)),
+        "candidates": len(cands),
+        "max_rel_err": float(rel.max()),
+        "legacy_s": t_legacy,
+        "batched_s": t_batched,
+        "prune_then_exact_s": t_prune,
+        "speedup": t_legacy / t_batched,
+        "prune_speedup": t_legacy / t_prune,
+        "legacy_candidates_per_sec": len(cands) / t_legacy,
+        "batched_candidates_per_sec": len(cands) / t_batched,
+        "pruned_out": int((~pruned.evaluated).sum()),
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    return report
+
+
+def bench_stage2_engine():
+    """benchmarks.run adapter: (us_per_call, derived) of the batched call."""
+    r = bench_stage2()
+    return r["batched_s"] * 1e6, (
+        f"candidates={r['candidates']} segs={r['segments']} "
+        f"speedup={r['speedup']:.1f}x prune={r['prune_speedup']:.1f}x")
+
+
+def main() -> None:
+    out = sys.argv[1] if len(sys.argv) > 1 else DEFAULT_OUT
+    r = bench_stage2(out)
+    print(json.dumps(r, indent=1))
+    print(f"wrote {out}: {r['candidates']} candidates x {r['segments']} "
+          f"segments, batched {r['speedup']:.1f}x over legacy "
+          f"({r['batched_candidates_per_sec']:.0f} cand/s), "
+          f"prune-then-exact {r['prune_speedup']:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

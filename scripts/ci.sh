@@ -16,4 +16,16 @@ PYTHONPATH=src timeout 60 python -m repro.launch.traffic \
 grep -q "online controller vs offline oracle" /tmp/traffic_smoke.out
 grep -q "dsr1d-qwen-1.5b" /tmp/traffic_smoke.out
 grep -q "gpt2-xl" /tmp/traffic_smoke.out
+
+# batched-sweep smoke: prune-then-exact Stage-II engine through the paper CLI
+PYTHONPATH=src timeout 120 python -m repro.launch.trapti \
+    --arch dsr1d-qwen-1.5b --seq 512 --prune --backend numpy \
+    > /tmp/trapti_smoke.out
+grep -q "Stage II" /tmp/trapti_smoke.out
+grep -q -- "-->" /tmp/trapti_smoke.out
+
+# Stage-II engine benchmark: exactness vs the scalar reference is asserted
+# inside; BENCH_stage2.json records the throughput trajectory
+PYTHONPATH=src timeout 300 python -m benchmarks.stage2_bench \
+    /tmp/BENCH_stage2.json | tail -1
 echo "ci: OK"

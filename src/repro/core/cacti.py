@@ -16,6 +16,7 @@ Stage II reproduces the paper's absolute scale:
 """
 from __future__ import annotations
 
+import functools
 import math
 from dataclasses import dataclass
 
@@ -41,6 +42,7 @@ class SramCharacterization:
     capacity: int                # bytes, total
     banks: int
     access_bytes: int = 64
+    e_switch_scale: float = 1.0  # sensitivity hook: scales E_sw and break-even
 
     # ------------------------------------------------------------- derived
     @property
@@ -91,7 +93,8 @@ class SramCharacterization:
     @property
     def e_switch_j(self) -> float:
         """Energy of one off->on transition pair for one bank."""
-        return E_SW_NJ_PER_KIB * (self.bank_bytes / 1024) * 1e-9
+        return (E_SW_NJ_PER_KIB * (self.bank_bytes / 1024) * 1e-9
+                * self.e_switch_scale)
 
     @property
     def break_even_s(self) -> float:
@@ -105,5 +108,14 @@ class SramCharacterization:
             max(self.banks, 1))
 
 
-def characterize(capacity_bytes: int, banks: int) -> SramCharacterization:
-    return SramCharacterization(int(capacity_bytes), int(banks))
+@functools.lru_cache(maxsize=None)
+def characterize(capacity_bytes: int, banks: int,
+                 e_switch_scale: float = 1.0) -> SramCharacterization:
+    """Memoized: sweeps/campaigns re-characterize identical (C, B) cells
+    thousands of times; the instance is frozen, so sharing it is safe.
+
+    `e_switch_scale` scales the per-transition energy *and* the implied
+    break-even time — the sensitivity-study hook (replaces ad-hoc
+    subclassing of `SramCharacterization`)."""
+    return SramCharacterization(int(capacity_bytes), int(banks),
+                                e_switch_scale=float(e_switch_scale))

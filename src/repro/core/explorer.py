@@ -4,6 +4,11 @@ Reuses a Stage-I occupancy trace (fixed execution schedule) to sweep
 (capacity C, bank count B, headroom alpha, policy) and emit the paper's
 artifacts: Table II/III banking tables, Fig 8 bank-activity timelines, and
 the Fig 9 energy-area Pareto scatter.
+
+Sweeps are thin wrappers over the batched candidate-evaluation engine
+(`core.candidates.evaluate_candidates`): the whole grid is evaluated in one
+vectorized call, optionally prune-then-exact (`prune=True`), on the numpy /
+jnp / Pallas backend selected by `backend`.
 """
 from __future__ import annotations
 
@@ -11,9 +16,8 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Union
 
-import numpy as np
-
-from repro.core.gating import GatingResult, Policy, evaluate
+from repro.core.candidates import Candidate, evaluate_candidates
+from repro.core.gating import GatingResult, Policy
 from repro.sim.engine import SimResult
 from repro.sim.trace import TraceBundle
 
@@ -73,12 +77,21 @@ def min_capacity_mib(peak_needed_bytes: int, step_mib: int = 16) -> int:
     return step_mib * math.ceil(peak_needed_bytes / (step_mib * MIB))
 
 
+def _policy_candidate(cap: int, b: int, policy: Policy) -> Candidate:
+    """Stage-II convention: B=1 cannot gate, so it runs the no-gating
+    baseline at the sweep's alpha."""
+    pol = policy if b > 1 else Policy.none(policy.alpha)
+    return Candidate(cap, b, pol.alpha, "gate" if pol.gate else "none",
+                     pol.min_gate_multiple, label=pol.name)
+
+
 def sweep(sim: TraceSource, *, mem_name: str = "sram",
           capacities_mib: Optional[Sequence[int]] = None,
           banks: Sequence[int] = DEFAULT_BANKS,
           policy: Optional[Policy] = None,
           max_capacity_mib: int = 128,
-          occupancy_kind: str = "needed") -> SweepTable:
+          occupancy_kind: str = "needed",
+          backend: str = "auto", prune: bool = False) -> SweepTable:
     """Sweep (C, B) for one memory of one Stage-I run (or any TraceSource —
     e.g. a traffic-generated TraceBundle with mem_name="kv").
 
@@ -86,6 +99,10 @@ def sweep(sim: TraceSource, *, mem_name: str = "sram",
     obsolete data needs no retention, so its banks are gate-eligible (this is
     the reading under which the paper's Fig. 8 occupancy curve fluctuates
     well below capacity).
+
+    The whole grid is one `evaluate_candidates` call; with `prune=True` only
+    the lower-bound survivors (plus each capacity's delta baseline) are
+    evaluated exactly, and pruned rows are omitted from the table.
     """
     policy = policy or Policy.conservative()
     trace = sim.traces[mem_name]
@@ -96,24 +113,37 @@ def sweep(sim: TraceSource, *, mem_name: str = "sram",
     if capacities_mib is None:
         lo = min_capacity_mib(trace.peak_needed())
         capacities_mib = list(range(lo, max_capacity_mib + 1, 16)) or [lo]
+    caps_kept = [c for c in capacities_mib if c * MIB >= trace.peak_needed()]
+    if not caps_kept:
+        return SweepTable(sim.graph_name, mem_name, policy.alpha)
+
+    base_b = min(banks)
+    cands, meta, baselines = [], [], []
+    for c_mib in caps_kept:
+        for b in banks:
+            if b == base_b:
+                baselines.append(len(cands))
+            meta.append((c_mib, b))
+            cands.append(_policy_candidate(c_mib * MIB, b, policy))
+    res = evaluate_candidates(dur, occ, cands, n_reads=n_r, n_writes=n_w,
+                              backend=backend, prune=prune,
+                              always_evaluate=baselines)
 
     table = SweepTable(sim.graph_name, mem_name, policy.alpha)
-    for c_mib in capacities_mib:
-        cap = c_mib * MIB
-        if cap < trace.peak_needed():
+    # delta baseline: the smallest bank count present (B=1 when swept; the
+    # smallest banked config otherwise — never a silent 0.0)
+    base_by_cap: Dict[int, GatingResult] = {
+        meta[i][0]: res.gating_result(i) for i in baselines}
+    for i, (c_mib, b) in enumerate(meta):
+        if not res.evaluated[i]:
             continue
-        base: Optional[GatingResult] = None
-        for b in banks:
-            pol = policy if b > 1 else Policy.none(policy.alpha)
-            res = evaluate(dur, occ, capacity=cap, banks=b, policy=pol,
-                           n_reads=n_r, n_writes=n_w)
-            row = SweepRow(c_mib, b, res)
-            if b == 1:
-                base = res
-            if base is not None and base.e_total > 0:
-                row.delta_e_pct = 100.0 * (res.e_total / base.e_total - 1.0)
-                row.delta_a_pct = 100.0 * (res.area_mm2 / base.area_mm2 - 1.0)
-            table.rows.append(row)
+        g = res.gating_result(i)
+        row = SweepRow(c_mib, b, g)
+        base = base_by_cap[c_mib]
+        if base.e_total > 0:
+            row.delta_e_pct = 100.0 * (g.e_total / base.e_total - 1.0)
+            row.delta_a_pct = 100.0 * (g.area_mm2 / base.area_mm2 - 1.0)
+        table.rows.append(row)
     return table
 
 
@@ -129,15 +159,16 @@ def pareto_points(tables: Sequence[SweepTable]):
 
 def alpha_sensitivity(sim: TraceSource, *, capacity_mib: int, banks: int,
                       alphas: Sequence[float] = (1.0, 0.9, 0.75, 0.5),
-                      mem_name: str = "sram") -> Dict[float, GatingResult]:
-    """Fig.-8 support: how alpha moves bank activity / energy at fixed (C,B)."""
+                      mem_name: str = "sram",
+                      backend: str = "auto") -> Dict[float, GatingResult]:
+    """Fig.-8 support: how alpha moves bank activity / energy at fixed (C,B).
+    One batched call over the alpha axis."""
     trace = sim.traces[mem_name]
     dur, occ = trace.occupancy_series(sim.total_time, use="needed")
     n_r = sim.access.n_reads(mem_name)
     n_w = sim.access.n_writes(mem_name)
-    out = {}
-    for a in alphas:
-        pol = Policy("conservative", a, gate=True, min_gate_multiple=5.0)
-        out[a] = evaluate(dur, occ, capacity=capacity_mib * MIB, banks=banks,
-                          policy=pol, n_reads=n_r, n_writes=n_w)
-    return out
+    cands = [Candidate(capacity_mib * MIB, banks, a, "gate", 5.0,
+                       label="conservative") for a in alphas]
+    res = evaluate_candidates(dur, occ, cands, n_reads=n_r, n_writes=n_w,
+                              backend=backend)
+    return {a: res.gating_result(i) for i, a in enumerate(alphas)}

@@ -12,6 +12,12 @@ Policies:
   * "conservative" — alpha = 0.9 headroom; additionally skip idle intervals
                      shorter than `min_gate_multiple` x break-even (avoids
                      thrashing and wake-up latency exposure).
+
+`evaluate` is the *scalar reference*: one candidate at a time, per-bank
+Python loops. Sweeps, campaigns and CLIs run on the batched engine
+(`core.candidates.evaluate_candidates`), which is property-tested against
+this function and evaluates the whole (C, B, alpha, policy) grid in one
+vectorized call.
 """
 from __future__ import annotations
 

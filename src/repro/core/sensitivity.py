@@ -17,8 +17,7 @@ from typing import Dict, Sequence
 import numpy as np
 
 from repro.core.banking import bank_activity, bank_on_matrix, idle_runs
-from repro.core.cacti import SramCharacterization, characterize
-from repro.core.gating import GatingResult, Policy, evaluate
+from repro.core.cacti import characterize
 
 DROWSY_LEAK_FRACTION = 0.25          # retention-voltage leakage vs ON
 DROWSY_SWITCH_FRACTION = 0.02        # transition energy vs full PG pair
@@ -41,10 +40,17 @@ class DrowsyResult:
 def evaluate_drowsy(durations: np.ndarray, occupancy: np.ndarray, *,
                     capacity: int, banks: int, alpha: float = 0.9,
                     n_reads: int = 0, n_writes: int = 0,
-                    off_multiple: float = 1.0) -> DrowsyResult:
+                    off_multiple: float = 1.0,
+                    e_switch_scale: float = 1.0) -> DrowsyResult:
     """Three-state policy: idle interval < break-even -> DROWSY; otherwise
-    OFF. Active segments are ON."""
-    ch = characterize(capacity, banks)
+    OFF. Active segments are ON.
+
+    This is the *scalar reference* implementation (per-bank Python loops);
+    the batched engine (`core.candidates.evaluate_candidates` with
+    policy="drowsy") is property-tested against it and is what sweeps and
+    CLIs use. `e_switch_scale` mirrors the `characterize` sensitivity hook
+    so scaled-transition candidates keep a scalar reference too."""
+    ch = characterize(capacity, banks, e_switch_scale)
     d = np.asarray(durations, np.float64)
     act = bank_activity(occupancy, alpha, capacity, banks)
     on = bank_on_matrix(act, banks)
@@ -79,33 +85,29 @@ def policy_sensitivity(durations: np.ndarray, occupancy: np.ndarray, *,
                        n_reads: int, n_writes: int,
                        multiples: Sequence[float] = (1.0, 1e2, 1e3, 1e4, 1e5),
                        sw_scales: Sequence[float] = (0.1, 1.0, 10.0, 100.0),
-                       ) -> Dict[str, Dict[float, float]]:
+                       backend: str = "auto") -> Dict[str, Dict[float, float]]:
     """How robust are Stage-II conclusions to (a) the gating threshold and
-    (b) the per-transition energy assumption? Returns E_tot per setting."""
-    out: Dict[str, Dict[float, float]] = {"threshold": {}, "sw_scale": {},
-                                          "drowsy": {}}
-    for m in multiples:
-        pol = Policy("sens", 0.9, gate=True, min_gate_multiple=m)
-        r = evaluate(durations, occupancy, capacity=capacity, banks=banks,
-                     policy=pol, n_reads=n_reads, n_writes=n_writes)
-        out["threshold"][m] = r.e_total
+    (b) the per-transition energy assumption? Returns E_tot per setting.
 
-    # transition-energy scaling: scale both E_sw and the implied break-even
-    base = characterize(capacity, banks)
-    for s in sw_scales:
-        class _Scaled(SramCharacterization):
-            @property
-            def e_switch_j(self):  # noqa: D401
-                return SramCharacterization.e_switch_j.fget(self) * s
-        ch = _Scaled(int(capacity), int(banks))
-        pol = Policy("sens", 0.9, gate=True, min_gate_multiple=1.0)
-        r = evaluate(durations, occupancy, capacity=capacity, banks=banks,
-                     policy=pol, n_reads=n_reads, n_writes=n_writes, char=ch)
-        out["sw_scale"][s] = r.e_total
-
-    for m in multiples:
-        r = evaluate_drowsy(durations, occupancy, capacity=capacity,
-                            banks=banks, n_reads=n_reads, n_writes=n_writes,
-                            off_multiple=m)
-        out["drowsy"][m] = r.e_total
-    return out
+    The threshold grid, the transition-energy grid (via the
+    `characterize(..., e_switch_scale=)` hook, which scales E_sw and the
+    implied break-even together) and the drowsy grid are one batched
+    `evaluate_candidates` call."""
+    from repro.core.candidates import Candidate, evaluate_candidates
+    cap, b = int(capacity), int(banks)
+    cands = (
+        [Candidate(cap, b, 0.9, "gate", m, label="sens") for m in multiples]
+        + [Candidate(cap, b, 0.9, "gate", 1.0, e_switch_scale=s,
+                     label="sens") for s in sw_scales]
+        + [Candidate(cap, b, 0.9, "drowsy", m) for m in multiples])
+    res = evaluate_candidates(durations, occupancy, cands, n_reads=n_reads,
+                              n_writes=n_writes, backend=backend)
+    n_m, n_s = len(multiples), len(sw_scales)
+    return {
+        "threshold": {m: float(res.e_total[i])
+                      for i, m in enumerate(multiples)},
+        "sw_scale": {s: float(res.e_total[n_m + i])
+                     for i, s in enumerate(sw_scales)},
+        "drowsy": {m: float(res.e_total[n_m + n_s + i])
+                   for i, m in enumerate(multiples)},
+    }

@@ -12,7 +12,18 @@ Under contiguous packing, banks fill lowest-first, so the number of on/off
 toggles between consecutive segments is exactly |B_act(k) - B_act(k-1)| —
 transition counting needs no per-bank state.
 
-Grid: (n_candidates, n_segment_blocks), segment blocks innermost.
+Two kernels share the (n_candidates, n_segment_blocks) grid layout, segment
+blocks innermost:
+
+  * `bank_energy_kernel`     — the cheap lower-bound stats (bank-seconds +
+    toggle count); carries only the previous segment's activity.
+  * `exact_bank_stats_kernel` — exact per-bank idle-run extraction for the
+    batched Stage-II evaluator: per tile it rebuilds each bank's on/off
+    series (bmax x block_s), finds run ends at rises of the series via an
+    in-tile prefix-max of exceed end-times, and classifies each run against
+    the candidate's break-even threshold. Cross-tile state (per-bank last
+    required time, previous on/off value, elapsed time) lives in VMEM/SMEM
+    scratch, which is safe because the TPU grid is sequential per core.
 """
 from __future__ import annotations
 
@@ -48,6 +59,134 @@ def _bank_kernel(dur_ref, occ_ref, usable_ref, nb_ref, out_ref, prev_sc, *,
 
     out_ref[0, 0] += bank_seconds
     out_ref[0, 1] += transitions
+
+
+def _cummax_lanes(x: jax.Array) -> jax.Array:
+    """Inclusive prefix-max along the last axis via log-doubling shifts —
+    only concat/max, which lower cleanly inside a Pallas kernel. Assumes
+    x >= 0 (0.0 is the identity used for the shifted-in prefix)."""
+    n = x.shape[-1]
+    shift = 1
+    while shift < n:
+        pad = jnp.zeros(x.shape[:-1] + (shift,), x.dtype)
+        x = jnp.maximum(x, jnp.concatenate([pad, x[..., :-shift]], axis=-1))
+        shift *= 2
+    return x
+
+
+def _exact_kernel(dur_ref, occ_ref, us_ref, nb_ref, th_ref, out_ref,
+                  last_exc_t, prev_exc, tbase, *, bmax: int,
+                  num_seg_blocks: int):
+    s = pl.program_id(1)
+
+    dur = dur_ref[...]                        # (1, BS)
+    occ = occ_ref[...]                        # (1, BS)
+    usable = us_ref[0, 0]
+    nbanks = nb_ref[0, 0]
+    threshold = th_ref[0, 0]
+
+    act = jnp.clip(jnp.ceil(occ / usable), 0.0, nbanks)       # (1, BS)
+    bank = jax.lax.broadcasted_iota(jnp.float32, (bmax, 1), 0)
+    exceed = act > bank                                       # (bmax, BS)
+    bankmask = bank < nbanks                                  # (bmax, 1)
+
+    @pl.when(s == 0)
+    def _first():
+        out_ref[...] = jnp.zeros_like(out_ref)
+        last_exc_t[...] = jnp.zeros_like(last_exc_t)
+        # pre-trace state counts as ON so segment 0 never closes a run
+        prev_exc[...] = jnp.ones_like(prev_exc)
+        tbase[0] = 0.0
+
+    t0 = tbase[0]
+    cumend = t0 + jnp.cumsum(dur[0])                          # (BS,)
+    cumstart = cumend - dur[0]
+
+    carry_t = last_exc_t[...]                                 # (bmax, 1)
+    last_in = _cummax_lanes(jnp.where(exceed, cumend[None, :], 0.0))
+    run_start = jnp.maximum(
+        jnp.concatenate([carry_t, last_in[:, :-1]], axis=1), carry_t)
+    prev = jnp.concatenate(
+        [prev_exc[...] > 0.5, exceed[:, :-1]], axis=1)
+    is_rise = exceed & ~prev
+    run_dur = cumstart[None, :] - run_start
+    long = run_dur >= threshold
+    rise_long = is_rise & long & bankmask
+    rise_short = is_rise & ~long & bankmask
+
+    zero = jnp.zeros_like(run_dur)
+    out_ref[0, 0] += jnp.sum(act * dur)
+    out_ref[0, 1] += jnp.sum(rise_long.astype(jnp.float32))
+    out_ref[0, 2] += jnp.sum(jnp.where(rise_long, run_dur, zero))
+    out_ref[0, 3] += jnp.sum(rise_short.astype(jnp.float32))
+    out_ref[0, 4] += jnp.sum(jnp.where(rise_short, run_dur, zero))
+
+    new_last = jnp.maximum(carry_t, last_in[:, -1:])          # (bmax, 1)
+    t_end = t0 + jnp.sum(dur)
+    last_exc_t[...] = new_last
+    prev_exc[...] = exceed[:, -1:].astype(jnp.float32)
+    tbase[0] = t_end
+
+    @pl.when(s == num_seg_blocks - 1)
+    def _flush():
+        # close the still-open idle run of every bank idle at trace end
+        tail_dur = t_end - new_last                           # (bmax, 1)
+        tail_idle = ~exceed[:, -1:] & bankmask
+        tail_long = tail_idle & (tail_dur >= threshold)
+        tail_short = tail_idle & ~tail_long
+        zero1 = jnp.zeros_like(tail_dur)
+        out_ref[0, 1] += jnp.sum(tail_long.astype(jnp.float32))
+        out_ref[0, 2] += jnp.sum(jnp.where(tail_long, tail_dur, zero1))
+        out_ref[0, 3] += jnp.sum(tail_short.astype(jnp.float32))
+        out_ref[0, 4] += jnp.sum(jnp.where(tail_short, tail_dur, zero1))
+
+
+def exact_bank_stats_kernel(durations: jax.Array, occupancy: jax.Array,
+                            usable: jax.Array, nbanks: jax.Array,
+                            threshold: jax.Array, *, bmax: int,
+                            block_s: int = 2048,
+                            interpret: bool = False) -> jax.Array:
+    """durations/occupancy: (S,) f32, S % block_s == 0 (pad durations with 0
+    and occupancy with its last value — padding adds no time and no rises);
+    usable/nbanks/threshold: (C,) f32; bmax: static max bank count.
+
+    Returns (C, 5): [active bank-seconds, idle runs >= threshold, their
+    seconds, idle runs < threshold, their seconds] — the exact Eq. (2)-(5)
+    observables, same contract as `exact_bank_stats_np`.
+    """
+    S = durations.shape[0]
+    C = usable.shape[0]
+    block_s = min(block_s, S)
+    assert S % block_s == 0, (S, block_s)
+    nsb = S // block_s
+    bmax_p = max(8, -(-bmax // 8) * 8)       # pad sublanes; masked via nbanks
+
+    dur2 = durations.reshape(nsb, block_s).astype(jnp.float32)
+    occ2 = occupancy.reshape(nsb, block_s).astype(jnp.float32)
+    us2 = usable.reshape(C, 1).astype(jnp.float32)
+    nb2 = nbanks.reshape(C, 1).astype(jnp.float32)
+    th2 = threshold.reshape(C, 1).astype(jnp.float32)
+
+    kern = functools.partial(_exact_kernel, bmax=bmax_p, num_seg_blocks=nsb)
+    return pl.pallas_call(
+        kern,
+        grid=(C, nsb),
+        in_specs=[
+            pl.BlockSpec((1, block_s), lambda c, s: (s, 0)),
+            pl.BlockSpec((1, block_s), lambda c, s: (s, 0)),
+            pl.BlockSpec((1, 1), lambda c, s: (c, 0)),
+            pl.BlockSpec((1, 1), lambda c, s: (c, 0)),
+            pl.BlockSpec((1, 1), lambda c, s: (c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 5), lambda c, s: (c, 0)),
+        out_shape=jax.ShapeDtypeStruct((C, 5), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bmax_p, 1), jnp.float32),     # last exceed end-time
+            pltpu.VMEM((bmax_p, 1), jnp.float32),     # previous on/off (0/1)
+            pltpu.SMEM((1,), jnp.float32),            # elapsed time
+        ],
+        interpret=interpret,
+    )(dur2, occ2, us2, nb2, th2)
 
 
 def bank_energy_kernel(durations: jax.Array, occupancy: jax.Array,

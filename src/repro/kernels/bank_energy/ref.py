@@ -1,8 +1,27 @@
-"""Pure-jnp oracle for the bank-energy analytics kernel."""
+"""References for the bank-energy analytics kernels.
+
+Two computations, three implementations each:
+
+  * lower-bound stats  — [active bank-seconds, activity toggles] per
+    candidate; `bank_energy_ref` (jnp f32) and `bank_energy_np` (numpy f64).
+  * exact stats        — the full Eq. (2)-(5) observables per candidate:
+    [active bank-seconds, #idle runs >= threshold, their seconds,
+    #idle runs < threshold, their seconds]; `exact_bank_stats_ref` (jnp)
+    and `exact_bank_stats_np` (numpy f64, the bit-exact CPU path).
+
+Exact idle-run extraction is segment-parallel: with `exceed[b, k] = (bank b
+required in segment k)`, an idle run of bank b ends just before every rise
+of `exceed`, its start time is the running maximum of end-times of exceeding
+segments, and the run duration falls out of one prefix-sum/prefix-max pass —
+no per-bank or per-run Python loops, vectorized over all candidates.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+STAT_COLS = 5      # [act_seconds, n_long, long_seconds, n_short, short_seconds]
 
 
 def bank_energy_ref(durations: jax.Array, occupancy: jax.Array,
@@ -16,3 +35,213 @@ def bank_energy_ref(durations: jax.Array, occupancy: jax.Array,
     seconds = jnp.sum(act * d, axis=1)
     trans = jnp.sum(jnp.abs(act[:, 1:] - act[:, :-1]), axis=1)
     return jnp.stack([seconds, trans], axis=1)
+
+
+def bank_energy_np(durations, occupancy, usable, nbanks, *,
+                   toggles: bool = True) -> np.ndarray:
+    """float64 numpy twin of `bank_energy_ref` — the default CPU path.
+
+    Byte-valued occupancies beyond float32's exact-integer range (2^24 ~
+    16.8 MB) silently lose their low bits under an f32 cast, which flips
+    ceil() at bank boundaries; float64 carries byte exactness to 2^53.
+
+    Occupancy levels repeat heavily in real traces (slot-quantized KV), so
+    the expensive ceil(occ / usable) runs once per *unique* level; the
+    leakage integral becomes one BLAS matvec against per-level duration
+    sums, and toggles are gathered at level-change positions only.
+    `toggles=False` skips that gather and zeros column 1 — the
+    lower-bound-only mode used for pruning.
+    """
+    d = np.asarray(durations, np.float64)
+    u = np.asarray(usable, np.float64)[:, None]
+    b = np.asarray(nbanks, np.float64)[:, None]
+    n_cand, n_seg = len(u), len(d)
+    if n_seg == 0:
+        return np.zeros((n_cand, 2))
+    uniq, uinv = np.unique(np.asarray(occupancy, np.float64),
+                           return_inverse=True)
+    act_u = np.minimum(np.ceil(uniq[None, :] / u), b)       # (n, U)
+    d_by_level = np.bincount(uinv, weights=d, minlength=len(uniq))
+    seconds = act_u @ d_by_level
+    if not toggles:
+        return np.stack([seconds, np.zeros(n_cand)], axis=1)
+    chg = np.flatnonzero(uinv[1:] != uinv[:-1])
+    trans = np.abs(act_u[:, uinv[chg + 1]]
+                   - act_u[:, uinv[chg]]).sum(axis=1)
+    return np.stack([seconds, trans], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Exact per-candidate idle-run stats
+# ---------------------------------------------------------------------------
+
+def exact_bank_stats_np(durations, occupancy, usable, nbanks, threshold, *,
+                        max_elems: int = 1 << 18) -> np.ndarray:
+    """Exact Stage-II observables for N candidates in float64 numpy.
+
+    Returns (N, 5): [active bank-seconds, idle runs >= threshold (count),
+    their total seconds, idle runs < threshold (count), their seconds].
+
+    Event-based: bank b toggles exactly when the activity series crosses
+    level b, so a transition a -> a' contributes |a' - a| crossing events
+    for levels [min, max). With virtual all-ON levels before and after the
+    trace, every (bank, idle-run) pair is one (down, up) crossing pair, and
+    within each (candidate, level) group — and therefore globally, groups
+    having even length — sorted events alternate down/up. One flatten +
+    argsort over all candidates' events and a bincount per class replace
+    the per-candidate/per-bank loops; total work scales with the number of
+    actual bank on/off events, not with (N x B x S).
+
+    Run durations come from the same `cumsum(durations)` values the scalar
+    `banking.idle_runs` uses, so counts and run-second sums match the
+    per-candidate reference bit-for-bit. Candidates are chunked so each
+    chunk's (N_chunk x P) temporaries stay under `max_elems` elements —
+    small enough for the allocator to reuse warm arenas instead of paying
+    page faults on every fresh multi-MB array.
+    """
+    d = np.asarray(durations, np.float64)
+    o = np.asarray(occupancy, np.float64)
+    u = np.asarray(usable, np.float64)
+    nb = np.asarray(nbanks, np.float64)
+    th = np.asarray(threshold, np.float64)
+    n_cand, n_seg = len(u), len(d)
+    out = np.zeros((n_cand, STAT_COLS))
+    if n_cand == 0 or n_seg == 0:
+        return out
+
+    cum = np.concatenate([[0.0], np.cumsum(d)])         # (S+1,)
+    # occupancy levels repeat heavily (slot-quantized KV): divide once per
+    # unique level, integrate leakage as a matvec over per-level durations,
+    # and look at level-change positions only for bank toggles
+    uniq, uinv = np.unique(o, return_inverse=True)
+    d_by_level = np.bincount(uinv, weights=d, minlength=len(uniq))
+    chg = np.flatnonzero(uinv[1:] != uinv[:-1])         # shared positions
+
+    n_chg = len(chg)
+    chunk = max(1, max_elems // max(n_chg + 2, 1))
+    for c0 in range(0, n_cand, chunk):
+        sl = slice(c0, min(c0 + chunk, n_cand))
+        ui, nbi = u[sl][:, None], nb[sl][:, None]
+        n = ui.shape[0]
+
+        # occ >= 0 so only the upper clip is live; int16 keeps the event
+        # passes small (B <= 2^15)
+        act_u = np.minimum(np.ceil(uniq[None, :] / ui), nbi)    # (n, U) f64
+        out[sl, 0] = act_u @ d_by_level
+        act_ui = act_u.astype(np.int16)
+        # activity plateaus: the value after change t holds until change
+        # t+1, so one (n, P+1) gather yields both transition endpoints
+        plateau = np.concatenate([[uinv[0]], uinv[chg + 1]])
+        vals = act_ui[:, plateau]                               # (n, P+1)
+        vflat = vals.ravel()
+
+        # transition table [cand, pos, lo, hi): interior level changes plus
+        # virtual all-ON states before/after the trace (pos 0 and n_seg);
+        # flat single-pass extraction, no dense (n, P) index tuples
+        neq = vals[:, 1:] != vals[:, :-1]                       # (n, P)
+        flat = np.flatnonzero(neq)
+        m = len(flat)
+        t_cand = np.empty(m + 2 * n, np.int64)
+        t_pos = np.empty(m + 2 * n, np.int64)
+        t_lo = np.empty(m + 2 * n, np.int64)
+        t_hi = np.empty(m + 2 * n, np.int64)
+        if n_chg:
+            t_cand[:m], cj = np.divmod(flat, n_chg)
+            t_pos[:m] = chg[cj] + 1
+            j = flat + t_cand[:m]          # index into vals.ravel()
+            av = vflat[j].astype(np.int64)
+            bv = vflat[j + 1].astype(np.int64)
+            np.minimum(av, bv, out=t_lo[:m])
+            np.maximum(av, bv, out=t_hi[:m])
+        nb_col = nbi[:, 0].astype(np.int64)
+        arng = np.arange(n)
+        t_cand[m:m + n] = arng
+        t_pos[m:m + n] = 0
+        t_lo[m:m + n] = vals[:, 0]
+        t_hi[m:m + n] = nb_col
+        t_cand[m + n:] = arng
+        t_pos[m + n:] = n_seg
+        t_lo[m + n:] = vals[:, -1]
+        t_hi[m + n:] = nb_col
+        counts = t_hi - t_lo                   # >= 0; zeros vanish in repeat
+        total = int(counts.sum())
+        if total == 0:
+            continue
+
+        # expand each transition into its crossed levels [lo, hi)
+        first = np.repeat(np.cumsum(counts) - counts, counts)
+        level = np.repeat(t_lo, counts) + (np.arange(total) - first)
+        ev_cand = np.repeat(t_cand, counts)
+        ev_pos = np.repeat(t_pos, counts)
+
+        # total order by (candidate, level, position): keys are unique, and
+        # within each (candidate, level) group the sorted crossings
+        # alternate down/up
+        key = (ev_cand * (np.int64(nbi.max()) + 1) + level) \
+            * np.int64(n_seg + 2) + ev_pos
+        idx = np.argsort(key, kind="stable")
+        down_pos = ev_pos[idx[0::2]]
+        up_pos = ev_pos[idx[1::2]]
+        run_cand = ev_cand[idx[0::2]]
+
+        # groups alternate (down, up) and have even length, so downs and
+        # ups interleave globally
+        run_dur = cum[up_pos] - cum[down_pos]
+        long = run_dur >= th[sl][run_cand]
+        out[sl, 1] = np.bincount(run_cand[long], minlength=n)
+        out[sl, 2] = np.bincount(run_cand[long],
+                                 weights=run_dur[long], minlength=n)
+        out[sl, 3] = np.bincount(run_cand[~long], minlength=n)
+        out[sl, 4] = np.bincount(run_cand[~long],
+                                 weights=run_dur[~long], minlength=n)
+    return out
+
+
+def exact_bank_stats_ref(durations: jax.Array, occupancy: jax.Array,
+                         usable: jax.Array, nbanks: jax.Array,
+                         threshold: jax.Array, *, bmax: int) -> jax.Array:
+    """jnp twin of `exact_bank_stats_np` (float32 unless x64 is enabled);
+    one fused expression over (N, bmax, S), jit-friendly."""
+    d = durations[None, :]
+    o = occupancy[None, :]
+    u = usable[:, None]
+    nb = nbanks[:, None]
+    th = threshold[:, None, None]
+
+    act = jnp.clip(jnp.ceil(o / u), 0.0, nb)                    # (N, S)
+    cum = jnp.cumsum(d[0])
+    cumend = cum
+    cumstart = cum - d[0]
+    total_t = cum[-1]
+    bank = jnp.arange(bmax, dtype=act.dtype)
+    exceed = act[:, None, :] > bank[None, :, None]              # (N, B, S)
+    bankmask = bank[None, :] < nb                               # (N, B)
+
+    last_exc = jax.lax.cummax(
+        jnp.where(exceed, cumend[None, None, :], 0.0), axis=2)
+    run_start = jnp.concatenate(
+        [jnp.zeros_like(last_exc[:, :, :1]), last_exc[:, :, :-1]], axis=2)
+    prev_exc = jnp.concatenate(
+        [jnp.ones_like(exceed[:, :, :1]), exceed[:, :, :-1]], axis=2)
+    is_rise = exceed & ~prev_exc
+    run_dur = cumstart[None, None, :] - run_start
+    long = run_dur >= th
+    m3 = bankmask[:, :, None]
+    rise_long = is_rise & long & m3
+    rise_short = is_rise & ~long & m3
+
+    tail_dur = total_t - last_exc[:, :, -1]
+    tail_idle = ~exceed[:, :, -1] & bankmask
+    tail_long = tail_idle & (tail_dur >= th[:, :, 0])
+    tail_short = tail_idle & ~tail_long
+
+    zero = jnp.zeros_like(run_dur)
+    n_long = rise_long.sum((1, 2)) + tail_long.sum(1)
+    long_s = (jnp.where(rise_long, run_dur, zero).sum((1, 2))
+              + jnp.where(tail_long, tail_dur, 0.0).sum(1))
+    n_short = rise_short.sum((1, 2)) + tail_short.sum(1)
+    short_s = (jnp.where(rise_short, run_dur, zero).sum((1, 2))
+               + jnp.where(tail_short, tail_dur, 0.0).sum(1))
+    act_s = (act * d).sum(1)
+    return jnp.stack([act_s, n_long.astype(act.dtype), long_s,
+                      n_short.astype(act.dtype), short_s], axis=1)

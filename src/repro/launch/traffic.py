@@ -72,7 +72,14 @@ def main() -> None:
     ap.add_argument("--no-mha-ref", action="store_true",
                     help="skip the always-on gpt2-xl MHA reference")
     ap.add_argument("--fast-backend", default="auto",
-                    choices=["auto", "ref", "pallas", "interpret"])
+                    choices=["auto", "numpy", "ref", "pallas", "interpret"],
+                    help="lower-bound grid backend")
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "numpy", "ref", "pallas", "interpret"],
+                    help="exact batched-engine backend (oracle/none legs)")
+    ap.add_argument("--prune", action="store_true",
+                    help="prune the (C, B) grid with the lower bound "
+                         "before exact evaluation")
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
 
@@ -96,7 +103,8 @@ def main() -> None:
         ctrl=ControllerConfig(alpha=args.alpha,
                               hysteresis_multiple=args.hysteresis),
         lengths=LengthModel(max_len=args.max_len),
-        resample_dt=args.resample_dt, fast_backend=args.fast_backend)
+        resample_dt=args.resample_dt, fast_backend=args.fast_backend,
+        backend=args.backend, prune=args.prune)
 
     print("\n# online controller vs offline oracle vs no gating")
     print(report.format())

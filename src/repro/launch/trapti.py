@@ -13,9 +13,10 @@ import json
 import numpy as np
 
 from repro.configs import get_arch, list_archs
+from repro.core.candidates import Candidate, evaluate_candidates
 from repro.core.energy import assemble_energy
 from repro.core.explorer import min_capacity_mib, sweep
-from repro.core.sensitivity import evaluate_drowsy, policy_sensitivity
+from repro.core.sensitivity import policy_sensitivity
 from repro.core.workload import build_decode_graph, build_graph
 from repro.sim.accelerator import baseline_accelerator, multilevel_accelerator
 from repro.sim.engine import find_min_sram, simulate
@@ -39,6 +40,11 @@ def main() -> None:
     ap.add_argument("--banks", type=int, nargs="+",
                     default=[1, 2, 4, 8, 16, 32])
     ap.add_argument("--sensitivity", action="store_true")
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "numpy", "ref", "pallas", "interpret"],
+                    help="batched Stage-II engine backend")
+    ap.add_argument("--prune", action="store_true",
+                    help="lower-bound prune before exact grid evaluation")
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
 
@@ -84,7 +90,8 @@ def main() -> None:
             continue
         lo = min_capacity_mib(trace.peak_needed())
         table = sweep(sim, mem_name=mem, capacities_mib=[lo],
-                      banks=tuple(args.banks))
+                      banks=tuple(args.banks), backend=args.backend,
+                      prune=args.prune)
         best = table.best()
         print(f"\nStage II [{mem}] peak={trace.peak_needed()/MIB:.1f} MiB:")
         print(table.format())
@@ -92,11 +99,12 @@ def main() -> None:
                 f"({best.delta_e_pct:+.1f}% E, {best.delta_a_pct:+.1f}% A)")
         if args.policy == "drowsy":
             dur, occ = trace.occupancy_series(sim.total_time, use="needed")
-            dr = evaluate_drowsy(dur, occ,
-                                 capacity=best.capacity_mib * MIB,
-                                 banks=best.banks,
-                                 n_reads=sim.access.n_reads(mem),
-                                 n_writes=sim.access.n_writes(mem))
+            res = evaluate_candidates(
+                dur, occ, [Candidate(best.capacity_mib * MIB, best.banks,
+                                     policy="drowsy")],
+                n_reads=sim.access.n_reads(mem),
+                n_writes=sim.access.n_writes(mem), backend=args.backend)
+            dr = res.drowsy_result(0)
             gain = (1 - dr.e_total / best.result.e_total) * 100
             line += (f"  drowsy: {dr.e_total*1e3:.1f} mJ "
                      f"({gain:+.1f}% vs off-only)")
@@ -113,7 +121,7 @@ def main() -> None:
             sens = policy_sensitivity(
                 dur, occ, capacity=best.capacity_mib * MIB,
                 banks=best.banks, n_reads=sim.access.n_reads(mem),
-                n_writes=sim.access.n_writes(mem))
+                n_writes=sim.access.n_writes(mem), backend=args.backend)
             print("    sensitivity (E_tot mJ):")
             for k, row in sens.items():
                 vals = " ".join(f"{p}:{v*1e3:.1f}" for p, v in row.items())

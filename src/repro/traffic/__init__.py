@@ -12,7 +12,7 @@ from repro.traffic.occupancy import (TimingModel, TrafficSim,  # noqa: F401
                                      utilization_summary)
 from repro.traffic.controller import (ControllerComparison,  # noqa: F401
                                       ControllerConfig, OnlineResult, compare,
-                                      simulate_online)
+                                      compare_grid, simulate_online)
 from repro.traffic.campaign import (CampaignReport, CampaignRow,  # noqa: F401
                                     Scenario, fast_candidate_energies,
                                     run_campaign, run_scenario)

@@ -2,15 +2,17 @@
 
 Two evaluation paths over the same traffic-generated occupancy traces:
 
-  * exact     — `controller.compare` per (C, B): online timeout controller
-                vs offline oracle vs no-gating, with wake-latency violations.
-  * fast grid — the whole (C x B) candidate grid in one jit'd call through
-                `kernels.bank_energy.bank_activity_stats` (Pallas on TPU,
-                jnp reference elsewhere). Models ideal gating (a bank leaks
-                only while required; each on/off toggle pays half a
-                transition pair), which lower-bounds the oracle — the right
-                objective for pruning thousand-scenario campaigns in
-                seconds before exact re-evaluation of the survivors.
+  * exact     — `controller.compare_grid`: the offline oracle and no-gating
+                legs of every (C, B) point in one batched
+                `core.candidates.evaluate_candidates` call, plus the causal
+                online timeout controller per point (wake-latency
+                violations included).
+  * fast grid — per-candidate energy *lower bound* in one vectorized call
+                (`core.candidates.lower_bound_energies`): dynamic energy +
+                required-bank leakage only, which bounds every policy from
+                below. With `prune=True` it cuts the (C, B) grid before the
+                exact phase — the right objective for thousand-scenario
+                campaigns; the true argmin is never dropped.
 
 Traces are resampled onto a uniform grid before the fast path so every
 scenario shares one padded segment shape (one compilation, batched sweep).
@@ -23,11 +25,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.configs import resolve_arch
-from repro.core.cacti import characterize
+from repro.core.candidates import lower_bound_energies, make_grid
 from repro.core.explorer import DEFAULT_BANKS, MIB, min_capacity_mib  # noqa: F401 (re-exported)
-from repro.kernels.bank_energy import bank_activity_stats, candidate_grid
 from repro.traffic.controller import ControllerComparison, ControllerConfig, \
-    compare
+    compare, compare_grid
 from repro.traffic.generators import LengthModel, generate
 from repro.traffic.occupancy import TrafficSim, simulate_traffic, \
     utilization_summary
@@ -128,18 +129,14 @@ def fast_candidate_energies(durations: np.ndarray, occupancy: np.ndarray, *,
     sub-break-even runs, which would break the bound. Without it the value
     is a true lower bound on `gating.evaluate` under every policy (required
     leakage and dynamic accesses are unavoidable, switching is >= 0), which
-    is what makes it safe for pruning."""
-    caps = [int(c * MIB) for c in capacities_mib]
-    usable, nb, meta = candidate_grid(caps, banks, alpha)
-    stats = np.asarray(bank_activity_stats(
-        np.asarray(durations, np.float32), np.asarray(occupancy, np.float32),
-        usable, nb, backend=backend))
-    out = np.zeros(len(meta))
-    for i, (cap, b) in enumerate(meta):
-        ch = characterize(cap, b)
-        e_dyn = n_reads * ch.e_read_j + n_writes * ch.e_write_j
-        out[i] = e_dyn + ch.leak_w_per_bank * float(stats[i, 0])
-    return out
+    is what makes it safe for pruning. Thin wrapper over the engine's
+    `lower_bound_energies` — one implementation serves campaign pruning,
+    `evaluate_candidates(prune=True)` and the sweep CLIs."""
+    cands = make_grid([int(c * MIB) for c in capacities_mib], banks,
+                      alphas=(alpha,))
+    return lower_bound_energies(durations, occupancy, cands,
+                                n_reads=n_reads, n_writes=n_writes,
+                                backend=backend)
 
 
 # ---------------------------------------------------------------------------
@@ -150,9 +147,17 @@ def run_scenario(scn: Scenario, *, capacities_mib: Optional[Sequence[int]],
                  banks: Sequence[int], ctrl: ControllerConfig,
                  lengths: Optional[LengthModel] = None,
                  resample_dt: Optional[float] = None,
-                 fast_backend: str = "auto") -> Tuple[
+                 fast_backend: str = "auto",
+                 backend: str = "auto", prune: bool = False,
+                 prune_margin: float = 1e-3) -> Tuple[
                      TrafficSim, List[CampaignRow], np.ndarray]:
-    """Simulate one scenario's traffic, then evaluate its (C, B) grid."""
+    """Simulate one scenario's traffic, then evaluate its (C, B) grid.
+
+    Both offline legs of every (C, B) point run through one batched
+    `compare_grid` call. With `prune=True`, the jit'd lower-bound grid cuts
+    the candidate set first: a point survives only if its bound does not
+    exceed the incumbent's exact online energy by `prune_margin` (relative);
+    pruned points — which cannot win under any policy — get no rows."""
     cfg = resolve_arch(scn.arch)
     lengths = lengths or LengthModel(max_len=scn.max_len)
     reqs = generate(scn.arrival, scn.rate, scn.horizon_s, seed=scn.seed,
@@ -171,24 +176,36 @@ def run_scenario(scn: Scenario, *, capacities_mib: Optional[Sequence[int]],
         lo = max(min_capacity_mib(peak), 16)
         capacities_mib = sorted({lo, 2 * lo})
 
-    util = utilization_summary(sim)
-    rows: List[CampaignRow] = []
-    for c_mib in capacities_mib:
-        cap = int(c_mib * MIB)
-        if cap < peak:
-            continue
-        for b in banks:
-            cmp_ = compare(dur, occ, capacity=cap, banks=b,
-                           n_reads=n_r, n_writes=n_w, cfg=ctrl)
-            rows.append(CampaignRow(
-                scn, c_mib, b, cmp_,
-                peak_mib=util["peak_bytes"] / MIB,
-                mean_mib=util["mean_bytes"] / MIB,
-                p95_latency_s=util["p95_latency_s"]))
-
     fast = fast_candidate_energies(
         dur, occ, capacities_mib=list(capacities_mib), banks=list(banks),
         alpha=ctrl.alpha, n_reads=n_r, n_writes=n_w, backend=fast_backend)
+
+    points = [(int(c_mib * MIB), b)
+              for c_mib in capacities_mib for b in banks
+              if int(c_mib * MIB) >= peak]
+    precomputed = {}
+    if prune and len(points) > 1:
+        # fast grid is C-major over (capacities x banks), like `points`
+        lb = {(int(c_mib * MIB), b): fast[i]
+              for i, (c_mib, b) in enumerate(
+                  (c, b) for c in capacities_mib for b in banks)}
+        best = min(points, key=lambda p: lb[p])
+        inc = compare(dur, occ, capacity=best[0], banks=best[1],
+                      n_reads=n_r, n_writes=n_w, cfg=ctrl, backend=backend)
+        precomputed[best] = inc        # incumbent is already fully evaluated
+        cutoff = inc.online.e_total * (1.0 + prune_margin)
+        points = [p for p in points if lb[p] <= cutoff or p == best]
+
+    comparisons = compare_grid(
+        dur, occ, points=[p for p in points if p not in precomputed],
+        n_reads=n_r, n_writes=n_w, cfg=ctrl, backend=backend)
+    comparisons.update(precomputed)
+    util = utilization_summary(sim)
+    rows = [CampaignRow(scn, cap // MIB, b, comparisons[(cap, b)],
+                        peak_mib=util["peak_bytes"] / MIB,
+                        mean_mib=util["mean_bytes"] / MIB,
+                        p95_latency_s=util["p95_latency_s"])
+            for cap, b in points]
     return sim, rows, fast
 
 
@@ -201,7 +218,9 @@ def run_campaign(archs: Sequence[str], *, arrivals: Sequence[str] = ("poisson",)
                  ctrl: Optional[ControllerConfig] = None,
                  lengths: Optional[LengthModel] = None,
                  resample_dt: Optional[float] = None,
-                 fast_backend: str = "auto") -> CampaignReport:
+                 fast_backend: str = "auto",
+                 backend: str = "auto",
+                 prune: bool = False) -> CampaignReport:
     """The full grid. Identical (arrival, rate, seed) cells share one request
     stream across architectures, so MHA-vs-GQA rows are directly comparable."""
     ctrl = ctrl or ControllerConfig()
@@ -216,7 +235,8 @@ def run_campaign(archs: Sequence[str], *, arrivals: Sequence[str] = ("poisson",)
                     sim, rows, fast = run_scenario(
                         scn, capacities_mib=capacities_mib, banks=banks,
                         ctrl=ctrl, lengths=lengths, resample_dt=resample_dt,
-                        fast_backend=fast_backend)
+                        fast_backend=fast_backend, backend=backend,
+                        prune=prune)
                     key = (arch, scn.traffic_key)
                     report.sims[key] = sim
                     report.rows.extend(rows)

@@ -19,14 +19,15 @@ also beats the no-gating baseline.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.banking import bank_activity, bank_on_matrix, idle_runs
 from repro.core.cacti import WAKEUP_LATENCY_NS, SramCharacterization, \
     characterize
-from repro.core.gating import GatingResult, Policy, evaluate
+from repro.core.candidates import Candidate, evaluate_candidates
+from repro.core.gating import GatingResult, Policy
 
 
 @dataclass(frozen=True)
@@ -126,24 +127,65 @@ class ControllerComparison:
                 f"wakes={o.wake_violations} stall={o.stall_s*1e6:.1f}us")
 
 
+def _offline_candidates(capacity: int, banks: int, cfg: ControllerConfig,
+                        oracle_policy: Optional[Policy]) -> List[Candidate]:
+    """The two offline legs of one comparison as engine candidates."""
+    pol = oracle_policy or Policy(
+        "oracle", cfg.alpha, gate=True,
+        min_gate_multiple=cfg.hysteresis_multiple)
+    return [
+        Candidate(capacity, banks, pol.alpha,
+                  "gate" if pol.gate else "none", pol.min_gate_multiple,
+                  label=pol.name),
+        Candidate(capacity, banks, cfg.alpha, "none", label="none"),
+    ]
+
+
 def compare(durations: np.ndarray, occupancy: np.ndarray, *,
             capacity: int, banks: int, n_reads: int, n_writes: int,
             cfg: Optional[ControllerConfig] = None,
-            oracle_policy: Optional[Policy] = None) -> ControllerComparison:
+            oracle_policy: Optional[Policy] = None,
+            backend: str = "auto") -> ControllerComparison:
     """The paper-style three-way comparison at one (C, B) point.
 
     The oracle uses `min_gate_multiple == hysteresis_multiple` so both
     policies gate the same set of idle runs — the gap between them is then
-    purely the leakage burned during the online timer."""
+    purely the leakage burned during the online timer. The offline legs run
+    on the batched engine; grid sweeps should prefer `compare_grid`, which
+    batches them across every (C, B) point in one call."""
     cfg = cfg or ControllerConfig()
     ch = characterize(capacity, banks)
-    oracle_policy = oracle_policy or Policy(
-        "oracle", cfg.alpha, gate=True,
-        min_gate_multiple=cfg.hysteresis_multiple)
-    kw = dict(capacity=capacity, banks=banks,
-              n_reads=n_reads, n_writes=n_writes)
-    online = simulate_online(durations, occupancy, cfg=cfg, char=ch, **kw)
-    oracle = evaluate(durations, occupancy, policy=oracle_policy, **kw)
-    none = evaluate(durations, occupancy,
-                    policy=Policy.none(cfg.alpha), **kw)
-    return ControllerComparison(online, oracle, none)
+    online = simulate_online(durations, occupancy, capacity=capacity,
+                             banks=banks, n_reads=n_reads, n_writes=n_writes,
+                             cfg=cfg, char=ch)
+    res = evaluate_candidates(
+        durations, occupancy,
+        _offline_candidates(capacity, banks, cfg, oracle_policy),
+        n_reads=n_reads, n_writes=n_writes, backend=backend)
+    return ControllerComparison(online, res.gating_result(0),
+                                res.gating_result(1))
+
+
+def compare_grid(durations: np.ndarray, occupancy: np.ndarray, *,
+                 points: Sequence[Tuple[int, int]], n_reads: int,
+                 n_writes: int, cfg: Optional[ControllerConfig] = None,
+                 backend: str = "auto"
+                 ) -> Dict[Tuple[int, int], ControllerComparison]:
+    """Three-way comparisons for every (capacity, banks) point at once.
+
+    Both offline legs of every point go through one batched
+    `evaluate_candidates` call; the causal online controller (inherently
+    sequential over the trace) still runs per point."""
+    cfg = cfg or ControllerConfig()
+    cands: List[Candidate] = []
+    for cap, b in points:
+        cands.extend(_offline_candidates(cap, b, cfg, None))
+    res = evaluate_candidates(durations, occupancy, cands, n_reads=n_reads,
+                              n_writes=n_writes, backend=backend)
+    out: Dict[Tuple[int, int], ControllerComparison] = {}
+    for i, (cap, b) in enumerate(points):
+        online = simulate_online(durations, occupancy, capacity=cap, banks=b,
+                                 n_reads=n_reads, n_writes=n_writes, cfg=cfg)
+        out[(cap, b)] = ControllerComparison(
+            online, res.gating_result(2 * i), res.gating_result(2 * i + 1))
+    return out

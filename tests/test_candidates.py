@@ -1,0 +1,239 @@
+"""Batched candidate-evaluation engine vs the scalar Stage-II references."""
+import numpy as np
+import pytest
+
+from repro.core.candidates import (Candidate, evaluate_candidates,
+                                   lower_bound_energies, make_grid)
+from repro.core.cacti import characterize
+from repro.core.gating import Policy, evaluate
+from repro.core.sensitivity import evaluate_drowsy
+
+MIB = 2**20
+REL = 1e-9          # numpy backend is float64 — far inside the 1e-6 budget
+
+
+def _assert_gate_matches(d, occ, cands, res, n_reads, n_writes):
+    for i, c in enumerate(cands):
+        pol = (Policy.none(c.alpha) if c.policy == "none"
+               else Policy("g", c.alpha, True, c.min_gate_multiple))
+        ref = evaluate(d, occ, capacity=c.capacity, banks=c.banks,
+                       policy=pol, n_reads=n_reads, n_writes=n_writes)
+        assert int(res.n_off[i]) == ref.n_transitions, (i, c)
+        assert res.e_dyn[i] == pytest.approx(ref.e_dyn, rel=REL)
+        assert res.e_leak[i] == pytest.approx(ref.e_leak, rel=REL, abs=1e-18)
+        assert res.e_sw[i] == pytest.approx(ref.e_sw, rel=REL, abs=1e-18)
+        assert res.e_total[i] == pytest.approx(ref.e_total, rel=REL)
+        assert res.gated_bank_seconds[i] == pytest.approx(
+            ref.gated_bank_seconds, rel=REL, abs=1e-12)
+        g = res.gating_result(i)
+        assert g.e_total == pytest.approx(ref.e_total, rel=REL)
+        assert g.area_mm2 == pytest.approx(ref.area_mm2)
+
+
+def _grid():
+    return [Candidate(c * MIB, b, a, p, m)
+            for c in (48, 128) for b in (1, 4, 32)
+            for a in (0.9, 1.0) for p, m in
+            (("gate", 1.0), ("gate", 5.0), ("none", 1.0))]
+
+
+def test_batched_matches_scalar_on_dense_grid():
+    rng = np.random.default_rng(0)
+    d = rng.random(200) * 1e-3 + 1e-6
+    occ = rng.integers(0, 130 * MIB, 200).astype(np.int64)
+    cands = _grid()
+    res = evaluate_candidates(d, occ, cands, n_reads=1000, n_writes=500)
+    _assert_gate_matches(d, occ, cands, res, 1000, 500)
+
+
+def test_batched_drowsy_matches_scalar():
+    rng = np.random.default_rng(1)
+    d = rng.random(150) * 1e-3 + 1e-6
+    occ = rng.integers(0, 130 * MIB, 150).astype(np.int64)
+    cands = [Candidate(c * MIB, b, 0.9, "drowsy", m)
+             for c in (64, 128) for b in (1, 8, 16) for m in (1.0, 1e3)]
+    res = evaluate_candidates(d, occ, cands, n_reads=42, n_writes=17)
+    for i, c in enumerate(cands):
+        ref = evaluate_drowsy(d, occ, capacity=c.capacity, banks=c.banks,
+                              n_reads=42, n_writes=17,
+                              off_multiple=c.min_gate_multiple)
+        assert int(res.n_off[i]) == ref.n_off
+        assert int(res.n_drowsy[i]) == ref.n_drowsy
+        assert res.e_leak_on[i] == pytest.approx(ref.e_leak_on, rel=REL)
+        assert res.e_leak_drowsy[i] == pytest.approx(
+            ref.e_leak_drowsy, rel=REL, abs=1e-18)
+        assert res.e_sw[i] == pytest.approx(ref.e_sw, rel=REL, abs=1e-18)
+        dr = res.drowsy_result(i)
+        assert dr.e_total == pytest.approx(ref.e_total, rel=REL)
+
+
+@pytest.mark.parametrize("case", ["empty", "single", "always_idle",
+                                  "always_busy", "zero_durations"])
+def test_edge_traces(case):
+    if case == "empty":
+        d, occ = np.zeros(0), np.zeros(0, np.int64)
+    elif case == "single":
+        d, occ = np.array([2.5]), np.array([30 * MIB], np.int64)
+    elif case == "always_idle":
+        d, occ = np.ones(20), np.zeros(20, np.int64)
+    elif case == "always_busy":
+        d, occ = np.ones(20), np.full(20, 128 * MIB, np.int64)
+    else:
+        d = np.array([0.0, 1.0, 0.0, 1.0, 0.0])
+        occ = np.array([0, 100 * MIB, 0, 100 * MIB, 0], np.int64)
+    cands = [Candidate(128 * MIB, b, a, p)
+             for b in (1, 8) for a in (0.9,) for p in ("none", "gate")]
+    res = evaluate_candidates(d, occ, cands, n_reads=3, n_writes=4)
+    _assert_gate_matches(d, occ, cands, res, 3, 4)
+    dres = evaluate_candidates(d, occ,
+                               [Candidate(128 * MIB, 8, policy="drowsy")],
+                               n_reads=3, n_writes=4)
+    ref = evaluate_drowsy(d, occ, capacity=128 * MIB, banks=8,
+                          n_reads=3, n_writes=4)
+    assert dres.e_total[0] == pytest.approx(ref.e_total, rel=REL)
+    assert int(dres.n_off[0]) == ref.n_off
+    assert int(dres.n_drowsy[0]) == ref.n_drowsy
+
+
+def test_lower_bound_bounds_every_policy():
+    rng = np.random.default_rng(2)
+    d = rng.random(120) * 1e-3 + 1e-6
+    occ = rng.integers(0, 100 * MIB, 120).astype(np.int64)
+    cands = _grid() + [Candidate(c * MIB, b, 0.9, "drowsy", m)
+                       for c in (48, 128) for b in (4, 32) for m in (1.0, 10)]
+    lb = lower_bound_energies(d, occ, cands, n_reads=11, n_writes=13)
+    res = evaluate_candidates(d, occ, cands, n_reads=11, n_writes=13)
+    assert (lb <= res.e_total * (1 + 1e-12) + 1e-18).all()
+
+
+def test_prune_never_drops_argmin():
+    rng = np.random.default_rng(3)
+    for trial in range(5):
+        n = rng.integers(5, 120)
+        d = rng.random(n) * 1e-3 + 1e-6
+        occ = rng.integers(0, 140 * MIB, n).astype(np.int64)
+        cands = make_grid([c * MIB for c in (48, 64, 96, 128, 160)],
+                          (1, 2, 4, 8, 16, 32), alphas=(0.9, 1.0),
+                          policies=("gate", "none", "drowsy"))
+        full = evaluate_candidates(d, occ, cands, n_reads=100, n_writes=100)
+        pruned = evaluate_candidates(d, occ, cands, n_reads=100,
+                                     n_writes=100, prune=True)
+        assert pruned.evaluated.sum() < len(cands), "prune did nothing"
+        i, j = full.argmin(), pruned.argmin()
+        assert full.e_total[i] == pytest.approx(pruned.e_total[j], rel=1e-12)
+        # pruned rows carry the lower bound, which cannot beat the winner
+        lb_rows = pruned.e_total[~pruned.evaluated]
+        assert (lb_rows >= full.e_total[i] * (1 - 1e-9)).all()
+
+
+def test_always_evaluate_exempts_indices():
+    d = np.array([1.0, 1.0] * 8)
+    occ = np.array([100 * MIB, 1 * MIB] * 8, np.int64)
+    cands = make_grid([128 * MIB, 256 * MIB], (1, 2, 4, 8, 16, 32))
+    res = evaluate_candidates(d, occ, cands, n_reads=0, n_writes=0,
+                              prune=True, always_evaluate=[0, 6])
+    assert res.evaluated[0] and res.evaluated[6]
+
+
+def test_alpha_validation_matches_scalar():
+    with pytest.raises(ValueError):
+        Candidate(MIB, 2, alpha=0.0)
+    with pytest.raises(ValueError):
+        Candidate(MIB, 2, alpha=1.5)
+    with pytest.raises(ValueError):
+        Candidate(MIB, 2, policy="laissez-faire")
+
+
+# --- satellites: memoization, sensitivity hook --------------------------------
+
+def test_characterize_is_memoized():
+    assert characterize(64 * MIB, 8) is characterize(64 * MIB, 8)
+    assert characterize(64 * MIB, 8) is not characterize(64 * MIB, 16)
+
+
+def test_e_switch_scale_hook():
+    base = characterize(128 * MIB, 8)
+    scaled = characterize(128 * MIB, 8, e_switch_scale=10.0)
+    assert scaled.e_switch_j == pytest.approx(10 * base.e_switch_j)
+    # break-even is implied by E_sw, so it must scale along
+    assert scaled.break_even_s == pytest.approx(10 * base.break_even_s)
+    assert scaled.leak_w_per_bank == base.leak_w_per_bank
+
+
+def test_drowsy_e_switch_scale_matches_scalar():
+    """The scale hook must stay reference-checkable for drowsy too."""
+    rng = np.random.default_rng(4)
+    d = rng.random(80) * 1e-3 + 1e-6
+    occ = rng.integers(0, 130 * MIB, 80).astype(np.int64)
+    for s in (0.1, 10.0):
+        res = evaluate_candidates(
+            d, occ, [Candidate(128 * MIB, 8, 0.9, "drowsy", 1.0,
+                               e_switch_scale=s)],
+            n_reads=5, n_writes=7)
+        ref = evaluate_drowsy(d, occ, capacity=128 * MIB, banks=8,
+                              n_reads=5, n_writes=7, off_multiple=1.0,
+                              e_switch_scale=s)
+        assert int(res.n_off[0]) == ref.n_off
+        assert int(res.n_drowsy[0]) == ref.n_drowsy
+        assert res.e_total[0] == pytest.approx(ref.e_total, rel=REL)
+
+
+def test_policy_sensitivity_scale_leg_matches_scalar():
+    """The batched sw_scale leg == scalar evaluate() with a scaled char."""
+    from repro.core.sensitivity import policy_sensitivity
+    d = np.array([1e-3, 1e-3] * 16)
+    occ = np.array([100 * MIB, 1 * MIB] * 16, np.int64)
+    sens = policy_sensitivity(d, occ, capacity=128 * MIB, banks=8,
+                              n_reads=100, n_writes=100)
+    for s in (0.1, 100.0):
+        ch = characterize(128 * MIB, 8, e_switch_scale=s)
+        ref = evaluate(d, occ, capacity=128 * MIB, banks=8,
+                       policy=Policy("sens", 0.9, True, 1.0),
+                       n_reads=100, n_writes=100, char=ch)
+        assert sens["sw_scale"][s] == pytest.approx(ref.e_total, rel=REL)
+
+
+# --- satellite: explorer delta baseline ---------------------------------------
+
+def test_sweep_deltas_without_b1_baseline():
+    """banks without B=1 must baseline against the smallest count present,
+    not silently report 0.0 deltas."""
+    from repro.core.explorer import sweep
+    from repro.sim.trace import AccessStats, OccupancyTrace, TraceBundle
+    tr = OccupancyTrace("kv", 256 * MIB)
+    tr.event(0.0, 40 * MIB, 0)
+    tr.event(1.0, -39 * MIB, 0)
+    tr.event(2.0, 39 * MIB, 0)
+    bundle = TraceBundle("toy", 3.0, {"kv": tr}, AccessStats())
+    table = sweep(bundle, mem_name="kv", capacities_mib=[64],
+                  banks=(4, 8, 16))
+    assert [r.banks for r in table.rows] == [4, 8, 16]
+    base = table.rows[0]
+    assert base.delta_e_pct == 0.0 and base.delta_a_pct == 0.0
+    others = table.rows[1:]
+    assert any(r.delta_e_pct != 0.0 for r in others)
+    assert all(r.delta_a_pct > 0.0 for r in others)   # more banks, more area
+    for r in others:
+        assert r.delta_e_pct == pytest.approx(
+            100.0 * (r.result.e_total / base.result.e_total - 1.0))
+
+
+def test_sweep_prune_keeps_best_row():
+    from repro.core.explorer import sweep
+    from repro.sim.trace import AccessStats, OccupancyTrace, TraceBundle
+    tr = OccupancyTrace("kv", 256 * MIB)
+    for k in range(12):
+        tr.event(k * 1.0, 30 * MIB if k % 2 == 0 else -29 * MIB, 0)
+    bundle = TraceBundle("toy", 12.0, {"kv": tr}, AccessStats())
+    kw = dict(mem_name="kv", capacities_mib=[32, 64, 128],
+              banks=(1, 2, 4, 8, 16, 32))
+    full = sweep(bundle, **kw)
+    pruned = sweep(bundle, prune=True, **kw)
+    assert len(pruned.rows) < len(full.rows)
+    fb, pb = full.best(), pruned.best()
+    assert (fb.capacity_mib, fb.banks) == (pb.capacity_mib, pb.banks)
+    assert fb.result.e_total == pytest.approx(pb.result.e_total, rel=1e-12)
+
+
+# Property tests (randomized traces, all policies, all backends) live in
+# tests/test_candidates_props.py — they need hypothesis, which is optional.

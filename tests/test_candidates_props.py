@@ -1,0 +1,92 @@
+"""Hypothesis property suite: batched engine == scalar Stage-II references.
+
+Random traces (including empty / single-segment / always-idle draws), all
+three policies, the prune-then-exact flow, and the jnp/Pallas backends
+against the float64 numpy one.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.candidates import (Candidate, evaluate_candidates,  # noqa: E402
+                                   make_grid)
+from repro.core.gating import Policy, evaluate  # noqa: E402
+from repro.core.sensitivity import evaluate_drowsy  # noqa: E402
+from repro.kernels.bank_energy import (exact_bank_stats,  # noqa: E402
+                                       exact_bank_stats_np)
+
+MIB = 2**20
+
+trace_st = st.integers(min_value=0, max_value=120).flatmap(
+    lambda n: st.tuples(
+        st.lists(st.floats(1e-6, 5.0), min_size=n, max_size=n),
+        st.lists(st.integers(0, 256 * MIB), min_size=n, max_size=n)))
+
+cb_st = st.tuples(st.sampled_from([16, 48, 128, 256]),
+                  st.sampled_from([1, 2, 5, 8, 32]))
+
+
+@given(trace_st, cb_st, st.floats(0.05, 1.0),
+       st.sampled_from([0.5, 1.0, 5.0, 1e3]))
+@settings(max_examples=60, deadline=None)
+def test_batched_equals_scalar_gate(trace, cb, alpha, mgm):
+    d, occ = np.asarray(trace[0]), np.asarray(trace[1], np.int64)
+    c_mib, b = cb
+    cands = [Candidate(c_mib * MIB, b, alpha, "gate", mgm),
+             Candidate(c_mib * MIB, b, alpha, "none")]
+    res = evaluate_candidates(d, occ, cands, n_reads=10, n_writes=20)
+    for i, c in enumerate(cands):
+        pol = (Policy.none(alpha) if c.policy == "none"
+               else Policy("g", alpha, True, mgm))
+        ref = evaluate(d, occ, capacity=c.capacity, banks=c.banks,
+                       policy=pol, n_reads=10, n_writes=20)
+        assert int(res.n_off[i]) == ref.n_transitions
+        assert res.e_total[i] == pytest.approx(ref.e_total, rel=1e-6)
+        assert res.e_leak[i] == pytest.approx(ref.e_leak, rel=1e-6,
+                                              abs=1e-18)
+        assert res.e_sw[i] == pytest.approx(ref.e_sw, rel=1e-6, abs=1e-18)
+
+
+@given(trace_st, cb_st, st.sampled_from([0.5, 1.0, 1e2, 1e5]))
+@settings(max_examples=60, deadline=None)
+def test_batched_equals_scalar_drowsy(trace, cb, mult):
+    d, occ = np.asarray(trace[0]), np.asarray(trace[1], np.int64)
+    c_mib, b = cb
+    res = evaluate_candidates(
+        d, occ, [Candidate(c_mib * MIB, b, 0.9, "drowsy", mult)],
+        n_reads=10, n_writes=20)
+    ref = evaluate_drowsy(d, occ, capacity=c_mib * MIB, banks=b,
+                          n_reads=10, n_writes=20, off_multiple=mult)
+    assert int(res.n_off[0]) == ref.n_off
+    assert int(res.n_drowsy[0]) == ref.n_drowsy
+    assert res.e_total[0] == pytest.approx(ref.e_total, rel=1e-6)
+
+
+@given(trace_st)
+@settings(max_examples=25, deadline=None)
+def test_prune_preserves_argmin(trace):
+    d, occ = np.asarray(trace[0]), np.asarray(trace[1], np.int64)
+    cands = make_grid([c * MIB for c in (64, 128, 256)], (1, 4, 16),
+                      policies=("gate", "drowsy"))
+    full = evaluate_candidates(d, occ, cands, n_reads=5, n_writes=5)
+    pruned = evaluate_candidates(d, occ, cands, n_reads=5, n_writes=5,
+                                 prune=True)
+    assert full.e_total[full.argmin()] == pytest.approx(
+        pruned.e_total[pruned.argmin()], rel=1e-12)
+
+
+@given(trace_st, st.sampled_from([1, 4, 32]))
+@settings(max_examples=25, deadline=None)
+def test_jnp_backend_matches_numpy(trace, b):
+    """f32 jnp path vs the exact f64 path — loose tolerance by design."""
+    d = np.asarray(trace[0])
+    occ = np.asarray(trace[1], np.int64)
+    usable = np.array([0.9 * (128 * MIB / b)])
+    nb = np.array([float(b)])
+    th = np.array([1e-4])
+    ref = exact_bank_stats_np(d, occ, usable, nb, th)
+    out = np.asarray(exact_bank_stats(d, occ, usable, nb, th, backend="ref"))
+    np.testing.assert_allclose(out, ref, rtol=5e-3, atol=5e-3)

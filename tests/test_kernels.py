@@ -4,7 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.bank_energy import bank_activity_stats, candidate_grid
+from repro.kernels.bank_energy import (bank_activity_stats, candidate_grid,
+                                       exact_bank_stats, exact_bank_stats_np)
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
 from repro.kernels.gqa_decode import gqa_decode, gqa_decode_ref
 from repro.kernels.int8_matmul import (int8_matmul, int8_matmul_ref,
@@ -132,3 +133,63 @@ def test_bank_energy_padding_and_grid(nseg):
                                            backend="interpret", block_s=256))
     out_r = np.asarray(bank_activity_stats(d, occ, us, nb, backend="ref"))
     np.testing.assert_allclose(out_i, out_r, rtol=1e-5, atol=1e-4)
+
+
+def test_bank_energy_float32_range_regression():
+    """128 MiB capacity: byte-valued occupancy near 10^8 sits beyond f32's
+    exact-integer range, so the old f32 default misread bank boundaries
+    (act off by one on a few-byte offset). The auto backend must now be
+    exact on CPU (float64 numpy)."""
+    from repro.core.banking import bank_activity
+    mib = 2**20
+    cap, banks, alpha = 128 * mib, 5, 0.9
+    usable = alpha * (cap / banks)              # non-power-of-two divisor
+    occ = np.floor(np.array([k * usable + off for off in (-3.0, 3.0)
+                             for k in range(1, 6)]))
+    d = np.ones_like(occ)
+    act = bank_activity(occ.astype(np.int64), alpha, cap, banks)
+    out = np.asarray(bank_activity_stats(
+        d, occ, np.array([usable]), np.array([float(banks)])))
+    assert out[0, 0] == pytest.approx(float((act * d).sum()), abs=1e-9)
+    assert out[0, 1] == pytest.approx(
+        float(np.abs(np.diff(act.astype(np.float64))).sum()), abs=1e-9)
+
+
+# --- exact idle-run stats (batched Stage-II engine) ----------------------------
+
+def _exact_inputs(nseg, seed=6):
+    rng = np.random.default_rng(seed)
+    d = rng.random(nseg) * 1e-3 + 1e-6
+    occ = (rng.integers(0, 130 * 2**20, nseg) // 1024 * 1024).astype(
+        np.float64)
+    us, nb, _ = candidate_grid(
+        [c * 2**20 for c in (48, 64, 128)], [1, 4, 16, 32], 0.9)
+    th = np.tile([1e-4, 5e-4, 1e-3, 2e-3], 3)
+    return d, occ, us, nb, th
+
+
+@pytest.mark.parametrize("nseg", [1, 17, 256, 1000])
+def test_exact_bank_stats_kernel_vs_numpy(nseg):
+    """Pallas exact-stats kernel (interpret mode, cross-tile carries) vs the
+    float64 reference."""
+    d, occ, us, nb, th = _exact_inputs(nseg)
+    ref = exact_bank_stats_np(d, occ, us, nb, th)
+    out = np.asarray(exact_bank_stats(d, occ, us, nb, th,
+                                      backend="interpret", block_s=64))
+    np.testing.assert_allclose(out, ref, rtol=5e-3, atol=5e-3)
+
+
+def test_exact_bank_stats_block_shape_independence():
+    d, occ, us, nb, th = _exact_inputs(300, seed=7)
+    o1 = np.asarray(exact_bank_stats(d, occ, us, nb, th,
+                                     backend="interpret", block_s=32))
+    o2 = np.asarray(exact_bank_stats(d, occ, us, nb, th,
+                                     backend="interpret", block_s=128))
+    np.testing.assert_allclose(o1, o2, rtol=1e-5, atol=1e-5)
+
+
+def test_exact_bank_stats_jnp_vs_numpy():
+    d, occ, us, nb, th = _exact_inputs(500, seed=8)
+    ref = exact_bank_stats_np(d, occ, us, nb, th)
+    out = np.asarray(exact_bank_stats(d, occ, us, nb, th, backend="ref"))
+    np.testing.assert_allclose(out, ref, rtol=5e-3, atol=5e-3)
