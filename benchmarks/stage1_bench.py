@@ -1,0 +1,172 @@
+"""Stage-I throughput: PSS probe-and-tile vs step-by-step DES.
+
+Three measurements, written to `BENCH_stage1.json`:
+
+  * headline — an 8k-context decode horizon on the mini GQA config: PSS
+    wall time vs the exact path's cost (estimated from a sample of evenly
+    spaced per-step DES runs — actually stepping all 8192 would take
+    minutes, which is the point). Asserts the >=50x acceptance bar.
+  * full-size dsr1d decode horizon with adaptive refinement (evictions make
+    the drop stream piecewise affine): probes used + speedup.
+  * micro: DES layer memoization on a full-size decode step, the cached
+    `OccupancyTrace.as_arrays` integration on the million-event synthesized
+    trace, and the bit-identical traffic fast-forward.
+
+Run:  PYTHONPATH=src python -m benchmarks.stage1_bench [out.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.core.workload import build_decode_graph
+from repro.sim.accelerator import baseline_accelerator
+from repro.sim.engine import simulate
+from repro.sim.pss import StepProbe, simulate_decode
+from repro.traffic.generators import LengthModel, generate
+from repro.traffic.occupancy import simulate_traffic
+
+DEFAULT_OUT = "BENCH_stage1.json"
+HEADLINE_STEPS = 8192
+
+
+def _wall(f):
+    t0 = time.perf_counter()
+    out = f()
+    return time.perf_counter() - t0, out
+
+
+def _estimate_exact(cfg, accel, start_ctx, steps, *, batch, subops,
+                    samples=12):
+    """Mean per-step DES wall time over evenly spaced contexts x steps."""
+    ctxs = np.linspace(start_ctx, start_ctx + steps - 1, samples).astype(int)
+    kw = dict(batch=batch, subops=subops, byte=1, policy="fifo",
+              memoize_layers=False)
+    t0 = time.perf_counter()
+    for c in ctxs:
+        StepProbe.run(cfg, accel, int(c), **kw)
+    per_step = (time.perf_counter() - t0) / samples
+    return per_step * steps
+
+
+def bench_stage1(out_path: str = DEFAULT_OUT) -> dict:
+    report = {}
+
+    # --- headline: 8k-context decode, mini GQA config -----------------------
+    cfg = reduced(get_arch("dsr1d-qwen-1.5b"), layers=2)
+    accel = baseline_accelerator(32)
+    kw = dict(start_ctx=1, steps=HEADLINE_STEPS, batch=4, subops=2)
+    est_exact = _estimate_exact(cfg, accel, kw["start_ctx"], kw["steps"],
+                                batch=kw["batch"], subops=kw["subops"])
+    t_pss, res = _wall(lambda: simulate_decode(cfg, accel, fidelity="pss",
+                                               **kw))
+    n_ev = sum(t.n_events for t in res.traces.values())
+    speedup = est_exact / t_pss
+    report["headline_8k_decode"] = {
+        "config": "dsr1d-qwen-1.5b (reduced, 2 layers)",
+        "steps": kw["steps"],
+        "probes": len(res.probes),
+        "events": n_ev,
+        "exact_est_s": est_exact,
+        "pss_s": t_pss,
+        "speedup": speedup,
+        "note": "exact cost estimated from 12 evenly spaced per-step DES "
+                "runs x steps",
+    }
+    assert res.fidelity == "pss"
+    assert speedup >= 50, f"PSS speedup {speedup:.1f}x < 50x acceptance bar"
+
+    # cached integration on the synthesized million-event trace
+    tr = res.traces["sram"]
+    tr._cache = None
+    t_cold, _ = _wall(lambda: tr.peak_needed())
+    t_warm, _ = _wall(lambda: tr.peak_total())       # served from cache
+    report["trace_integration"] = {
+        "events": tr.n_events,
+        "integrate_cold_s": t_cold,
+        "cached_query_s": t_warm,
+        "events_per_sec_cold": tr.n_events / max(t_cold, 1e-12),
+    }
+
+    # --- full-size dsr1d horizon (adaptive refinement) -----------------------
+    cfg_full = get_arch("dsr1d-qwen-1.5b")
+    accel_full = baseline_accelerator(128)
+    kwf = dict(start_ctx=2048, steps=1024, batch=8, subops=2)
+    est_full = _estimate_exact(cfg_full, accel_full, kwf["start_ctx"],
+                               kwf["steps"], batch=kwf["batch"],
+                               subops=kwf["subops"], samples=6)
+    t_full, res_full = _wall(
+        lambda: simulate_decode(cfg_full, accel_full, fidelity="pss", **kwf))
+    report["full_dsr1d_decode"] = {
+        "steps": kwf["steps"],
+        "probes": len(res_full.probes),
+        "events": sum(t.n_events for t in res_full.traces.values()),
+        "exact_est_s": est_full,
+        "pss_s": t_full,
+        "speedup": est_full / t_full,
+    }
+
+    # --- micro: layer memoization (pays off when per-layer DES work is
+    # heavy relative to the boundary guards: multilevel full prefill) --------
+    from repro.core.workload import build_graph
+    from repro.sim.accelerator import multilevel_accelerator
+    g = build_graph(cfg_full, M=2048, subops=4)
+    ml = multilevel_accelerator(64)
+    t_plain, _ = _wall(lambda: simulate(g, ml))
+    t_memo, r_memo = _wall(lambda: simulate(g, ml, memoize_layers=True))
+    report["layer_memoization"] = {
+        "workload": "dsr1d multilevel prefill M=2048",
+        "replayed_layers": r_memo.replayed_layers,
+        "plain_s": t_plain,
+        "memoized_s": t_memo,
+        "speedup": t_plain / t_memo,
+    }
+
+    # --- micro: traffic fast-forward ----------------------------------------
+    reqs = generate("bursty", 6.0, 60.0, seed=0,
+                    lengths=LengthModel(max_len=1024))
+    t_ex, _ = _wall(lambda: simulate_traffic(cfg_full, reqs, num_slots=8,
+                                             max_len=1024,
+                                             fidelity="exact"))
+    t_ff, _ = _wall(lambda: simulate_traffic(cfg_full, reqs, num_slots=8,
+                                             max_len=1024, fidelity="pss"))
+    report["traffic_fast_forward"] = {
+        "exact_s": t_ex,
+        "pss_s": t_ff,
+        "speedup": t_ex / t_ff,
+    }
+
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    return report
+
+
+def bench_stage1_pss():
+    """benchmarks.run adapter: (us_per_call, derived) of the headline run."""
+    r = bench_stage1()
+    h = r["headline_8k_decode"]
+    return h["pss_s"] * 1e6, (
+        f"steps={h['steps']} probes={h['probes']} events={h['events']} "
+        f"speedup={h['speedup']:.0f}x "
+        f"full={r['full_dsr1d_decode']['speedup']:.0f}x")
+
+
+def main() -> None:
+    out = sys.argv[1] if len(sys.argv) > 1 else DEFAULT_OUT
+    r = bench_stage1(out)
+    print(json.dumps(r, indent=1))
+    h = r["headline_8k_decode"]
+    print(f"wrote {out}: 8k decode {h['speedup']:.0f}x "
+          f"({h['probes']} probes / {h['steps']} steps, "
+          f"{h['events']} events), full-config "
+          f"{r['full_dsr1d_decode']['speedup']:.0f}x, memoization "
+          f"{r['layer_memoization']['speedup']:.2f}x, traffic FF "
+          f"{r['traffic_fast_forward']['speedup']:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,31 @@ PYTHONPATH=src timeout 120 python -m repro.launch.trapti \
 grep -q "Stage II" /tmp/trapti_smoke.out
 grep -q -- "-->" /tmp/trapti_smoke.out
 
+# golden-trace conformance + full PSS equivalence (includes slow-marked
+# cross-config sweeps that tier-1 skips via addopts), with a coverage
+# floor on the Stage-I simulator package when pytest-cov is available
+if python -c "import pytest_cov" 2>/dev/null; then
+    PYTHONPATH=src python -m pytest -q -m "slow or not slow" \
+        tests/test_golden_traces.py tests/test_pss.py \
+        tests/test_sim_engine.py tests/test_trace_props.py \
+        --cov=repro.sim --cov-report=term --cov-fail-under=80
+else
+    echo "ci: pytest-cov unavailable, skipping sim coverage floor"
+    PYTHONPATH=src python -m pytest -q -m "slow or not slow" \
+        tests/test_golden_traces.py tests/test_pss.py
+fi
+
+# PSS smoke through the paper CLI: probe-and-tile decode horizon + Stage II
+PYTHONPATH=src timeout 120 python -m repro.launch.trapti \
+    --arch dsr1d-qwen-1.5b --fidelity pss --seq 1024 --decode-steps 128 \
+    --decode-batch 4 --backend numpy > /tmp/pss_smoke.out
+grep -q "fidelity=pss" /tmp/pss_smoke.out
+grep -q "Stage II" /tmp/pss_smoke.out
+
+# Stage-I PSS benchmark: asserts the >=50x speedup bar internally
+PYTHONPATH=src timeout 300 python -m benchmarks.stage1_bench \
+    /tmp/BENCH_stage1.json | tail -1
+
 # Stage-II engine benchmark: exactness vs the scalar reference is asserted
 # inside; BENCH_stage2.json records the throughput trajectory
 PYTHONPATH=src timeout 300 python -m benchmarks.stage2_bench \

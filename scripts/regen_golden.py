@@ -1,0 +1,37 @@
+#!/usr/bin/env python
+"""Regenerate the frozen Stage-I golden-trace fixtures.
+
+    PYTHONPATH=src python scripts/regen_golden.py [out.json]
+
+Writes `tests/golden/stage1_golden.json`: exact-DES occupancy segments and
+access statistics for the mini gpt2-xl / dsr1d-qwen-1.5b prefill and decode
+cases defined in `tests/golden_util.py`. Run this ONLY when a simulator
+change intentionally alters Stage-I output, and review the diff — these
+fixtures are the regression lock for the DES, the layer-memoization fast
+path and PSS probe equivalence (`tests/test_golden_traces.py`)."""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tests"))
+
+import golden_util  # noqa: E402
+
+
+def main() -> None:
+    out = sys.argv[1] if len(sys.argv) > 1 else golden_util.GOLDEN_PATH
+    payload = golden_util.build_golden()
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    for name, case in payload.items():
+        segs = sum(len(m["durations"]) for m in case["mems"].values())
+        print(f"{name}: {segs} segments, "
+              f"t={case['total_time']*1e6:.1f} us, "
+              f"macs={case['total_macs']}")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -467,6 +467,27 @@ def build_graph(cfg: ArchConfig, M: int = 2048, subops: int = 4,
     return g
 
 
+def decode_probe_contexts(start_ctx: int, steps: int,
+                          n_probes: int = 3) -> List[int]:
+    """Probe context lengths for the PSS decode fast path.
+
+    Returns the endpoints of the decode horizon [start_ctx,
+    start_ctx + steps - 1] plus evenly-spaced interior probes — the context
+    lengths at which the exact DES is run so the per-step delta-event
+    pattern can be affinely tiled (and its affinity *validated* at the
+    interior probes) across the whole horizon. With `steps <= n_probes`
+    every step is a probe and PSS degenerates to the exact path."""
+    if steps < 1:
+        raise ValueError(f"steps must be >= 1, got {steps}")
+    if n_probes < 2:
+        raise ValueError(f"n_probes must be >= 2, got {n_probes}")
+    last = start_ctx + steps - 1
+    if steps <= n_probes:
+        return list(range(start_ctx, last + 1))
+    return sorted({start_ctx + (i * (steps - 1)) // (n_probes - 1)
+                   for i in range(n_probes)})
+
+
 def build_decode_graph(cfg: ArchConfig, context_len: int = 2048,
                        batch: int = 64, subops: int = 4,
                        byte: int = 1) -> WorkloadGraph:

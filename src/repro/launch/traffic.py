@@ -80,6 +80,11 @@ def main() -> None:
     ap.add_argument("--prune", action="store_true",
                     help="prune the (C, B) grid with the lower bound "
                          "before exact evaluation")
+    ap.add_argument("--fidelity", default="auto",
+                    choices=["exact", "pss", "auto"],
+                    help="traffic-simulator fast path: pss/auto fast-forward "
+                         "uneventful lockstep stretches (bit-identical); "
+                         "exact steps every iteration")
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
 
@@ -104,7 +109,7 @@ def main() -> None:
                               hysteresis_multiple=args.hysteresis),
         lengths=LengthModel(max_len=args.max_len),
         resample_dt=args.resample_dt, fast_backend=args.fast_backend,
-        backend=args.backend, prune=args.prune)
+        backend=args.backend, prune=args.prune, fidelity=args.fidelity)
 
     print("\n# online controller vs offline oracle vs no gating")
     print(report.format())

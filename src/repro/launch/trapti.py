@@ -20,6 +20,7 @@ from repro.core.sensitivity import policy_sensitivity
 from repro.core.workload import build_decode_graph, build_graph
 from repro.sim.accelerator import baseline_accelerator, multilevel_accelerator
 from repro.sim.engine import find_min_sram, simulate
+from repro.sim.pss import simulate_decode
 
 MIB = 2**20
 
@@ -32,6 +33,19 @@ def main() -> None:
     ap.add_argument("--phase", choices=["prefill", "decode"],
                     default="prefill")
     ap.add_argument("--decode-batch", type=int, default=16)
+    ap.add_argument("--decode-steps", type=int, default=0,
+                    help="simulate a decode *horizon* of this many steps "
+                         "(0 = single decode step / prefill as before)")
+    ap.add_argument("--fidelity", choices=["exact", "pss", "auto"],
+                    default="exact",
+                    help="Stage-I decode-horizon engine: pss/auto probe a "
+                         "few context lengths and tile the periodic steady "
+                         "state; exact runs the DES per step. pss/auto "
+                         "imply --phase decode")
+    ap.add_argument("--memoize-layers", action="store_true",
+                    help="replay structurally identical decoder layers "
+                         "inside the DES (timestamps exact to float "
+                         "translation error)")
     ap.add_argument("--scheduler", choices=["fifo", "mempeak"],
                     default="fifo")
     ap.add_argument("--policy", choices=["conservative", "aggressive",
@@ -49,35 +63,69 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
-    if args.phase == "decode":
-        graph = build_decode_graph(cfg, context_len=args.seq,
-                                   batch=args.decode_batch)
-    else:
-        graph = build_graph(cfg, M=args.seq, subops=4)
-    print(f"workload: {graph.name}  {graph.total_macs()/1e12:.2f} TMACs, "
-          f"{len(graph.ops)} ops, weights "
-          f"{graph.total_weight_bytes()/MIB:.0f} MiB")
+    if args.fidelity != "exact" and args.phase != "decode":
+        print(f"--fidelity {args.fidelity} targets the decode phase; "
+              f"switching --phase decode")
+        args.phase = "decode"
+    if args.fidelity != "exact" and args.decode_steps <= 0:
+        args.decode_steps = 64
 
     # ---- Stage I: size the SRAM, extract the trace --------------------------
     accel = (multilevel_accelerator(64) if args.multilevel
              else baseline_accelerator(128))
-    if args.multilevel:
-        sim = simulate(graph, accel, policy=args.scheduler)
-        mib = 64
+    if args.phase == "decode" and args.decode_steps > 0:
+        # decode horizon: PSS probe-and-tile (or exact per-step) Stage I
+        sim = simulate_decode(
+            cfg, accel, start_ctx=args.seq, steps=args.decode_steps,
+            batch=args.decode_batch, fidelity=args.fidelity,
+            policy=args.scheduler, memoize_layers=args.memoize_layers)
+        mib = next(m.capacity for m in accel.memories
+                   if m.name == "sram") // MIB
+        energy = assemble_energy(sim, accel)
+        n_ev = sum(t.n_events for t in sim.traces.values())
+        print(f"workload: {sim.graph_name}  "
+              f"{sim.total_macs/1e12:.2f} TMACs over {sim.steps} steps")
+        print(f"Stage I [fidelity={sim.fidelity}]: "
+              f"t={sim.total_time*1e3:.1f} ms  "
+              f"probes={len(sim.probes)}/{sim.steps} steps  "
+              f"events={n_ev}  E_onchip={energy.total:.1f} J  "
+              f"write-backs={sim.writebacks}"
+              + (f"  [fallback: {sim.fallback_reason}]"
+                 if sim.fallback_reason else ""))
     else:
-        mib, sim = find_min_sram(graph, accel, lo_mib=16, hi_mib=256,
-                                 step_mib=16)
-        if args.scheduler != "fifo":
-            sim = simulate(graph, accel.with_sram_capacity(mib * MIB),
-                           policy=args.scheduler)
-    energy = assemble_energy(sim, accel)
-    print(f"Stage I [{args.scheduler}]: t={sim.total_time*1e3:.1f} ms  "
-          f"util={sim.pe_utilization*100:.1f}%  "
-          f"E_onchip={energy.total:.1f} J  min SRAM={mib} MiB  "
-          f"write-backs={sim.writebacks}")
+        if args.phase == "decode":
+            graph = build_decode_graph(cfg, context_len=args.seq,
+                                       batch=args.decode_batch)
+        else:
+            graph = build_graph(cfg, M=args.seq, subops=4)
+        print(f"workload: {graph.name}  {graph.total_macs()/1e12:.2f} "
+              f"TMACs, {len(graph.ops)} ops, weights "
+              f"{graph.total_weight_bytes()/MIB:.0f} MiB")
+        if args.multilevel:
+            sim = simulate(graph, accel, policy=args.scheduler,
+                           memoize_layers=args.memoize_layers)
+            mib = 64
+        else:
+            mib, sim = find_min_sram(graph, accel, lo_mib=16, hi_mib=256,
+                                     step_mib=16)
+            if args.scheduler != "fifo" or args.memoize_layers:
+                sim = simulate(graph, accel.with_sram_capacity(mib * MIB),
+                               policy=args.scheduler,
+                               memoize_layers=args.memoize_layers)
+        energy = assemble_energy(sim, accel)
+        print(f"Stage I [{args.scheduler}]: t={sim.total_time*1e3:.1f} ms  "
+              f"util={sim.pe_utilization*100:.1f}%  "
+              f"E_onchip={energy.total:.1f} J  min SRAM={mib} MiB  "
+              f"write-backs={sim.writebacks}")
 
+    # horizon mode runs at the accelerator's fixed SRAM (no bisection), so
+    # min_sram_mib would be misleading there; report the capacity instead
+    horizon = args.phase == "decode" and args.decode_steps > 0
     report = {"arch": args.arch, "seq": args.seq, "phase": args.phase,
-              "scheduler": args.scheduler, "min_sram_mib": mib,
+              "scheduler": args.scheduler, "fidelity": args.fidelity,
+              "decode_steps": args.decode_steps,
+              "min_sram_mib": None if horizon else mib,
+              "sram_capacity_mib": mib,
               "time_ms": sim.total_time * 1e3,
               "energy_onchip_j": energy.total, "memories": {}}
 

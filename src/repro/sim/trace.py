@@ -16,26 +16,136 @@ class OccupancyTrace:
     record *delta events* (t, d_needed, d_obsolete) and integrate after a
     stable sort by time — the resulting step function is exact. `segments()`
     yields (duration, needed, obsolete, total) rows — the artifact Stage II
-    consumes (Eq. 1/4 of the paper)."""
+    consumes (Eq. 1/4 of the paper).
+
+    Mutate only through `event()` / `extend()`: the integrated step function
+    is cached and those are the invalidation points. `event()` appends to
+    cheap Python tail lists (the DES hot path); `extend()` stores whole
+    numpy chunks (the PSS/traffic bulk path), so million-event synthesized
+    traces never round-trip through per-element Python objects. The
+    `ev_times`/`ev_dneeded`/`ev_dobsolete` list views materialize chunks on
+    first access; insertion order is preserved across both paths (ties in
+    the stable time sort resolve in emission order)."""
     mem_name: str
     capacity: int
-    ev_times: List[float] = field(default_factory=list)
-    ev_dneeded: List[int] = field(default_factory=list)
-    ev_dobsolete: List[int] = field(default_factory=list)
+    _tail_t: List[float] = field(default_factory=list, repr=False,
+                                 compare=False)
+    _tail_dn: List[int] = field(default_factory=list, repr=False,
+                                compare=False)
+    _tail_do: List[int] = field(default_factory=list, repr=False,
+                                compare=False)
+    # sealed (t, dn, do) numpy chunks, in emission order, all before _tail_*
+    _chunks: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = field(
+        default_factory=list, repr=False, compare=False)
+    # (n_events_at_integration, (t, n, o)) — see as_arrays()
+    _cache: Optional[Tuple[int, Tuple[np.ndarray, np.ndarray, np.ndarray]]] \
+        = field(default=None, init=False, repr=False, compare=False)
 
     def event(self, t: float, d_needed: int, d_obsolete: int) -> None:
         if d_needed == 0 and d_obsolete == 0:
             return
-        self.ev_times.append(t)
-        self.ev_dneeded.append(int(d_needed))
-        self.ev_dobsolete.append(int(d_obsolete))
+        self._tail_t.append(t)
+        self._tail_dn.append(int(d_needed))
+        self._tail_do.append(int(d_obsolete))
+        self._cache = None
+
+    def extend(self, times, d_needed, d_obsolete) -> None:
+        """Bulk-append delta events (vectorized `event`). Rows where both
+        deltas are zero are dropped, matching `event` semantics."""
+        t = np.asarray(times, np.float64)
+        dn = np.asarray(d_needed, np.int64)
+        do = np.asarray(d_obsolete, np.int64)
+        keep = (dn != 0) | (do != 0)
+        if not keep.all():
+            t, dn, do = t[keep], dn[keep], do[keep]
+        if len(t) == 0:
+            return
+        self._seal_tail()
+        self._chunks.append((t, dn, do))
+        self._cache = None
+
+    def _seal_tail(self) -> None:
+        if self._tail_t:
+            self._chunks.append((np.asarray(self._tail_t, np.float64),
+                                 np.asarray(self._tail_dn, np.int64),
+                                 np.asarray(self._tail_do, np.int64)))
+            self._tail_t, self._tail_dn, self._tail_do = [], [], []
+
+    def _materialize(self) -> None:
+        """Fold sealed chunks back into the tail lists (list-view access)."""
+        if not self._chunks:
+            return
+        self._chunks.append((np.asarray(self._tail_t, np.float64),
+                             np.asarray(self._tail_dn, np.int64),
+                             np.asarray(self._tail_do, np.int64)))
+        self._tail_t = np.concatenate(
+            [c[0] for c in self._chunks]).tolist()
+        self._tail_dn = np.concatenate(
+            [c[1] for c in self._chunks]).tolist()
+        self._tail_do = np.concatenate(
+            [c[2] for c in self._chunks]).tolist()
+        self._chunks = []
+
+    @property
+    def ev_times(self) -> List[float]:
+        self._materialize()
+        return self._tail_t
+
+    @property
+    def ev_dneeded(self) -> List[int]:
+        self._materialize()
+        return self._tail_dn
+
+    @property
+    def ev_dobsolete(self) -> List[int]:
+        self._materialize()
+        return self._tail_do
+
+    @property
+    def n_events(self) -> int:
+        return (sum(len(c[0]) for c in self._chunks) + len(self._tail_t))
+
+    def events_since(self, n0: int):
+        """(times, dn, do) arrays of the events appended after the first
+        `n0` — O(tail) when no chunk was sealed since (the DES memoization
+        recorder's case)."""
+        sealed = sum(len(c[0]) for c in self._chunks)
+        if n0 < sealed:
+            self._materialize()
+            sealed = 0
+        i = n0 - sealed
+        return (np.asarray(self._tail_t[i:], np.float64),
+                np.asarray(self._tail_dn[i:], np.int64),
+                np.asarray(self._tail_do[i:], np.int64))
+
+    def _parts(self):
+        """Raw event arrays in emission order, without materializing."""
+        for c in self._chunks:
+            yield c
+        if self._tail_t:
+            yield (np.asarray(self._tail_t, np.float64),
+                   np.asarray(self._tail_dn, np.int64),
+                   np.asarray(self._tail_do, np.int64))
 
     # ------------------------------------------------------------- views
     def as_arrays(self):
-        """Sorted, integrated (times, needed, obsolete) step function."""
-        t = np.asarray(self.ev_times, np.float64)
-        dn = np.asarray(self.ev_dneeded, np.int64)
-        do = np.asarray(self.ev_dobsolete, np.int64)
+        """Sorted, integrated (times, needed, obsolete) step function.
+
+        The result is cached until the next `event()`/`extend()` — repeated
+        peak/segment queries on a finished trace integrate once instead of
+        re-sorting the (possibly millions of) events per call. Treat the
+        returned arrays as read-only."""
+        n_ev = self.n_events
+        if self._cache is not None and self._cache[0] == n_ev:
+            return self._cache[1]
+        parts = list(self._parts())
+        if parts:
+            t = np.concatenate([p[0] for p in parts])
+            dn = np.concatenate([p[1] for p in parts])
+            do = np.concatenate([p[2] for p in parts])
+        else:
+            t = np.zeros(0)
+            dn = do = np.zeros(0, np.int64)
         order = np.argsort(t, kind="stable")
         t = t[order]
         n = np.cumsum(dn[order])
@@ -44,6 +154,7 @@ class OccupancyTrace:
         if len(t):
             last = np.r_[t[1:] != t[:-1], True]
             t, n, o = t[last], n[last], o[last]
+        self._cache = (n_ev, (t, n, o))
         return t, n, o
 
     def segments(self, end_time: float):
@@ -85,10 +196,14 @@ class OccupancyTrace:
         out = OccupancyTrace(mem_name or self.mem_name,
                              self.capacity + sum(t.capacity for t in others))
         for tr in (self, *others):
-            out.ev_times.extend(tr.ev_times)
-            out.ev_dneeded.extend(tr.ev_dneeded)
-            out.ev_dobsolete.extend(tr.ev_dobsolete)
+            for part in tr._parts():
+                out.extend(*part)
         return out
+
+    def time_integral(self, end_time: float, use: str = "total") -> float:
+        """Byte-seconds under the needed|total occupancy curve."""
+        dur, occ = self.occupancy_series(end_time, use=use)
+        return float((occ.astype(np.float64) * dur).sum())
 
     def resampled(self, dt: float, end_time: float) -> "OccupancyTrace":
         """Snap the step function to a uniform `dt` grid (right-edge sample).

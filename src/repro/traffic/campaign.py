@@ -149,7 +149,8 @@ def run_scenario(scn: Scenario, *, capacities_mib: Optional[Sequence[int]],
                  resample_dt: Optional[float] = None,
                  fast_backend: str = "auto",
                  backend: str = "auto", prune: bool = False,
-                 prune_margin: float = 1e-3) -> Tuple[
+                 prune_margin: float = 1e-3,
+                 fidelity: str = "auto") -> Tuple[
                      TrafficSim, List[CampaignRow], np.ndarray]:
     """Simulate one scenario's traffic, then evaluate its (C, B) grid.
 
@@ -163,7 +164,7 @@ def run_scenario(scn: Scenario, *, capacities_mib: Optional[Sequence[int]],
     reqs = generate(scn.arrival, scn.rate, scn.horizon_s, seed=scn.seed,
                     lengths=lengths)
     sim = simulate_traffic(cfg, reqs, num_slots=scn.num_slots,
-                           max_len=scn.max_len)
+                           max_len=scn.max_len, fidelity=fidelity)
     trace = sim.trace
     if resample_dt:
         trace = trace.resampled(resample_dt, sim.total_time)
@@ -220,7 +221,8 @@ def run_campaign(archs: Sequence[str], *, arrivals: Sequence[str] = ("poisson",)
                  resample_dt: Optional[float] = None,
                  fast_backend: str = "auto",
                  backend: str = "auto",
-                 prune: bool = False) -> CampaignReport:
+                 prune: bool = False,
+                 fidelity: str = "auto") -> CampaignReport:
     """The full grid. Identical (arrival, rate, seed) cells share one request
     stream across architectures, so MHA-vs-GQA rows are directly comparable."""
     ctrl = ctrl or ControllerConfig()
@@ -236,7 +238,7 @@ def run_campaign(archs: Sequence[str], *, arrivals: Sequence[str] = ("poisson",)
                         scn, capacities_mib=capacities_mib, banks=banks,
                         ctrl=ctrl, lengths=lengths, resample_dt=resample_dt,
                         fast_backend=fast_backend, backend=backend,
-                        prune=prune)
+                        prune=prune, fidelity=fidelity)
                     key = (arch, scn.traffic_key)
                     report.sims[key] = sim
                     report.rows.extend(rows)

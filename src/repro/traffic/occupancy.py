@@ -83,14 +83,25 @@ def simulate_traffic(cfg, requests: Sequence[RequestSpec], *,
                      num_slots: int = 8, max_len: int = 2048,
                      kv_dtype_bytes: int = 2,
                      timing: Optional[TimingModel] = None,
-                     mem_name: str = "kv") -> TrafficSim:
+                     mem_name: str = "kv",
+                     fidelity: str = "auto") -> TrafficSim:
     """Discrete-event continuous batching over `num_slots` KV slots.
 
     Each admitted request prefills its prompt (occupancy step of the full
     prompt KV + any fixed recurrent state), then gains one token of KV per
     lockstep decode iteration until `output_len` tokens are produced, then
     retires (occupancy drops by everything it held). Admission is FCFS and
-    happens between decode iterations, exactly like `ContinuousBatcher`."""
+    happens between decode iterations, exactly like `ContinuousBatcher`.
+
+    `fidelity`: "exact" steps every lockstep decode iteration individually;
+    "pss"/"auto" enable the periodic-steady-state fast forward — stretches
+    of iterations with no admission, retirement or KV-growth kink are
+    emitted in one vectorized batch. The fast path is *bit-identical* to
+    the exact loop (same event list, same float time accumulation via
+    cumsum, same stats), so "auto" always takes it; the knob exists to keep
+    the two paths regression-testable against each other."""
+    if fidelity not in ("exact", "pss", "auto"):
+        raise ValueError(f"fidelity must be exact|pss|auto, got {fidelity}")
     timing = timing or TimingModel.from_arch(cfg)
     reqs = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
     pending = list(reversed(reqs))               # pop() = earliest arrival
@@ -142,6 +153,63 @@ def simulate_traffic(cfg, requests: Sequence[RequestSpec], *,
         stats.latency_s.append(t - s.req.arrival_s)
         slots[i] = None
 
+    def kv_growth(ctx: int) -> int:
+        if ctx >= max_len:
+            return 0
+        return (kv_bytes_at(cfg, ctx + 1, kv_dtype_bytes)
+                - kv_bytes_at(cfg, ctx, kv_dtype_bytes))
+
+    def ff_window(active: List[int]) -> int:
+        """Lockstep iterations that are provably uneventful: no retirement,
+        no KV-growth kink (saturation), no admission opportunity. Within
+        the window every slot's growth is constant, so the iterations can
+        be emitted in one vectorized batch, bit-identically."""
+        k = min(slots[i].req.output_len - 1 - slots[i].produced
+                for i in active) - 1          # stop before any retirement
+        for i in active:
+            s = slots[i]
+            if s.ctx >= max_len:
+                continue
+            b0 = kv_bytes_at(cfg, s.ctx, kv_dtype_bytes)
+            d1 = kv_bytes_at(cfg, s.ctx + 1, kv_dtype_bytes) - b0
+            w = max_len - s.ctx
+            # shrink to an affine stretch (handles local-window kinks)
+            while w > 1 and (kv_bytes_at(cfg, s.ctx + w, kv_dtype_bytes)
+                             - b0) != w * d1:
+                w //= 2
+            k = min(k, w)
+        return k
+
+    def fast_forward(active: List[int], k: int, dt: float) -> None:
+        nonlocal t
+        # sequential float accumulation: cumsum([t, dt, ...]) reproduces the
+        # exact loop's `t += dt` chain bit-for-bit
+        ts = np.cumsum(np.r_[t, np.full(k, dt)])[1:]
+        if pending and any(s is None for s in slots):
+            a = pending[-1].arrival_s
+            stop = int(np.searchsorted(ts, a, side="left"))
+            if stop < k:
+                k, ts = stop + 1, ts[:stop + 1]   # admit on the next pass
+        stats.decode_steps += k
+        grow: List[int] = []
+        for i in active:
+            s = slots[i]
+            d1 = kv_growth(s.ctx)
+            access.add_read(mem_name,
+                            k * s.bytes + d1 * (k * (k - 1) // 2))
+            if d1:
+                grow.append(d1)
+                s.bytes += k * d1
+                access.add_write(mem_name, k * d1)
+                stats.admitted_bytes += k * d1
+            s.ctx = min(s.ctx + k, max_len)
+            s.produced += k
+        if grow:
+            trace.extend(np.repeat(ts, len(grow)),
+                         np.tile(np.asarray(grow, np.int64), k),
+                         np.zeros(k * len(grow), np.int64))
+        t = float(ts[-1])
+
     while pending or any(s is not None for s in slots):
         admit()
         active = [i for i in range(num_slots) if slots[i] is not None]
@@ -152,6 +220,13 @@ def simulate_traffic(cfg, requests: Sequence[RequestSpec], *,
             # the gap — the fluctuation power gating feeds on)
             t = max(t, pending[-1].arrival_s)
             continue
+        if fidelity != "exact":
+            k = ff_window(active)
+            if k > 1:
+                fast_forward(active, k,
+                             timing.decode_base_s
+                             + timing.decode_slot_s * len(active))
+                continue
         t += timing.decode_base_s + timing.decode_slot_s * len(active)
         stats.decode_steps += 1
         for i in active:

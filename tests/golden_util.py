@@ -1,0 +1,126 @@
+"""Shared construction of the frozen Stage-I golden fixtures.
+
+Used by `tests/test_golden_traces.py` (comparison) and
+`scripts/regen_golden.py` (regeneration) so the two can never drift. Cases
+are deliberately tiny — reduced 2-layer paper configs on an 8 MiB SRAM —
+so regeneration takes seconds and the JSON stays reviewable, while still
+exercising prefill and decode graphs of both an MHA (gpt2-xl) and a GQA
+(dsr1d-qwen-1.5b) workload."""
+import json
+import os
+
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.core.workload import build_decode_graph, build_graph
+from repro.sim.accelerator import baseline_accelerator
+from repro.sim.engine import simulate
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                           "stage1_golden.json")
+
+CASES = {
+    "gpt2-xl-mini-prefill": dict(
+        arch="gpt2-xl", phase="prefill", M=128, subops=2, sram_mib=8),
+    "dsr1d-qwen-1.5b-mini-prefill": dict(
+        arch="dsr1d-qwen-1.5b", phase="prefill", M=128, subops=2, sram_mib=8),
+    "gpt2-xl-mini-decode": dict(
+        arch="gpt2-xl", phase="decode", ctx=96, batch=4, subops=2,
+        sram_mib=8),
+    "dsr1d-qwen-1.5b-mini-decode": dict(
+        arch="dsr1d-qwen-1.5b", phase="decode", ctx=96, batch=4, subops=2,
+        sram_mib=8),
+}
+
+
+def run_case(name: str, **engine_kw):
+    spec = CASES[name]
+    cfg = reduced(get_arch(spec["arch"]), layers=2)
+    if spec["phase"] == "prefill":
+        g = build_graph(cfg, M=spec["M"], subops=spec["subops"])
+    else:
+        g = build_decode_graph(cfg, context_len=spec["ctx"],
+                               batch=spec["batch"], subops=spec["subops"])
+    accel = baseline_accelerator(spec["sram_mib"])
+    return simulate(g, accel, **engine_kw), accel
+
+
+def case_payload(name: str, **engine_kw) -> dict:
+    sim, _ = run_case(name, **engine_kw)
+    mems = {}
+    for m, tr in sim.traces.items():
+        if tr.n_events == 0:
+            continue
+        dur, needed, obsolete, _ = tr.segments(sim.total_time)
+        mems[m] = {
+            "n_events": tr.n_events,
+            "peak_needed": int(tr.peak_needed()),
+            "peak_total": int(tr.peak_total()),
+            "durations": [float(d) for d in dur],
+            "needed": [int(v) for v in needed],
+            "obsolete": [int(v) for v in obsolete],
+        }
+    return {
+        "total_time": float(sim.total_time),
+        "writebacks": int(sim.writebacks),
+        "total_macs": int(sim.total_macs),
+        "total_vector_ops": int(sim.total_vector_ops),
+        "dram_traffic_bytes": int(sim.dram_traffic_bytes),
+        "access_reads": {k: int(v)
+                         for k, v in sorted(sim.access.reads_bytes.items())},
+        "access_writes": {k: int(v)
+                          for k, v in sorted(sim.access.writes_bytes.items())},
+        "mems": mems,
+    }
+
+
+def build_golden() -> dict:
+    return {name: case_payload(name) for name in sorted(CASES)}
+
+
+def load_golden() -> dict:
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+def diff_payload(got: dict, want: dict, *, time_rtol: float = 0.0) -> list:
+    """Differences between a live payload and the stored fixture.
+
+    Integer occupancy, event counts and access statistics compare *exactly*;
+    durations/total_time allow `time_rtol` (0 locks them bit-for-bit — the
+    engine's time arithmetic is pure IEEE-754 and deterministic)."""
+    errs = []
+
+    def tclose(a, b):
+        a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+        if a.shape != b.shape:
+            return False
+        if time_rtol == 0.0:
+            return bool(np.array_equal(a, b))
+        return bool(np.allclose(a, b, rtol=time_rtol, atol=1e-18))
+
+    for key in ("writebacks", "total_macs", "total_vector_ops",
+                "dram_traffic_bytes", "access_reads", "access_writes"):
+        if got[key] != want[key]:
+            errs.append(f"{key}: {got[key]!r} != {want[key]!r}")
+    if not tclose(got["total_time"], want["total_time"]):
+        errs.append(f"total_time: {got['total_time']!r} != "
+                    f"{want['total_time']!r}")
+    if sorted(got["mems"]) != sorted(want["mems"]):
+        errs.append(f"memories: {sorted(got['mems'])} != "
+                    f"{sorted(want['mems'])}")
+        return errs
+    for m, w in want["mems"].items():
+        g = got["mems"][m]
+        for key in ("n_events", "peak_needed", "peak_total",
+                    "needed", "obsolete"):
+            if g[key] != w[key]:
+                detail = ""
+                if isinstance(w[key], list) and len(g[key]) == len(w[key]):
+                    bad = [i for i, (x, y) in enumerate(zip(g[key], w[key]))
+                           if x != y][:5]
+                    detail = f" (first diffs at segments {bad})"
+                errs.append(f"{m}.{key} mismatch{detail}")
+        if not tclose(g["durations"], w["durations"]):
+            errs.append(f"{m}.durations mismatch")
+    return errs

@@ -1,0 +1,251 @@
+"""PSS decode fast path: probe bit-exactness, synthesis equivalence across
+configs, adaptive refinement on full-size models, DES layer memoization,
+and the bit-identical traffic fast-forward."""
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.core.workload import build_decode_graph, decode_probe_contexts
+from repro.sim.accelerator import baseline_accelerator
+from repro.sim.engine import Engine, simulate
+from repro.sim.pss import simulate_decode
+from repro.traffic.generators import LengthModel, generate
+from repro.traffic.occupancy import simulate_traffic
+
+MIB = 2**20
+
+
+def _mini(arch):
+    return reduced(get_arch(arch), layers=2)
+
+
+def _assert_equivalent(ex, ps, time_rtol=5e-3):
+    """The PSS exactness contract against a step-by-step reference
+    (`time_rtol` mirrors simulate_decode's documented timing bound)."""
+    assert ps.fidelity == "pss"
+    assert ex.total_macs == ps.total_macs
+    assert ex.total_vector_ops == ps.total_vector_ops
+    assert ex.access.reads_bytes == ps.access.reads_bytes
+    assert ex.access.writes_bytes == ps.access.writes_bytes
+    assert abs(ex.total_time - ps.total_time) <= time_rtol * ex.total_time
+    for m in ex.traces:
+        for i in range(ex.steps):
+            te, dne, doe = ex.step_events(m, i)
+            tp, dnp, dop = ps.step_events(m, i)
+            if ex.step_ctx(i) in ps.probes:
+                # probe steps: the exact DES stream, bit-for-bit
+                assert np.array_equal(te, tp), (m, i)
+                assert np.array_equal(dne, dnp), (m, i)
+                assert np.array_equal(doe, dop), (m, i)
+            else:
+                # interior: needed deltas exact (drops never touch needed),
+                # each step zero-balanced, times within the documented bound
+                assert dne.sum() == dnp.sum() == 0, (m, i)
+                assert doe.sum() == dop.sum() == 0, (m, i)
+                order_e = np.argsort(te, kind="stable")
+                order_p = np.argsort(tp, kind="stable")
+                ne = np.cumsum(dne[order_e])
+                npv = np.cumsum(dnp[order_p])
+                assert ne.max(initial=0) == npv.max(initial=0), (m, i)
+        assert ex.traces[m].peak_needed() == ps.traces[m].peak_needed(), m
+
+
+# --- PSS vs exact DES across (config x context x subops) --------------------
+
+FAST_GRID = [
+    ("gpt2-xl", 64, 24, 2),
+    ("dsr1d-qwen-1.5b", 64, 24, 2),
+    ("dsr1d-qwen-1.5b", 200, 17, 1),
+]
+SLOW_GRID = [
+    ("gpt2-xl", 256, 96, 4),
+    ("dsr1d-qwen-1.5b", 256, 96, 4),
+    ("gpt2-xl", 1024, 64, 2),
+    ("dsr1d-qwen-1.5b", 1024, 64, 2),
+]
+
+
+@pytest.mark.parametrize("arch,start,steps,subops", FAST_GRID)
+def test_pss_matches_exact_mini(arch, start, steps, subops):
+    cfg = _mini(arch)
+    accel = baseline_accelerator(32)
+    kw = dict(start_ctx=start, steps=steps, batch=4, subops=subops)
+    ex = simulate_decode(cfg, accel, fidelity="exact", **kw)
+    ps = simulate_decode(cfg, accel, fidelity="pss", **kw)
+    _assert_equivalent(ex, ps)
+    # on eviction-free mini configs the whole stream is structural, so
+    # interior deltas are bit-exact too, not just the needed curve
+    for m in ex.traces:
+        assert ex.traces[m].ev_dneeded == ps.traces[m].ev_dneeded
+        assert ex.traces[m].ev_dobsolete == ps.traces[m].ev_dobsolete
+        assert np.allclose(ex.traces[m].ev_times, ps.traces[m].ev_times,
+                           rtol=1e-3, atol=1e-9)
+        assert ex.traces[m].peak_total() == ps.traces[m].peak_total()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,start,steps,subops", SLOW_GRID)
+def test_pss_matches_exact_slow(arch, start, steps, subops):
+    cfg = _mini(arch)
+    accel = baseline_accelerator(32)
+    kw = dict(start_ctx=start, steps=steps, batch=8, subops=subops)
+    ex = simulate_decode(cfg, accel, fidelity="exact", **kw)
+    ps = simulate_decode(cfg, accel, fidelity="pss", **kw)
+    _assert_equivalent(ex, ps)
+
+
+@pytest.mark.slow
+def test_pss_full_config_refinement():
+    """Full-size dsr1d streams more weights than the SRAM per step, so the
+    drop stream is only piecewise affine — adaptive refinement must still
+    plan a PSS run and keep the needed curve exact."""
+    cfg = get_arch("dsr1d-qwen-1.5b")
+    accel = baseline_accelerator(128)
+    kw = dict(start_ctx=2048, steps=48, batch=8, subops=2)
+    ex = simulate_decode(cfg, accel, fidelity="exact", **kw)
+    ps = simulate_decode(cfg, accel, fidelity="pss", **kw)
+    _assert_equivalent(ex, ps)
+    assert len(ps.probes) < kw["steps"] // 2
+
+
+# --- probe construction ------------------------------------------------------
+
+def test_decode_probe_contexts():
+    pts = decode_probe_contexts(100, 1000, 3)
+    assert pts[0] == 100 and pts[-1] == 1099
+    assert pts == sorted(set(pts))
+    assert len(pts) == 3
+    assert decode_probe_contexts(5, 3, 4) == [5, 6, 7]     # degenerate
+    assert decode_probe_contexts(1, 1) == [1]
+    with pytest.raises(ValueError):
+        decode_probe_contexts(1, 0)
+    with pytest.raises(ValueError):
+        decode_probe_contexts(1, 10, 1)
+
+
+def test_explicit_probes_validated():
+    cfg = _mini("dsr1d-qwen-1.5b")
+    accel = baseline_accelerator(32)
+    with pytest.raises(ValueError):
+        simulate_decode(cfg, accel, start_ctx=64, steps=8, batch=4,
+                        subops=2, probes=[500])
+
+
+# --- fidelity dispatch -------------------------------------------------------
+
+def test_obsolete_evictions_alone_stay_pss():
+    """Pure obsolete evictions (free drops) are the borrowed-drop stream,
+    not a PSS blocker — only write-backs force the exact path."""
+    cfg = _mini("gpt2-xl")
+    accel = baseline_accelerator(8).with_sram_capacity(48 * 1024)
+    res = simulate_decode(cfg, accel, start_ctx=64, steps=16, batch=4,
+                          subops=2, fidelity="auto")
+    assert res.writebacks == 0
+
+
+def test_auto_falls_back_on_writebacks():
+    cfg = _mini("gpt2-xl")
+    accel = baseline_accelerator(8).with_sram_capacity(16 * 1024)
+    res = simulate_decode(cfg, accel, start_ctx=64, steps=16, batch=4,
+                          subops=2, fidelity="auto", max_probes=4)
+    assert res.fidelity == "exact"
+    assert res.fallback_reason
+    assert res.writebacks > 0
+
+
+def test_forced_pss_raises_when_budget_exhausted():
+    cfg = _mini("gpt2-xl")
+    accel = baseline_accelerator(8).with_sram_capacity(16 * 1024)
+    with pytest.raises(ValueError, match="budget"):
+        simulate_decode(cfg, accel, start_ctx=64, steps=16, batch=4,
+                        subops=2, fidelity="pss", max_probes=4)
+
+
+def test_small_horizon_degenerates_to_exact():
+    cfg = _mini("dsr1d-qwen-1.5b")
+    accel = baseline_accelerator(32)
+    res = simulate_decode(cfg, accel, start_ctx=64, steps=3, batch=4,
+                          subops=2, fidelity="pss")
+    assert res.fidelity == "exact"
+    assert res.probes == (64, 65, 66)
+
+
+# --- Stage-II consumption ----------------------------------------------------
+
+def test_decode_result_feeds_stage_two():
+    from repro.core.explorer import min_capacity_mib, sweep
+    cfg = _mini("dsr1d-qwen-1.5b")
+    res = simulate_decode(cfg, baseline_accelerator(32), start_ctx=64,
+                          steps=32, batch=4, subops=2, fidelity="pss")
+    lo = min_capacity_mib(res.peak_needed("sram"))
+    table = sweep(res, mem_name="sram", capacities_mib=[lo], banks=(1, 4),
+                  backend="numpy")
+    assert len(table.rows) == 2
+    assert table.best().result.e_total > 0
+
+
+# --- DES layer memoization ---------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["gpt2-xl", "dsr1d-qwen-1.5b"])
+def test_memoized_engine_bit_exact_occupancy(arch):
+    g = build_decode_graph(get_arch(arch), context_len=384, batch=4,
+                           subops=2)
+    accel = baseline_accelerator(128)
+    a = simulate(g, accel)
+    eng = Engine(g, accel, memoize_layers=True)
+    b = eng.run()
+    assert b.replayed_layers > 0, eng.memo_misses
+    assert a.writebacks == b.writebacks
+    assert a.total_macs == b.total_macs
+    assert a.access.reads_bytes == b.access.reads_bytes
+    assert a.access.writes_bytes == b.access.writes_bytes
+    for m in a.traces:
+        assert a.traces[m].ev_dneeded == b.traces[m].ev_dneeded
+        assert a.traces[m].ev_dobsolete == b.traces[m].ev_dobsolete
+        assert np.allclose(a.traces[m].ev_times, b.traces[m].ev_times,
+                           rtol=1e-9, atol=1e-12)
+        assert a.traces[m].peak_needed() == b.traces[m].peak_needed()
+        assert a.traces[m].peak_total() == b.traces[m].peak_total()
+    assert abs(a.total_time - b.total_time) <= 1e-9 * a.total_time
+
+
+def test_memoization_respects_mempeak_policy():
+    g = build_decode_graph(_mini("dsr1d-qwen-1.5b"), context_len=128,
+                           batch=4, subops=2)
+    eng = Engine(g, baseline_accelerator(32), policy="mempeak",
+                 memoize_layers=True)
+    assert not eng.memoize_layers        # fifo-only fast path
+    assert eng.run().replayed_layers == 0
+
+
+# --- traffic fast-forward ----------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["dsr1d-qwen-1.5b", "recurrentgemma-2b",
+                                  "mamba2-130m"])
+def test_traffic_fast_forward_bit_identical(arch):
+    """The PSS traffic path must reproduce the exact lockstep loop
+    bit-for-bit: same event list, same float times, same stats."""
+    cfg = get_arch(arch)
+    reqs = generate("bursty", 5.0, 20.0, seed=7,
+                    lengths=LengthModel(max_len=512))
+    a = simulate_traffic(cfg, reqs, num_slots=4, max_len=512,
+                         fidelity="exact")
+    b = simulate_traffic(cfg, reqs, num_slots=4, max_len=512,
+                         fidelity="pss")
+    assert a.trace.ev_times == b.trace.ev_times
+    assert a.trace.ev_dneeded == b.trace.ev_dneeded
+    assert a.trace.ev_dobsolete == b.trace.ev_dobsolete
+    assert a.bundle.access.reads_bytes == b.bundle.access.reads_bytes
+    assert a.bundle.access.writes_bytes == b.bundle.access.writes_bytes
+    assert a.total_time == b.total_time
+    assert a.stats.decode_steps == b.stats.decode_steps
+    assert a.stats.latency_s == b.stats.latency_s
+    assert a.stats.queue_delay_s == b.stats.queue_delay_s
+    assert a.stats.admitted_bytes == b.stats.admitted_bytes
+    assert a.stats.retired_bytes == b.stats.retired_bytes
+
+
+def test_traffic_fidelity_validated():
+    cfg = get_arch("dsr1d-qwen-1.5b")
+    with pytest.raises(ValueError):
+        simulate_traffic(cfg, [], fidelity="bogus")

@@ -93,6 +93,110 @@ def test_cacti_surrogate_sanity(c_mib, b):
         assert ch.leak_w_per_bank < characterize(c_mib * MIB, 1).leak_w_per_bank
 
 
+# ---------------------------------------------------------------------------
+# OccupancyTrace invariants (Stage-I artifact contract)
+# ---------------------------------------------------------------------------
+
+event_stream_st = st.lists(
+    st.tuples(st.floats(0.0, 10.0), st.integers(-50 * MIB, 50 * MIB),
+              st.integers(-50 * MIB, 50 * MIB)),
+    min_size=1, max_size=120)
+
+request_stream_st = st.lists(
+    st.tuples(st.floats(0.0, 5.0),              # inter-arrival gap [s]
+              st.integers(1, 300),              # prompt_len
+              st.integers(1, 40)),              # output_len
+    min_size=1, max_size=25)
+
+
+def _trace_from(events):
+    from repro.sim.trace import OccupancyTrace
+    tr = OccupancyTrace("m", 512 * MIB)
+    tr.event(0.0, MIB, 0)     # guarantee a non-empty stream (zero-delta
+    ts, dn, do = zip(*events)  # rows are dropped by extend())
+    tr.extend(ts, dn, do)
+    return tr
+
+
+@given(request_stream_st, st.sampled_from(["exact", "pss"]))
+@settings(max_examples=25, deadline=None)
+def test_traffic_deltas_sum_to_zero_and_respect_capacity(stream, fidelity):
+    """Over every request lifetime admitted == retired, so the drained
+    trace's delta events sum to zero and never exceed the slot capacity."""
+    from repro.configs import get_arch
+    from repro.traffic.generators import RequestSpec
+    from repro.traffic.occupancy import simulate_traffic
+    cfg = get_arch("dsr1d-qwen-1.5b")
+    t, reqs = 0.0, []
+    for i, (gap, p, o) in enumerate(stream):
+        t += gap
+        reqs.append(RequestSpec(rid=i, arrival_s=t, prompt_len=p,
+                                output_len=o))
+    sim = simulate_traffic(cfg, reqs, num_slots=4, max_len=256,
+                           fidelity=fidelity)
+    assert sim.stats.finished == len(reqs)
+    assert sum(sim.trace.ev_dneeded) == 0
+    assert sim.stats.admitted_bytes == sim.stats.retired_bytes
+    assert sim.trace.peak_total() <= sim.trace.capacity
+
+
+@given(event_stream_st, st.floats(0.1, 3.0))
+@settings(max_examples=40, deadline=None)
+def test_segment_durations_nonneg_and_cover_makespan(events, tail):
+    tr = _trace_from(events)
+    t, _, _ = tr.as_arrays()
+    end = float(t[-1]) + tail
+    dur, n, o, tot = tr.segments(end)
+    assert (dur > 0).all()
+    assert abs(dur.sum() - (end - t[0])) <= 1e-9 * max(end, 1.0)
+    assert np.array_equal(tot, n + o)
+
+
+@given(event_stream_st, event_stream_st)
+@settings(max_examples=30, deadline=None)
+def test_merge_preserves_time_integral(ev_a, ev_b):
+    from repro.sim.trace import merge_traces
+    a, b = _trace_from(ev_a), _trace_from(ev_b)
+    end = max(max(t for t, _, _ in ev_a), max(t for t, _, _ in ev_b)) + 1.0
+    merged = merge_traces([a, b])
+    want = a.time_integral(end) + b.time_integral(end)
+    got = merged.time_integral(end)
+    assert abs(got - want) <= 1e-6 * max(abs(want), 1.0)
+
+
+@given(event_stream_st, st.floats(0.05, 1.0))
+@settings(max_examples=30, deadline=None)
+def test_resample_preserves_integral_within_grid_bound(events, dt):
+    """Right-edge resampling misattributes each delta by at most one grid
+    cell, so the integral moves by <= dt * sum(|deltas|) (+ the held tail
+    past the requested end)."""
+    tr = _trace_from(events)
+    t, n, o = tr.as_arrays()
+    end = float(t[-1]) + 1.0
+    res = tr.resampled(dt, end)
+    want = tr.time_integral(end)
+    got = res.time_integral(end)
+    slack = dt * (np.abs(np.asarray(tr.ev_dneeded)).sum()
+                  + np.abs(np.asarray(tr.ev_dobsolete)).sum()
+                  + abs(int(n[-1]) + int(o[-1])))
+    assert abs(got - want) <= slack * (1 + 1e-9) + 1e-6
+
+
+@given(event_stream_st)
+@settings(max_examples=30, deadline=None)
+def test_as_arrays_cache_invalidation(events):
+    """Cached integration must be transparent across event()/extend()."""
+    tr = _trace_from(events)
+    t1 = tr.as_arrays()
+    assert tr.as_arrays()[0] is t1[0]          # cached object reused
+    tr.event(11.0, 123, 0)
+    t2, n2, _ = tr.as_arrays()
+    assert len(t2) == len(t1[0]) + 1
+    assert n2[-1] == t1[1][-1] + 123
+    tr.extend([12.0], [1], [1])
+    assert tr.as_arrays()[1][-1] == n2[-1] + 1
+
+
 @given(trace_st, st.sampled_from([1, 2, 4, 8, 16, 32]))
 @settings(max_examples=30, deadline=None)
 def test_bank_energy_kernel_matches_numpy_reference(trace, b):
