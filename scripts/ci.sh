@@ -53,4 +53,16 @@ PYTHONPATH=src timeout 300 python -m benchmarks.stage1_bench \
 # inside; BENCH_stage2.json records the throughput trajectory
 PYTHONPATH=src timeout 300 python -m benchmarks.stage2_bench \
     /tmp/BENCH_stage2.json | tail -1
+
+# paged-serving smoke: continuous batching over the paged KV cache, ending
+# in a Stage-II sweep over the emitted page-granular trace
+PYTHONPATH=src timeout 120 python examples/paged_serving.py \
+    --requests 6 --new-tokens 8 > /tmp/paged_smoke.out
+grep -q "paged-serve" /tmp/paged_smoke.out
+grep -q "pages" /tmp/paged_smoke.out
+
+# serving benchmark: paged kernel-vs-reference exactness bound and the
+# >=5x decode-throughput bar are asserted inside
+PYTHONPATH=src timeout 600 python -m benchmarks.serve_bench \
+    /tmp/BENCH_serve.json | tail -1
 echo "ci: OK"

@@ -1,0 +1,3 @@
+from repro.kernels.paged_gqa_decode.ops import paged_gqa_decode  # noqa: F401
+from repro.kernels.paged_gqa_decode.ref import (gather_pages,  # noqa: F401
+                                                paged_gqa_decode_ref)

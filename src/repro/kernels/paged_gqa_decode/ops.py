@@ -1,0 +1,24 @@
+"""Jit'd public wrapper for paged GQA decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.paged_gqa_decode.kernel import paged_gqa_decode_kernel
+from repro.kernels.paged_gqa_decode.ref import paged_gqa_decode_ref
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def paged_gqa_decode(q, k_pages, v_pages, page_table, lengths, *,
+                     backend: str = "auto"):
+    """backend: auto | pallas | interpret | ref.
+
+    q: (B, H, d); k_pages, v_pages: (N, K, page_size, d);
+    page_table: (B, P) int32 page ids; lengths: (B,) int32. -> (B, H, d)."""
+    if backend == "auto":
+        backend = ("pallas" if jax.default_backend() == "tpu" else "ref")
+    if backend == "ref":
+        return paged_gqa_decode_ref(q, k_pages, v_pages, page_table, lengths)
+    return paged_gqa_decode_kernel(q, k_pages, v_pages, page_table, lengths,
+                                   interpret=(backend == "interpret"))

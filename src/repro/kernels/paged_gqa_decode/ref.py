@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for paged GQA decode attention.
+
+The KV cache lives in a global page pool shared by every sequence; each
+sequence owns an ordered list of page ids (its page table row) and a true
+context length. The oracle gathers the pages back into a dense per-sequence
+cache and runs the same fp32 masked softmax as the dense `gqa_decode_ref`,
+so the Pallas kernel's page-table indirection is tested against plain
+advanced indexing.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_pages(pool: jax.Array, page_table: jax.Array) -> jax.Array:
+    """pool: (N, K, ps, d); page_table: (B, P) int32 -> dense (B, K, P*ps, d)."""
+    B, P = page_table.shape
+    N, K, ps, d = pool.shape
+    g = pool[page_table]                       # (B, P, K, ps, d)
+    return g.transpose(0, 2, 1, 3, 4).reshape(B, K, P * ps, d)
+
+
+def paged_gqa_decode_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                         page_table: jax.Array,
+                         lengths: jax.Array) -> jax.Array:
+    """q: (B, H, d); k_pages, v_pages: (N, K, ps, d); page_table: (B, P);
+    lengths: (B,) int32 true context sizes (<= P*ps). Returns (B, H, d).
+
+    Tokens of sequence b live at pool[page_table[b, t // ps], :, t % ps]
+    for t < lengths[b]; entries past `lengths` (including the tail of a
+    partially-filled last page) are masked out.
+    """
+    B, H, d = q.shape
+    K, ps = k_pages.shape[1], k_pages.shape[2]
+    T = page_table.shape[1] * ps
+    group = H // K
+    k = gather_pages(k_pages, page_table)
+    v = gather_pages(v_pages, page_table)
+    qg = (q.astype(jnp.float32) / math.sqrt(d)).reshape(B, K, group, d)
+    s = jnp.einsum("bkgd,bktd->bkgt", qg, k.astype(jnp.float32))
+    valid = jnp.arange(T)[None, :] < lengths[:, None]        # (B, T)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    out = jnp.einsum("bkgt,bktd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, d).astype(q.dtype)

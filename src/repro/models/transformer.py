@@ -235,6 +235,116 @@ def cache_specs(cfg, batch: int, cache_len: int, mesh,
 
 
 # ---------------------------------------------------------------------------
+# Paged decode caches
+# ---------------------------------------------------------------------------
+#
+# Serving allocates KV memory at *page* granularity instead of dense max_len
+# slabs: K/V rows live in global per-layer page pools of shape
+# (num_pages, K, page_size, head_dim), every slot owns an ordered row of an
+# int32 page table (num_slots, max_pages) plus a true per-slot position, and
+# attention gathers through the table (kernels/paged_gqa_decode). Page 0 is
+# reserved as the null page: retired/inactive slots point their whole table
+# at it, so their masked lanes write and read harmless garbage.
+
+PAGED_NULL_PAGE = 0
+
+
+def init_paged_cache(cfg, num_slots: int, num_pages: int, page_size: int,
+                     max_pages_per_slot: int, dtype=jnp.bfloat16) -> dict:
+    """Paged decode state: per-layer page pools shared by all slots, one page
+    table + true position per slot. Recurrent (SSM / RG-LRU) blocks keep
+    their fixed-size per-slot state dense, batched over slots — only
+    attention KV grows with context, so only it is paged. Sliding-window /
+    chunked layers are bounded by construction and not supported here."""
+    pat = cfg.block_pattern
+    if any(k in ("local", "chunked") for k in pat):
+        raise NotImplementedError(
+            "paged decode supports full-attention (+ssm/rglru) stacks; "
+            "window-bounded layers gain nothing from paging")
+    n_rep = cfg.num_layers // len(pat)
+    tail_kinds = cfg.layer_kinds()[n_rep * len(pat):]
+
+    def slot(kind, stack: Optional[int]):
+        def maybe_stack(a):
+            return a if stack is None else jnp.broadcast_to(a, (stack,) + a.shape)
+        if kind == "full":
+            z = jnp.zeros((num_pages, cfg.num_kv_heads, page_size,
+                           cfg.head_dim), dtype)
+            return {"kp": maybe_stack(z), "vp": maybe_stack(z)}
+        if kind == "rglru":
+            c = rglru_mod.init_rglru_cache(cfg, num_slots, dtype)
+        else:
+            c = ssm_mod.init_ssm_cache(cfg, num_slots, dtype)
+        return jax.tree.map(maybe_stack, c)
+
+    return {
+        "slots": [slot(k, n_rep) for k in pat],
+        "tail": [slot(k, None) for k in tail_kinds],
+        "pos": jnp.zeros((num_slots,), jnp.int32),
+        "page_table": jnp.full((num_slots, max_pages_per_slot),
+                               PAGED_NULL_PAGE, jnp.int32),
+        "active": jnp.zeros((num_slots,), bool),
+    }
+
+
+def write_prefill_to_pages(cfg, paged: dict, dense: dict, slot,
+                           page_ids: jax.Array) -> dict:
+    """Admission: map a batch=1 dense prefill cache into slot `slot` of a
+    paged cache — the prompt's KV rows are scattered into the slot's
+    freshly-allocated pages and the page-table row is rewritten; nothing is
+    re-prefilled. The dense cache_len must equal len(page_ids) * page_size."""
+    pat = cfg.block_pattern
+    n_rep = cfg.num_layers // len(pat)
+    tail_kinds = cfg.layer_kinds()[n_rep * len(pat):]
+    npg = page_ids.shape[0]
+
+    def one(kind, entry, d_entry, stacked: bool):
+        if kind == "full":
+            kp = entry["kp"]
+            ps = kp.shape[-2]
+
+            def put(pool, dense_kv):
+                # (..., 1, npg*ps, K, d) -> (..., npg, K, ps, d)
+                x = dense_kv.astype(pool.dtype)
+                if stacked:
+                    n, T, K, d = x.shape[0], x.shape[2], x.shape[3], x.shape[4]
+                    x = x.reshape(n, npg, ps, K, d).transpose(0, 1, 3, 2, 4)
+                    return pool.at[:, page_ids].set(x)
+                T, K, d = x.shape[1], x.shape[2], x.shape[3]
+                x = x.reshape(npg, ps, K, d).transpose(0, 2, 1, 3)
+                return pool.at[page_ids].set(x)
+
+            return {"kp": put(kp, d_entry["k"]), "vp": put(entry["vp"],
+                                                           d_entry["v"])}
+        # recurrent state: write the single prefilled sequence into slot row
+        if stacked:
+            return jax.tree.map(
+                lambda s, d: s.at[:, slot].set(d[:, 0].astype(s.dtype)),
+                entry, d_entry)
+        return jax.tree.map(
+            lambda s, d: s.at[slot].set(d[0].astype(s.dtype)),
+            entry, d_entry)
+
+    out = dict(paged)
+    out["slots"] = [one(k, e, de, True) for k, e, de in
+                    zip(pat, paged["slots"], dense["slots"])]
+    out["tail"] = [one(k, e, de, False) for k, e, de in
+                   zip(tail_kinds, paged["tail"], dense["tail"])]
+    row = jnp.full((paged["page_table"].shape[1],), PAGED_NULL_PAGE,
+                   jnp.int32).at[:npg].set(page_ids.astype(jnp.int32))
+    out["page_table"] = paged["page_table"].at[slot].set(row)
+    out["pos"] = paged["pos"].at[slot].set(dense["pos"].astype(jnp.int32))
+    out["active"] = paged["active"].at[slot].set(True)
+    return out
+
+
+# Retirement needs no device call: the decode loop flips `active` in-scan,
+# the batcher zeroes its host page-table mirror (pushed before each chunk),
+# and re-admission overwrites pos/active/table — pool pages are only
+# reachable through tables, so they never need clearing.
+
+
+# ---------------------------------------------------------------------------
 # Block application — decode mode
 # ---------------------------------------------------------------------------
 
@@ -278,6 +388,46 @@ def apply_block_decode(cfg, kind: str, p: dict, x: jax.Array, cache: dict,
             cfg, p["ssm"], apply_norm(cfg, p["norm1"], x), cache)
         return x + h, new_c
     raise ValueError(kind)
+
+
+def apply_block_decode_paged(cfg, kind: str, p: dict, x: jax.Array,
+                             cache: dict, pos: jax.Array,
+                             page_table: jax.Array,
+                             attn_backend: str = "auto"):
+    """Paged decode block. x: (B,1,D); pos: (B,) true per-slot positions;
+    page_table: (B, P). Returns (x_out, new_cache).
+
+    Full-attention blocks write the new K/V row through the page table
+    (inactive slots resolve to the null page) and attend with the paged GQA
+    kernel at exact per-slot lengths — no max-length mask. Recurrent blocks
+    are position-independent and reuse the dense decode path."""
+    if kind == "full":
+        from repro.kernels.paged_gqa_decode import paged_gqa_decode
+        y = apply_norm(cfg, p["norm1"], x)
+        q, k, v = attn.project_qkv(cfg, p["attn"], y, y)
+        if cfg.pos_emb == "rope":
+            q = apply_rope(q, pos[:, None], cfg.rope_theta)
+            k = apply_rope(k, pos[:, None], cfg.rope_theta)
+        kp, vp = cache["kp"], cache["vp"]
+        ps = kp.shape[-2]
+        P = page_table.shape[1]
+        B = x.shape[0]
+        pidx = page_table[jnp.arange(B), jnp.clip(pos // ps, 0, P - 1)]
+        off = pos % ps
+        kp = kp.at[pidx, :, off].set(k[:, 0].astype(kp.dtype))
+        vp = vp.at[pidx, :, off].set(v[:, 0].astype(vp.dtype))
+        o = paged_gqa_decode(q[:, 0], kp, vp, page_table, pos + 1,
+                             backend=attn_backend)
+        o = o.reshape(B, 1, cfg.q_dim) @ p["attn"]["wo"].astype(x.dtype)
+        x = x + o
+        y2 = apply_norm(cfg, p["norm2"], x)
+        if cfg.moe is not None:
+            f, _ = moe_mod.apply_moe(cfg, p["ffn"], y2)
+        else:
+            f = ffn_mod.apply_ffn(cfg, p["ffn"], y2)
+        x = x + f
+        return x, {"kp": kp, "vp": vp}
+    return apply_block_decode(cfg, kind, p, x, cache, pos)
 
 
 # ---------------------------------------------------------------------------
@@ -498,6 +648,53 @@ class DecoderLM:
             new_tail.append(nc)
         new_cache["tail"] = new_tail
         new_cache["pos"] = pos + 1
+
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = lm_logits(cfg, params["embed"], x)
+        return logits, new_cache
+
+    # ------------------------------------------------- paged decode step
+    def decode_step_paged(self, params: dict, cache: dict, tokens: jax.Array,
+                          attn_backend: str = "auto"):
+        """tokens: (num_slots, 1) against an `init_paged_cache` state.
+
+        Per-slot positions are exact: each slot embeds/ropes at its own
+        `pos`, writes its K/V row through its page-table row, and attends
+        over exactly `pos + 1` tokens. Inactive slots run masked (null page)
+        and their `pos` does not advance."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        page_table = cache["page_table"]
+        active = cache["active"]
+        x = embed_tokens(cfg, params["embed"], tokens, pos[:, None],
+                         self.compute_dtype)
+        pat = cfg.block_pattern
+        n_rep = cfg.num_layers // len(pat)
+
+        def body(x, xs):
+            slot_params, slot_caches = xs
+            new_caches = []
+            for i, kind in enumerate(pat):
+                x, nc = apply_block_decode_paged(
+                    cfg, kind, slot_params[i], x, slot_caches[i], pos,
+                    page_table, attn_backend)
+                new_caches.append(nc)
+            return x, tuple(new_caches)
+
+        new_cache = dict(cache)
+        if n_rep > 0:
+            x, new_slots = jax.lax.scan(
+                body, x, (tuple(params["blocks"]), tuple(cache["slots"])),
+                unroll=n_rep if self.unroll else 1)
+            new_cache["slots"] = list(new_slots)
+        tail_kinds = cfg.layer_kinds()[n_rep * len(pat):]
+        new_tail = []
+        for tp, kind, tc in zip(params["tail"], tail_kinds, cache["tail"]):
+            x, nc = apply_block_decode_paged(cfg, kind, tp, x, tc, pos,
+                                             page_table, attn_backend)
+            new_tail.append(nc)
+        new_cache["tail"] = new_tail
+        new_cache["pos"] = pos + active.astype(jnp.int32)
 
         x = apply_norm(cfg, params["final_norm"], x)
         logits = lm_logits(cfg, params["embed"], x)

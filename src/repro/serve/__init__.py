@@ -1,2 +1,5 @@
 from repro.serve.engine import BatchedServer, ServeConfig, ServeStats  # noqa: F401
+from repro.serve.paged import (OutOfPages, PageAllocator,  # noqa: F401
+                               PagedContinuousBatcher, PagedKVLedger,
+                               page_bytes, pages_for)
 from repro.serve.scheduler import ContinuousBatcher, Request, kv_slot_budget  # noqa: F401

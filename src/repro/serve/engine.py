@@ -1,15 +1,18 @@
-"""Batched serving engine: prefill + decode loop with sampling.
+"""Batched serving engine: prefill + device-resident decode loop.
 
 The decode path is exactly what the decode_32k / long_500k dry-run cells
 lower; on CPU the examples run it with reduced configs. KV caches are
-preallocated to `max_len` (static shapes — one compiled decode_step serves
-every position).
+preallocated to `max_len` (static shapes — one compiled decode loop serves
+every position). Decoding runs as a single jitted `jax.lax.scan` over steps
+with the cache pytree donated: no per-token Python dispatch, no per-token
+host sync, and the cache is updated in place buffer-wise.
 """
 from __future__ import annotations
 
+import functools
 import time
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +38,38 @@ class ServeStats:
         return self.tokens_generated / self.decode_s if self.decode_s else 0.0
 
 
+def _sample(temperature: float, logits: jax.Array, rng: jax.Array) -> jax.Array:
+    logits = logits[:, -1, :]
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    return jax.random.categorical(
+        rng, logits / temperature, axis=-1)[:, None].astype(jnp.int32)
+
+
+# traced once per XLA compilation — tests assert repeated generate() calls
+# with stable shapes never re-trace the decode loop
+LOOP_COMPILES = [0]
+
+
+def _generate_loop(model, temperature: float, steps: int, params, cache,
+                   tok, rng):
+    """`steps` greedy/sampled decode steps as one on-device scan.
+
+    Returns the emitted tokens (steps, B); the donated cache is consumed."""
+    LOOP_COMPILES[0] += 1
+
+    def step(carry, _):
+        cache, tok, rng = carry
+        logits, cache = model.decode_step(params, cache, tok)
+        rng, k = jax.random.split(rng)
+        tok = _sample(temperature, logits, k)
+        return (cache, tok, rng), tok[:, 0]
+
+    (cache, tok, rng), toks = jax.lax.scan(
+        step, (cache, tok, rng), None, length=steps)
+    return toks
+
+
 class BatchedServer:
     def __init__(self, model, params, cfg: ServeConfig):
         self.model = model
@@ -42,15 +77,11 @@ class BatchedServer:
         self.cfg = cfg
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, cache_len=cfg.max_len))
-        self._decode = jax.jit(model.decode_step)
-
-    def _sample(self, logits: jax.Array, rng: jax.Array) -> jax.Array:
-        logits = logits[:, -1, :]
-        if self.cfg.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        return jax.random.categorical(
-            rng, logits / self.cfg.temperature, axis=-1)[:, None].astype(
-            jnp.int32)
+        # static `steps`, donated cache: one compile per generation length,
+        # zero host round-trips inside the loop
+        self._loop = jax.jit(
+            functools.partial(_generate_loop, model, cfg.temperature),
+            static_argnums=(0,), donate_argnums=(2,))
 
     def generate(self, batch: Dict[str, Any],
                  max_new_tokens: Optional[int] = None) -> Dict[str, Any]:
@@ -67,16 +98,22 @@ class BatchedServer:
         stats.prefill_s = time.perf_counter() - t0
 
         rng, k = jax.random.split(rng)
-        tok = self._sample(logits, k)
-        out = [np.asarray(tok)]
+        tok = _sample(self.cfg.temperature, logits, k)
+        first = np.asarray(tok)
 
         t0 = time.perf_counter()
-        for _ in range(n_new - 1):
-            logits, cache = self._decode(self.params, cache, tok)
-            rng, k = jax.random.split(rng)
-            tok = self._sample(logits, k)
-            out.append(np.asarray(tok))
-        jax.block_until_ready(tok)
+        if n_new > 1:
+            toks = self._loop(n_new - 1, self.params, cache, tok, rng)
+            toks.block_until_ready()
+            rest = np.asarray(toks).T                       # (B, steps)
+        else:
+            rest = np.zeros((first.shape[0], 0), first.dtype)
         stats.decode_s = time.perf_counter() - t0
-        stats.tokens_generated = n_new * tok.shape[0]
-        return {"tokens": np.concatenate(out, axis=1), "stats": stats}
+        stats.tokens_generated = n_new * first.shape[0]
+        return {"tokens": np.concatenate([first, rest], axis=1),
+                "stats": stats}
+
+
+def loop_compile_count() -> int:
+    """Process-wide compile count of the BatchedServer decode loop."""
+    return LOOP_COMPILES[0]

@@ -1,0 +1,403 @@
+"""Paged KV-cache serving: free-list page allocator + device-resident batcher.
+
+This is the production face of the paper's occupancy analysis: KV memory is
+allocated in fixed-size pages rather than dense ``max_len`` slabs, so a
+slot's resident bytes track its *true* context length (quantized to one
+page), GQA shrinks the page itself, and fragmentation / page residency
+become first-class time-resolved signals. Three pieces:
+
+  * :class:`PageAllocator` — host-side free list over the global page pool
+    (page 0 is reserved as the null page inactive slots point at);
+  * :class:`PagedKVLedger` — page accounting + page-granular
+    `OccupancyTrace` emission (alloc/free events integrate to zero at
+    drain; occupancy is always ``pages x page_bytes``);
+  * :class:`PagedContinuousBatcher` — FCFS continuous batching where the
+    decode hot path is device-resident: one jitted ``lax.scan`` advances
+    every slot ``chunk_steps`` tokens per host round-trip (donated cache
+    buffers, no per-token sync), admission *maps the prompt's pages into
+    the slot's table* instead of re-prefilling, and per-slot positions are
+    exact — no max-length mask.
+"""
+from __future__ import annotations
+
+import collections
+import functools
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import (init_paged_cache, write_prefill_to_pages)
+from repro.serve.scheduler import Request, SchedulerStats
+from repro.sim.trace import AccessStats, OccupancyTrace, TraceBundle
+
+
+class OutOfPages(RuntimeError):
+    """The page pool cannot cover a request's worst-case page demand."""
+
+
+def page_bytes(cfg, page_size: int, kv_dtype_bytes: int = 2) -> int:
+    """Bytes one KV page pins across all full-attention layers (K + V)."""
+    n_full = sum(1 for k in cfg.layer_kinds() if k == "full")
+    return n_full * 2 * page_size * cfg.kv_dim * kv_dtype_bytes
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    return max(0, -(-tokens // page_size))
+
+
+# ---------------------------------------------------------------------------
+# Allocator + ledger (host side, model-free — hypothesis-testable)
+# ---------------------------------------------------------------------------
+
+class PageAllocator:
+    """LIFO free-list allocator over `num_pages` pages; page 0 is the
+    reserved null page and is never handed out."""
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the null page)")
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._allocated: set = set()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_allocated(self) -> int:
+        return len(self._allocated)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise OutOfPages(f"requested {n} pages, {len(self._free)} free")
+        out = [self._free.pop() for _ in range(n)]
+        self._allocated.update(out)
+        return out
+
+    def free(self, pages) -> None:
+        for p in pages:
+            if p not in self._allocated:
+                raise ValueError(f"double free / foreign page {p}")
+            self._allocated.remove(p)
+            self._free.append(p)
+
+
+class PagedKVLedger:
+    """Per-slot page ownership + page-granular occupancy trace.
+
+    Every `admit`/`grow` emits a positive delta of ``n_pages x page_bytes``
+    on the trace at the given logical time, every `retire` the matching
+    negative delta — so the integrated trace equals the allocator's
+    outstanding pages at all times, and drains to zero."""
+
+    def __init__(self, num_pages: int, page_bytes_: int):
+        self.allocator = PageAllocator(num_pages)
+        self.page_bytes = page_bytes_
+        self.trace = OccupancyTrace("kv", (num_pages - 1) * page_bytes_)
+        self.slot_pages: Dict[int, List[int]] = {}
+
+    def occupancy_bytes(self) -> int:
+        return self.allocator.n_allocated * self.page_bytes
+
+    def admit(self, slot: int, n_pages: int, t: float) -> List[int]:
+        assert slot not in self.slot_pages, f"slot {slot} already admitted"
+        pages = self.allocator.alloc(n_pages)
+        self.slot_pages[slot] = list(pages)
+        if n_pages:
+            self.trace.event(t, n_pages * self.page_bytes, 0)
+        return pages
+
+    def grow(self, slot: int, total_pages: int, t: float) -> List[int]:
+        have = self.slot_pages[slot]
+        extra = total_pages - len(have)
+        if extra <= 0:
+            return []
+        pages = self.allocator.alloc(extra)
+        have.extend(pages)
+        self.trace.event(t, extra * self.page_bytes, 0)
+        return pages
+
+    def retire(self, slot: int, t: float) -> int:
+        pages = self.slot_pages.pop(slot)
+        self.allocator.free(pages)
+        if pages:
+            self.trace.event(t, -len(pages) * self.page_bytes, 0)
+        return len(pages)
+
+
+# ---------------------------------------------------------------------------
+# Device decode loop
+# ---------------------------------------------------------------------------
+
+# traced once per XLA compilation of the chunk loop — tests assert the
+# continuous batcher never recompiles it across chunks/admissions
+LOOP_COMPILES = [0]
+
+
+def _decode_loop(model, steps: int, attn_backend: str, params, cache, tok,
+                 eos, remaining):
+    """Greedy multi-token decode: `steps` tokens for every slot in one
+    on-device `lax.scan`. Slots retire in-scan (EOS or token budget) via the
+    cache's `active` mask; inactive lanes emit -1 and stop advancing."""
+    LOOP_COMPILES[0] += 1
+
+    def step(carry, _):
+        cache, tok, remaining = carry
+        logits, cache = model.decode_step_paged(params, cache, tok,
+                                                attn_backend=attn_backend)
+        active = cache["active"]
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        emit = jnp.where(active, nxt, -1)
+        remaining = remaining - active.astype(jnp.int32)
+        done = active & ((remaining <= 0) | ((eos >= 0) & (nxt == eos)))
+        cache = dict(cache)
+        cache["active"] = active & ~done
+        tok = jnp.where(active[:, None], nxt[:, None], tok)
+        return (cache, tok, remaining), emit
+
+    (cache, tok, remaining), emitted = jax.lax.scan(
+        step, (cache, tok, remaining), None, length=steps)
+    return emitted, cache, tok, remaining
+
+
+# ---------------------------------------------------------------------------
+# Continuous batcher
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PagedStats(SchedulerStats):
+    pages_allocated: int = 0
+    pages_freed: int = 0
+    peak_pages: int = 0
+    chunks: int = 0
+
+
+class PagedContinuousBatcher:
+    """FCFS continuous batching over a paged KV cache.
+
+    Admission prefills the prompt once (batch=1), then scatters its KV rows
+    into freshly allocated pages of the global pool — older slots are never
+    touched. Decode runs in device-resident chunks of `chunk_steps` tokens
+    (one jitted, donated `lax.scan` per chunk; the host syncs once per chunk
+    to collect tokens, retire finished slots, free their pages, and admit
+    queued requests). A request is admitted only when the pool can cover its
+    worst-case page demand (prompt + max_new_tokens), so growth allocations
+    between chunks never fail mid-stream.
+
+    Emits the same Stage-I artifact as `ContinuousBatcher`, but at page
+    granularity: `occupancy_bundle()` is a `TraceBundle` whose "kv" trace
+    steps in units of `page_bytes` — feed it to `core.explorer.sweep` /
+    `core.candidates.evaluate_candidates` unchanged.
+
+    Compile discipline: the chunk decode loop compiles exactly once (shapes
+    are fixed by the pool geometry). Admission prefill, like the dense
+    batcher's, still traces per distinct (prompt length, page count) — pad
+    or bucket prompts client-side if admission latency matters.
+    """
+
+    def __init__(self, model, params, *, num_slots: int = 4,
+                 page_size: int = 16, num_pages: int = 64,
+                 max_pages_per_slot: Optional[int] = None,
+                 chunk_steps: int = 16, attn_backend: str = "auto",
+                 step_time_s: float = 1e-3, prefill_tok_s: float = 5e-5):
+        if not hasattr(model, "decode_step_paged"):
+            raise TypeError("model lacks a paged decode path")
+        self.model = model
+        self.params = params
+        self.cfg = model.cfg
+        self.num_slots = num_slots
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.max_pages_per_slot = max_pages_per_slot or \
+            max(1, (num_pages - 1) // max(1, num_slots))
+        self.chunk_steps = chunk_steps
+        self.step_time_s = step_time_s
+        self.prefill_tok_s = prefill_tok_s
+
+        kv_bytes = jnp.dtype(model.compute_dtype).itemsize
+        self.page_bytes = page_bytes(self.cfg, page_size, kv_bytes)
+        self.row_bytes = self.page_bytes // page_size
+        self.ledger = PagedKVLedger(num_pages, self.page_bytes)
+        self.access = AccessStats()
+        self.stats = PagedStats()
+
+        self.queue: "collections.deque[Request]" = collections.deque()
+        self.slots: List[Optional[Request]] = [None] * num_slots
+        self._reserved = [0] * num_slots        # worst-case pages not yet held
+        self._ctx = np.zeros(num_slots, np.int64)
+        self._next_tok = np.zeros(num_slots, np.int32)
+        self._table = np.zeros((num_slots, self.max_pages_per_slot), np.int32)
+        self._sim_t = 0.0
+
+        self._cache = init_paged_cache(
+            self.cfg, num_slots, num_pages, page_size,
+            self.max_pages_per_slot, dtype=model.compute_dtype)
+        self._prefill = jax.jit(
+            lambda p, b, L: model.prefill(p, b, cache_len=L),
+            static_argnums=(2,))
+        self._write = jax.jit(functools.partial(write_prefill_to_pages,
+                                                self.cfg),
+                              donate_argnums=(0,))
+        self._loop = jax.jit(
+            functools.partial(_decode_loop, model, chunk_steps, attn_backend),
+            donate_argnums=(1,))
+
+    # ------------------------------------------------------------ client API
+    def submit(self, req: Request) -> None:
+        worst = pages_for(int(len(req.tokens)) + max(req.max_new_tokens - 1, 0),
+                          self.page_size)
+        if worst > min(self.max_pages_per_slot, self.num_pages - 1):
+            raise OutOfPages(
+                f"request {req.rid} needs {worst} pages; slot tables hold "
+                f"{self.max_pages_per_slot}, pool holds {self.num_pages - 1}")
+        req.submitted_s = time.perf_counter()
+        self.queue.append(req)
+
+    def run(self, max_chunks: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_chunks):
+            if not self.queue and all(s is None for s in self.slots):
+                break
+            self._admit(done)
+            self._decode_chunk(done)
+        return done
+
+    def occupancy_bundle(self) -> TraceBundle:
+        """Page-granular Stage-II view: feed to explorer.sweep() unchanged."""
+        return TraceBundle(graph_name=f"{self.cfg.name}-paged-serve",
+                           total_time=max(self._sim_t, self.step_time_s),
+                           traces={"kv": self.ledger.trace},
+                           access=self.access)
+
+    # ------------------------------------------------------------- internals
+    def _available_pages(self) -> int:
+        return self.ledger.allocator.n_free - sum(self._reserved)
+
+    def _retire(self, i: int, req: Request, done: List[Request],
+                t: float) -> None:
+        req.finished_s = time.perf_counter()
+        done.append(req)
+        self.slots[i] = None
+        n = self.ledger.retire(i, t)
+        self.stats.pages_freed += n
+        self.stats.retired_kv_bytes += n * self.page_bytes
+        self.stats.finished += 1
+        self._reserved[i] = 0
+        self._ctx[i] = 0
+        self._table[i, :] = 0
+
+    def _admit(self, done: List[Request]) -> None:
+        for i in range(self.num_slots):
+            if self.slots[i] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            prompt_len = int(len(req.tokens))
+            worst = pages_for(prompt_len + max(req.max_new_tokens - 1, 0),
+                              self.page_size)
+            if worst > self._available_pages():
+                break                      # FCFS: wait for pages to free up
+            self.queue.popleft()
+            npg = pages_for(prompt_len, self.page_size)
+
+            batch = {"tokens": jnp.asarray(np.asarray(req.tokens)[None, :],
+                                           jnp.int32)}
+            logits, dense = self._prefill(self.params, batch,
+                                          npg * self.page_size)
+            tok = int(jnp.argmax(logits[0, -1]))
+            self._sim_t += prompt_len * self.prefill_tok_s
+            pages = self.ledger.admit(i, npg, self._sim_t)
+            self._reserved[i] = worst - npg
+            self.stats.pages_allocated += npg
+            self.stats.peak_pages = max(self.stats.peak_pages,
+                                        self.ledger.allocator.n_allocated)
+            self.stats.admitted_kv_bytes += npg * self.page_bytes
+            self.access.add_write("kv", prompt_len * self.row_bytes)
+
+            self._cache = self._write(self._cache, dense, i,
+                                      jnp.asarray(pages, jnp.int32))
+            self.slots[i] = req
+            self._ctx[i] = prompt_len
+            self._next_tok[i] = tok
+            self._table[i, :] = 0
+            self._table[i, :npg] = pages
+            req.output.append(tok)
+            self.stats.admitted += 1
+            self.stats.prefills += 1
+            self.stats.peak_active_slots = max(
+                self.stats.peak_active_slots,
+                sum(s is not None for s in self.slots))
+            if (req.max_new_tokens <= 1
+                    or (req.eos_id is not None and tok == req.eos_id)):
+                self._retire(i, req, done, self._sim_t)
+
+    def _decode_chunk(self, done: List[Request]) -> None:
+        live = [i for i, s in enumerate(self.slots) if s is not None]
+        if not live:
+            return
+        t0 = self._sim_t
+        # grow page tables to cover this chunk's worst case (reservation at
+        # admission guarantees these allocations succeed)
+        remaining = np.zeros(self.num_slots, np.int32)
+        for i in live:
+            req = self.slots[i]
+            remaining[i] = req.max_new_tokens - len(req.output)
+            steps_i = min(self.chunk_steps, int(remaining[i]))
+            new_pages = self.ledger.grow(
+                i, pages_for(int(self._ctx[i]) + steps_i, self.page_size), t0)
+            if new_pages:
+                npg_have = len(self.ledger.slot_pages[i])
+                self._table[i, npg_have - len(new_pages):npg_have] = new_pages
+                self._reserved[i] -= len(new_pages)
+                self.stats.pages_allocated += len(new_pages)
+                self.stats.admitted_kv_bytes += len(new_pages) * self.page_bytes
+        self.stats.peak_pages = max(self.stats.peak_pages,
+                                    self.ledger.allocator.n_allocated)
+
+        cache = self._cache
+        # host is the source of truth between chunks: push the page-table
+        # mirror and the liveness mask (covers slots retired host-side at
+        # admission, whose device `active` flag was never flipped in-scan)
+        cache["page_table"] = jnp.asarray(self._table)
+        cache["active"] = jnp.asarray(
+            [s is not None for s in self.slots])
+        emitted, cache, tok, _ = self._loop(
+            self.params, cache, jnp.asarray(self._next_tok[:, None]),
+            jnp.asarray([(self.slots[i].eos_id if self.slots[i] is not None
+                          and self.slots[i].eos_id is not None else -1)
+                         for i in range(self.num_slots)], jnp.int32),
+            jnp.asarray(remaining))
+        self._cache = cache
+        self.stats.chunks += 1
+        emitted = np.asarray(emitted)                    # (steps, num_slots)
+        self._next_tok = np.array(tok[:, 0])
+        still_active = np.array(cache["active"])
+        self._sim_t = t0 + self.chunk_steps * self.step_time_s
+
+        for i in live:
+            req = self.slots[i]
+            col = emitted[:, i]
+            neg = np.nonzero(col < 0)[0]
+            g = int(neg[0]) if len(neg) else len(col)
+            req.output.extend(int(t) for t in col[:g])
+            self.stats.decode_steps += g
+            # page-granular access accounting: each step streams the resident
+            # pages and appends one row
+            ctxs = int(self._ctx[i]) + 1 + np.arange(g)
+            self.access.add_read(
+                "kv", int((np.ceil(ctxs / self.page_size)).sum())
+                * self.page_bytes)
+            self.access.add_write("kv", g * self.row_bytes)
+            self._ctx[i] += g
+            if not still_active[i]:
+                self._retire(i, req, done, t0 + g * self.step_time_s)
+
+
+def loop_compile_count() -> int:
+    """How many times the chunk decode loop has been traced/compiled
+    process-wide (tests assert it does not grow across chunks)."""
+    return LOOP_COMPILES[0]

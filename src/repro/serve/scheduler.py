@@ -9,12 +9,13 @@ observation: per-slot KV occupancy is what bounds concurrency, and GQA
 multiplies the slot count a given memory budget supports.
 
 Implementation notes:
-  * the KV cache is batched over slots; an admission writes the prefilled
-    prompt cache into slot i via a jitted scatter;
-  * per-slot position counters live in the cache's `pos`... since our model
-    cache keeps one scalar `pos`, slots carry per-slot lengths here and the
-    decode mask uses the max; correctness for ragged slots is maintained by
-    masking logits of inactive slots and re-prefilling on admission;
+  * this is the dense *reference* batcher: each slot holds its own batch=1
+    `max_len` cache and decodes one token per host round-trip — exact but
+    host-bound. The production path is `serve.paged.PagedContinuousBatcher`,
+    which keeps one batched paged cache with true per-slot positions (the
+    old max-slot-length decode mask is gone: every slot embeds, ropes and
+    attends at exactly its own context length) and runs multi-token chunks
+    as a single donated `lax.scan` on device;
   * simple FCFS admission; slots freed on EOS or max_new_tokens.
 """
 from __future__ import annotations

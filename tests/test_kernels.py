@@ -10,6 +10,8 @@ from repro.kernels.flash_attention import flash_attention, flash_attention_ref
 from repro.kernels.gqa_decode import gqa_decode, gqa_decode_ref
 from repro.kernels.int8_matmul import (int8_matmul, int8_matmul_ref,
                                        quantize_cols, quantize_rows)
+from repro.kernels.paged_gqa_decode import (gather_pages, paged_gqa_decode,
+                                            paged_gqa_decode_ref)
 
 
 def _rand(key, shape, dtype):
@@ -84,6 +86,83 @@ def test_gqa_decode_respects_length_mask():
     k2 = k.at[:, :, 150:].set(99.0)
     v2 = v.at[:, :, 150:].set(-99.0)
     o2 = gqa_decode(q, k2, v2, lengths, backend="interpret")
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)
+
+
+# --- paged gqa decode ---------------------------------------------------------
+
+def _paged_case(seed, B, K, d, ps, P, N, max_len=None):
+    """Random pool + ragged shuffled page tables; every slot gets a distinct
+    length (first one is a full-page multiple, rest arbitrary — so both a
+    partially-filled and an exactly-full last page are exercised)."""
+    rng = np.random.default_rng(seed)
+    pool_k = jnp.asarray(rng.normal(size=(N, K, ps, d)), jnp.float32)
+    pool_v = jnp.asarray(rng.normal(size=(N, K, ps, d)), jnp.float32)
+    cap = max_len or P * ps
+    lengths = rng.integers(1, cap + 1, B)
+    lengths[0] = min(ps * max(1, int(lengths[0]) // ps), cap)  # page multiple
+    pt = np.zeros((B, P), np.int64)
+    pool_ids = list(range(1, N))
+    rng.shuffle(pool_ids)
+    for b in range(B):
+        npg = -(-int(lengths[b]) // ps)
+        pt[b, :npg] = [pool_ids.pop() for _ in range(npg)]
+    return pool_k, pool_v, jnp.asarray(pt, jnp.int32), jnp.asarray(
+        lengths, jnp.int32)
+
+
+@pytest.mark.parametrize("B,H,K,d,ps,P,N", [
+    (2, 4, 4, 32, 8, 4, 12),       # MHA
+    (3, 8, 2, 64, 16, 3, 16),      # GQA group 4
+    (2, 8, 1, 64, 8, 6, 16),       # MQA
+    (2, 12, 3, 32, 8, 4, 12),      # non-pow2 heads
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_gqa_decode_sweep(B, H, K, d, ps, P, N, dtype):
+    pool_k, pool_v, pt, lengths = _paged_case(10 + B, B, K, d, ps, P, N)
+    q = _rand(jax.random.PRNGKey(B), (B, H, d), dtype)
+    pool_k, pool_v = pool_k.astype(dtype), pool_v.astype(dtype)
+    out = paged_gqa_decode(q, pool_k, pool_v, pt, lengths,
+                           backend="interpret")
+    ref = paged_gqa_decode_ref(q, pool_k, pool_v, pt, lengths)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_paged_ref_matches_dense_oracle():
+    """Gathering the pages densely and running the dense GQA decode oracle
+    must agree exactly with the paged reference."""
+    B, H, K, d, ps, P, N = 3, 8, 2, 32, 8, 5, 24
+    pool_k, pool_v, pt, lengths = _paged_case(3, B, K, d, ps, P, N)
+    q = _rand(jax.random.PRNGKey(7), (B, H, d), jnp.float32)
+    ref = paged_gqa_decode_ref(q, pool_k, pool_v, pt, lengths)
+    dense = gqa_decode_ref(q, gather_pages(pool_k, pt),
+                           gather_pages(pool_v, pt), lengths)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(dense))
+
+
+def test_paged_gqa_decode_respects_length_and_table():
+    """Pool pages a slot does not own — and the tail of its partially-filled
+    last page — must not affect its output."""
+    B, H, K, d, ps, P, N = 2, 4, 2, 32, 8, 4, 16
+    pool_k, pool_v, pt, lengths = _paged_case(4, B, K, d, ps, P, N,
+                                              max_len=P * ps - 3)
+    q = _rand(jax.random.PRNGKey(9), (B, H, d), jnp.float32)
+    o1 = paged_gqa_decode(q, pool_k, pool_v, pt, lengths,
+                          backend="interpret")
+    owned = np.unique(np.asarray(pt))
+    foreign = [p for p in range(N) if p not in owned]
+    pk = pool_k.at[jnp.asarray(foreign)].set(99.0)
+    pv = pool_v.at[jnp.asarray(foreign)].set(-99.0)
+    # also poison the invalid tail of each slot's last page
+    for b in range(B):
+        L = int(lengths[b])
+        last = int(np.asarray(pt)[b, (L - 1) // ps])
+        if L % ps:
+            pk = pk.at[last, :, L % ps:].set(77.0)
+            pv = pv.at[last, :, L % ps:].set(-77.0)
+    o2 = paged_gqa_decode(q, pk, pv, pt, lengths, backend="interpret")
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)
 
 

@@ -1,0 +1,118 @@
+"""Hypothesis property tests on the page allocator + page ledger (the
+host-side half of the paged serving path), mirroring test_trace_props.py."""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serve.paged import (OutOfPages, PageAllocator,  # noqa: E402
+                               PagedKVLedger, pages_for)
+
+PAGE_BYTES = 4096
+
+# interleaved allocator ops: (alloc n) as positive ints, (free batch i) as
+# negative picks of an outstanding allocation
+alloc_ops_st = st.lists(st.integers(-5, 6), min_size=1, max_size=80)
+
+# request lifetimes driven through the ledger: (slot, prompt_pages, grow
+# steps, inter-event gap)
+request_st = st.lists(
+    st.tuples(st.integers(0, 3),                 # slot id
+              st.integers(0, 4),                 # prompt pages
+              st.lists(st.integers(0, 3), max_size=4),   # page growth deltas
+              st.floats(0.0, 2.0)),              # time gap
+    min_size=1, max_size=30)
+
+
+@given(st.integers(2, 64), alloc_ops_st)
+@settings(max_examples=80, deadline=None)
+def test_allocator_invariants(num_pages, ops):
+    """No double allocation, null page never handed out, frees restore the
+    free count, conservation of pages throughout."""
+    a = PageAllocator(num_pages)
+    outstanding = []
+    seen_live = set()
+    for op in ops:
+        if op > 0:
+            try:
+                pages = a.alloc(op)
+            except OutOfPages:
+                assert op > a.n_free
+                continue
+            assert len(pages) == op
+            assert 0 not in pages                       # null page reserved
+            assert not (set(pages) & seen_live)         # no double allocation
+            seen_live.update(pages)
+            outstanding.append(pages)
+        elif op < 0 and outstanding:
+            pages = outstanding.pop(abs(op) % len(outstanding))
+            before = a.n_free
+            a.free(pages)
+            assert a.n_free == before + len(pages)
+            seen_live.difference_update(pages)
+        assert a.n_free + a.n_allocated == num_pages - 1
+        assert a.n_allocated == len(seen_live)
+    # full drain returns the pool to pristine
+    for pages in outstanding:
+        a.free(pages)
+    assert a.n_allocated == 0 and a.n_free == num_pages - 1
+
+
+def test_allocator_rejects_double_free_and_foreign_pages():
+    a = PageAllocator(8)
+    pages = a.alloc(2)
+    a.free(pages)
+    with pytest.raises(ValueError):
+        a.free(pages)
+    with pytest.raises(ValueError):
+        a.free([0])
+
+
+@given(request_st)
+@settings(max_examples=60, deadline=None)
+def test_ledger_occupancy_is_pages_times_page_bytes(stream):
+    """At every event the integrated trace equals the allocator's
+    outstanding pages x page_bytes, and alloc/free deltas integrate to zero
+    once every slot is retired."""
+    # pool sized above the stream's worst case so growth never throws
+    led = PagedKVLedger(128, PAGE_BYTES)
+    t = 0.0
+    live = {}
+    for slot, n_prompt, grows, gap in stream:
+        t += gap
+        if slot in live:
+            led.retire(slot, t)
+            del live[slot]
+            continue
+        pages = led.admit(slot, n_prompt, t)
+        assert len(pages) == n_prompt
+        live[slot] = n_prompt
+        for g in grows:
+            t += 0.1
+            led.grow(slot, live[slot] + g, t)
+            live[slot] += g
+        assert led.occupancy_bytes() == \
+            led.allocator.n_allocated * PAGE_BYTES
+        tarr, n, _ = led.trace.as_arrays()
+        if len(n):
+            assert int(n[-1]) == led.occupancy_bytes()
+            assert (n % PAGE_BYTES == 0).all()
+            assert int(n.max()) <= led.trace.capacity
+    for slot in list(live):
+        t += 0.1
+        led.retire(slot, t)
+    assert led.allocator.n_allocated == 0
+    if led.trace.n_events:
+        assert sum(led.trace.ev_dneeded) == 0          # integrates to zero
+        _, n, _ = led.trace.as_arrays()
+        assert int(n[-1]) == 0
+
+
+@given(st.integers(1, 200), st.integers(1, 32))
+@settings(max_examples=60, deadline=None)
+def test_pages_for_covers_tokens_tightly(tokens, ps):
+    n = pages_for(tokens, ps)
+    assert n * ps >= tokens
+    assert (n - 1) * ps < tokens
