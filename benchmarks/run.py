@@ -4,8 +4,8 @@ from __future__ import annotations
 import sys
 import traceback
 
-from benchmarks import kernels_bench, paper_figs, serve_bench, \
-    stage1_bench, stage2_bench, traffic_bench
+from benchmarks import kernels_bench, paper_figs, prefix_bench, \
+    serve_bench, stage1_bench, stage2_bench, traffic_bench
 
 BENCHES = [
     ("fig1_mha_vs_gqa", paper_figs.fig1_mha_vs_gqa),
@@ -23,6 +23,7 @@ BENCHES = [
     ("stage1_pss", stage1_bench.bench_stage1_pss),
     ("stage2_engine", stage2_bench.bench_stage2_engine),
     ("serve_paged", serve_bench.bench_serve_paged),
+    ("serve_prefix", prefix_bench.bench_serve_prefix),
     ("kern_flash_attention", kernels_bench.bench_flash_attention),
     ("kern_gqa_decode", kernels_bench.bench_gqa_decode),
     ("kern_int8_matmul", kernels_bench.bench_int8_matmul),

@@ -65,4 +65,25 @@ grep -q "pages" /tmp/paged_smoke.out
 # >=5x decode-throughput bar are asserted inside
 PYTHONPATH=src timeout 600 python -m benchmarks.serve_bench \
     /tmp/BENCH_serve.json | tail -1
+
+# prefix-sharing smoke: shared-prefix traffic through the radix-index/COW
+# batcher, dual logical-vs-physical traces into a Stage-II sweep
+PYTHONPATH=src timeout 120 python examples/prefix_serving.py \
+    --requests 6 --new-tokens 6 > /tmp/prefix_smoke.out
+grep -q "prefix" /tmp/prefix_smoke.out
+grep -q "physical" /tmp/prefix_smoke.out
+
+# shared-prefix workload campaign through the traffic CLI (host-only sim;
+# fan-out = concurrent copies of one prefix, the strongest sharing signal)
+PYTHONPATH=src timeout 120 python -m repro.launch.traffic \
+    --model dsr1d_qwen_1_5b --workload agentic_fanout --rate 2 --horizon 6 \
+    --slots 4 --max-len 512 --banks 1 8 --fast-backend ref --no-mha-ref \
+    > /tmp/prefix_campaign.out
+grep -q "prefix sharing" /tmp/prefix_campaign.out
+grep -q "logical vs physical" /tmp/prefix_campaign.out
+
+# prefix benchmark: >=2x physical peak-page reduction at sharing factor 8
+# (512-token shared prefix) and decode-throughput parity asserted inside
+PYTHONPATH=src timeout 600 python -m benchmarks.prefix_bench \
+    /tmp/BENCH_prefix.json | tail -1
 echo "ci: OK"

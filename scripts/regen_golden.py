@@ -32,6 +32,22 @@ def main() -> None:
               f"macs={case['total_macs']}")
     print(f"wrote {out}")
 
+    # shared-prefix serving occupancy fixtures (dual logical/physical traces)
+    pout = golden_util.PREFIX_GOLDEN_PATH if len(sys.argv) <= 1 else \
+        os.path.join(os.path.dirname(out), "prefix_golden.json")
+    ppayload = golden_util.build_prefix_golden()
+    with open(pout, "w") as f:
+        json.dump(ppayload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    for name, case in ppayload.items():
+        st = case["stats"]
+        print(f"{name}: {case['n_requests']} reqs, "
+              f"hits={st['prefix_hits']}/{st['admitted']}, "
+              f"cow={st['cow_splits']}, "
+              f"phys_peak={case['mems']['kv']['peak_needed']} B, "
+              f"logical_peak={case['mems']['kv_logical']['peak_needed']} B")
+    print(f"wrote {pout}")
+
 
 if __name__ == "__main__":
     main()

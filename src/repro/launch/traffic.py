@@ -53,6 +53,19 @@ def main() -> None:
                          "(dsr1d_qwen_1_5b == dsr1d-qwen-1.5b)")
     ap.add_argument("--arrival", nargs="+", default=["poisson"],
                     choices=["poisson", "bursty", "diurnal"])
+    ap.add_argument("--workload", default="plain",
+                    choices=["plain", "chat_sysprompt", "fewshot",
+                             "agentic_fanout"],
+                    help="shared-prefix workload family; non-plain runs the "
+                         "page-granular prefix-sharing simulator and sweeps "
+                         "the grid against PHYSICAL occupancy")
+    ap.add_argument("--prefix-len", type=int, default=512,
+                    help="mean shared-prefix length [tokens]")
+    ap.add_argument("--sharing", type=int, default=8,
+                    help="sharing factor (expected requests per prefix; "
+                         "fan-out width for agentic_fanout)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV page size [tokens] for shared workloads")
     ap.add_argument("--rate", nargs="+", type=float, default=[4.0],
                     help="mean request rate(s) [req/s]")
     ap.add_argument("--seed", nargs="+", type=int, default=[0])
@@ -109,7 +122,24 @@ def main() -> None:
                               hysteresis_multiple=args.hysteresis),
         lengths=LengthModel(max_len=args.max_len),
         resample_dt=args.resample_dt, fast_backend=args.fast_backend,
-        backend=args.backend, prune=args.prune, fidelity=args.fidelity)
+        backend=args.backend, prune=args.prune, fidelity=args.fidelity,
+        workload=args.workload, prefix_len=args.prefix_len,
+        sharing=args.sharing, page_size=args.page_size)
+
+    if args.workload != "plain":
+        print(f"\n# prefix sharing ({args.workload}, sharing={args.sharing}, "
+              f"prefix~{args.prefix_len} tok): logical vs physical occupancy")
+        for (arch, tkey), sim in sorted(report.sims.items()):
+            tr = sim.bundle.traces["kv"]
+            lg = sim.bundle.traces["kv_logical"]
+            st = sim.stats
+            phys, logi = tr.peak_needed(), lg.peak_needed()
+            print(f"  {arch:>20} {tkey[0]}@{tkey[1]:g}/s seed={tkey[2]}: "
+                  f"peak {logi / MIB:.1f} -> {phys / MIB:.1f} MiB "
+                  f"({logi / max(phys, 1):.2f}x), hits "
+                  f"{st.prefix_hits}/{st.admitted}, "
+                  f"{st.prefix_tokens_reused} tok reused, "
+                  f"{st.cow_splits} COW, {st.evicted_pages} pages evicted")
 
     print("\n# online controller vs offline oracle vs no gating")
     print(report.format())

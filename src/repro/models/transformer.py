@@ -345,6 +345,143 @@ def write_prefill_to_pages(cfg, paged: dict, dense: dict, slot,
 
 
 # ---------------------------------------------------------------------------
+# Prefix sharing: gather / COW-write / page-copy helpers + suffix prefill
+# ---------------------------------------------------------------------------
+#
+# Prefix reuse needs no kernel change — shared pages are reached through the
+# same page-table indirection as private ones. The device-side verbs are:
+#   gather_prefix_pages          pages -> dense (1, m, K, h) prefix KV
+#   prefix_tail_rows             last j rows of a gathered prefix (the
+#                                partially-matched page's valid rows)
+#   write_shared_prefill_to_pages  head + suffix KV -> fresh pages, table row
+#                                = shared pages ++ fresh pages
+#   copy_pages                   COW split: clone one page across all layers
+# and DecoderLM.prefill_shared runs the *suffix-only* forward against the
+# gathered prefix KV (the compute half of "skipping prefill for the matched
+# run"). All of it is restricted to pure full-attention stacks: recurrent
+# blocks carry position-mixed state that cannot be sliced at a prefix
+# boundary.
+
+def _require_pure_full(cfg, what: str) -> None:
+    if any(k != "full" for k in cfg.layer_kinds()):
+        raise NotImplementedError(
+            f"{what} requires a pure full-attention stack; "
+            f"{cfg.name} mixes {set(cfg.layer_kinds())}")
+
+
+def gather_prefix_pages(cfg, paged: dict, page_ids: jax.Array,
+                        n_rows: int) -> dict:
+    """Collect the first `n_rows` KV rows stored in `page_ids` (table order)
+    as a dense prefix pytree {"slots": [{"k","v"}...], "tail": [...]} with
+    leaves (n_rep, 1, n_rows, K, h) / (1, n_rows, K, h). Rows come back
+    exactly as stored (post-RoPE, pool dtype)."""
+    _require_pure_full(cfg, "gather_prefix_pages")
+
+    def take(pool, stacked: bool):
+        if stacked:
+            x = pool[:, page_ids]                      # (n, npg, K, ps, h)
+            n, npg, K, ps, h = x.shape
+            x = x.transpose(0, 1, 3, 2, 4).reshape(n, npg * ps, K, h)
+            return x[:, None, :n_rows]                 # (n, 1, rows, K, h)
+        x = pool[page_ids]                             # (npg, K, ps, h)
+        npg, K, ps, h = x.shape
+        x = x.transpose(0, 2, 1, 3).reshape(npg * ps, K, h)
+        return x[None, :n_rows]                        # (1, rows, K, h)
+
+    return {
+        "slots": [{"k": take(e["kp"], True), "v": take(e["vp"], True)}
+                  for e in paged["slots"]],
+        "tail": [{"k": take(e["kp"], False), "v": take(e["vp"], False)}
+                 for e in paged["tail"]],
+    }
+
+
+def prefix_tail_rows(prefix: dict, j: int) -> dict:
+    """Last `j` rows of a gathered prefix — the valid head of the boundary
+    page a COW admission rewrites into its private copy (j == 0 -> empty)."""
+    def cut(a, stacked: bool):
+        return a[:, :, a.shape[2] - j:] if stacked else a[:, a.shape[1] - j:]
+    return {
+        "slots": [{"k": cut(e["k"], True), "v": cut(e["v"], True)}
+                  for e in prefix["slots"]],
+        "tail": [{"k": cut(e["k"], False), "v": cut(e["v"], False)}
+                 for e in prefix["tail"]],
+    }
+
+
+def write_shared_prefill_to_pages(cfg, paged: dict, suffix: dict, head: dict,
+                                  slot, shared_ids: jax.Array,
+                                  fresh_ids: jax.Array) -> dict:
+    """Prefix-hit admission: map `shared_ids` read-only into the slot's
+    table, then write `head` (j rows re-owned from the partially-matched
+    page) followed by `suffix` (the freshly computed suffix KV) page-aligned
+    into `fresh_ids`. Sets pos = |shared|*ps + j + |suffix| and activates
+    the slot. With empty `shared_ids`/`head` this degenerates to a plain
+    paged admission of a full prefill."""
+    _require_pure_full(cfg, "write_shared_prefill_to_pages")
+    n_shared = shared_ids.shape[0]
+    npg_f = fresh_ids.shape[0]
+
+    def put(pool, head_x, suf_x, stacked: bool):
+        if stacked:
+            rows = jnp.concatenate(
+                [head_x[:, 0], suf_x[:, 0].astype(pool.dtype)], axis=1)
+            n, r, K, h = rows.shape
+            ps = pool.shape[-2]
+            rows = jnp.pad(rows, ((0, 0), (0, npg_f * ps - r),
+                                  (0, 0), (0, 0)))
+            x = rows.reshape(n, npg_f, ps, K, h).transpose(0, 1, 3, 2, 4)
+            return pool.at[:, fresh_ids].set(x)
+        rows = jnp.concatenate([head_x[0], suf_x[0].astype(pool.dtype)],
+                               axis=0)
+        r, K, h = rows.shape
+        ps = pool.shape[-2]
+        rows = jnp.pad(rows, ((0, npg_f * ps - r), (0, 0), (0, 0)))
+        x = rows.reshape(npg_f, ps, K, h).transpose(0, 2, 1, 3)
+        return pool.at[fresh_ids].set(x)
+
+    ps = paged["slots"][0]["kp"].shape[-2] if paged["slots"] \
+        else paged["tail"][0]["kp"].shape[-2]
+    j = (head["slots"][0]["k"].shape[2] if head["slots"]
+         else head["tail"][0]["k"].shape[1])
+    s_suf = (suffix["slots"][0]["k"].shape[2] if suffix["slots"]
+             else suffix["tail"][0]["k"].shape[1])
+
+    out = dict(paged)
+    out["slots"] = [
+        {"kp": put(e["kp"], hd["k"], sf["k"], True),
+         "vp": put(e["vp"], hd["v"], sf["v"], True)}
+        for e, hd, sf in zip(paged["slots"], head["slots"], suffix["slots"])]
+    out["tail"] = [
+        {"kp": put(e["kp"], hd["k"], sf["k"], False),
+         "vp": put(e["vp"], hd["v"], sf["v"], False)}
+        for e, hd, sf in zip(paged["tail"], head["tail"], suffix["tail"])]
+    row = jnp.full((paged["page_table"].shape[1],), PAGED_NULL_PAGE,
+                   jnp.int32)
+    row = row.at[:n_shared].set(shared_ids.astype(jnp.int32))
+    row = row.at[n_shared:n_shared + npg_f].set(fresh_ids.astype(jnp.int32))
+    out["page_table"] = paged["page_table"].at[slot].set(row)
+    out["pos"] = paged["pos"].at[slot].set(
+        jnp.int32(n_shared * ps + j + s_suf))
+    out["active"] = paged["active"].at[slot].set(True)
+    return out
+
+
+def copy_pages(cfg, paged: dict, src: jax.Array, dst: jax.Array) -> dict:
+    """COW split: duplicate page `src` into `dst` across every layer pool
+    (one jitted call, scalars traced — compiles once per pool geometry)."""
+    _require_pure_full(cfg, "copy_pages")
+    out = dict(paged)
+    out["slots"] = [{"kp": e["kp"].at[:, dst].set(e["kp"][:, src]),
+                     "vp": e["vp"].at[:, dst].set(e["vp"][:, src])}
+                    for e in paged["slots"]]
+    out["tail"] = [{"kp": e["kp"].at[dst].set(e["kp"][src]),
+                    "vp": e["vp"].at[dst].set(e["vp"][src])}
+                   for e in paged["tail"]]
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Block application — decode mode
 # ---------------------------------------------------------------------------
 
@@ -428,6 +565,52 @@ def apply_block_decode_paged(cfg, kind: str, p: dict, x: jax.Array,
         x = x + f
         return x, {"kp": kp, "vp": vp}
     return apply_block_decode(cfg, kind, p, x, cache, pos)
+
+
+def _apply_block_shared_prefill(cfg, p: dict, x: jax.Array,
+                                positions: jax.Array, pk: jax.Array,
+                                pv: jax.Array, kv_block: int,
+                                unroll: bool = False,
+                                pad_to: Optional[int] = None):
+    """Full-attention block over suffix rows against a cached prefix.
+
+    x: (1, S_suf, D) suffix activations; positions: (1, S_suf) absolute
+    positions; pk/pv: (1, m, K, h) prefix KV exactly as stored (post-RoPE).
+    Attention runs over concat(prefix, suffix) keys with `q_offset = m`.
+
+    `pad_to` fixes the attention width: keys/values are zero-padded (and
+    causally masked) to that many positions and contracted as one block.
+    With a fixed width, row i's online-softmax reduction tree depends only
+    on tokens <= i — so the KV a request computes is **bit-identical**
+    whether its prefix rows came from its own prefill or a donor with a
+    different continuation. That invariance is what makes prefix-cache
+    hits exact; without `pad_to` the reduction width (and hence float
+    rounding) varies with total sequence length. Returns (x_out, (k, v))
+    with suffix-only KV."""
+    m = pk.shape[1]
+    y = apply_norm(cfg, p["norm1"], x)
+    q, k, v = attn.project_qkv(cfg, p["attn"], y, y)
+    if cfg.pos_emb == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    kk = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
+    vv = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
+    if pad_to is not None:
+        T = kk.shape[1]
+        assert pad_to >= T, (pad_to, T)
+        pad = ((0, 0), (0, pad_to - T), (0, 0), (0, 0))
+        kk, vv = jnp.pad(kk, pad), jnp.pad(vv, pad)
+        kv_block = pad_to
+    o = attn.blocked_attention(q, kk, vv, causal=True, q_offset=m,
+                               kv_block=kv_block, unroll=unroll)
+    o = o.reshape(*x.shape[:2], cfg.q_dim)
+    x = x + o @ p["attn"]["wo"].astype(x.dtype)
+    y2 = apply_norm(cfg, p["norm2"], x)
+    if cfg.moe is not None:
+        f, _ = moe_mod.apply_moe(cfg, p["ffn"], y2)
+    else:
+        f = ffn_mod.apply_ffn(cfg, p["ffn"], y2)
+    return x + f, (k, v)
 
 
 # ---------------------------------------------------------------------------
@@ -614,6 +797,68 @@ class DecoderLM:
         x = apply_norm(cfg, params["final_norm"], x)
         logits = lm_logits(cfg, params["embed"], x[:, -1:, :])
         return logits, cache
+
+    # ------------------------------------------------- prefix-hit prefill
+    def prefill_shared(self, params: dict, batch: dict, prefix: dict,
+                       pad_to: Optional[int] = None):
+        """Suffix-only prefill against a cached prompt prefix.
+
+        batch["tokens"]: (1, S_suf) — the prompt tokens *after* the matched
+        prefix; `prefix`: the pytree from `gather_prefix_pages` (per-layer
+        post-RoPE KV of the matched m tokens). Embeds/ropes the suffix at
+        absolute positions [m, m + S_suf) and attends over the concatenated
+        keys, so only the suffix's compute is paid — the prefill skip of a
+        prefix-cache hit. `pad_to` fixes the attention width for donor-
+        independent bit-exactness (see `_apply_block_shared_prefill`); the
+        paged batcher passes its slot capacity. Returns (last-position
+        logits, suffix KV pytree with leaves (n_rep, 1, S_suf, K, h) ready
+        for `write_shared_prefill_to_pages`). Pure full-attention stacks
+        only; with an empty prefix (m == 0) this is a full prefill minus
+        the dense cache padding.
+        """
+        cfg = self.cfg
+        _require_pure_full(cfg, "prefill_shared")
+        if "prefix_embeds" in batch:
+            raise NotImplementedError("prefix caching is token-keyed; "
+                                      "frontend prefix embeds unsupported")
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        m = (prefix["slots"][0]["k"].shape[2] if prefix["slots"]
+             else prefix["tail"][0]["k"].shape[1])
+        positions = jnp.broadcast_to(m + jnp.arange(S), (B, S))
+        x = embed_tokens(cfg, params["embed"], tokens, positions,
+                         self.compute_dtype)
+        pat = cfg.block_pattern
+        n_rep = cfg.num_layers // len(pat)
+        kvb = self.kv_block
+
+        def body(x, xs):
+            slot_params, slot_prefix = xs
+            kvs = []
+            for i in range(len(pat)):
+                x, (k, v) = _apply_block_shared_prefill(
+                    cfg, slot_params[i], x, positions, slot_prefix[i]["k"],
+                    slot_prefix[i]["v"], kvb, self.unroll, pad_to)
+                kvs.append({"k": k, "v": v})
+            return x, tuple(kvs)
+
+        if n_rep > 0:
+            x, suf_slots = jax.lax.scan(
+                body, x, (tuple(params["blocks"]), tuple(prefix["slots"])),
+                unroll=n_rep if self.unroll else 1)
+            suf_slots = list(suf_slots)
+        else:
+            suf_slots = []
+        suf_tail = []
+        for tp, pfx in zip(params["tail"], prefix["tail"]):
+            x, (k, v) = _apply_block_shared_prefill(
+                cfg, tp, x, positions, pfx["k"], pfx["v"], kvb, self.unroll,
+                pad_to)
+            suf_tail.append({"k": k, "v": v})
+
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = lm_logits(cfg, params["embed"], x[:, -1:, :])
+        return logits, {"slots": suf_slots, "tail": suf_tail}
 
     # -------------------------------------------------------- decode step
     def decode_step(self, params: dict, cache: dict, tokens: jax.Array):

@@ -2,4 +2,6 @@ from repro.serve.engine import BatchedServer, ServeConfig, ServeStats  # noqa: F
 from repro.serve.paged import (OutOfPages, PageAllocator,  # noqa: F401
                                PagedContinuousBatcher, PagedKVLedger,
                                page_bytes, pages_for)
+from repro.serve.prefix import (PrefixMatch, RadixPrefixIndex,  # noqa: F401
+                                SharedKVLedger, SharedPageAllocator)
 from repro.serve.scheduler import ContinuousBatcher, Request, kv_slot_budget  # noqa: F401

@@ -51,11 +51,13 @@ def _sample(temperature: float, logits: jax.Array, rng: jax.Array) -> jax.Array:
 LOOP_COMPILES = [0]
 
 
-def _generate_loop(model, temperature: float, steps: int, params, cache,
-                   tok, rng):
+def _generate_loop(model, temperature: float, collect_logits: bool,
+                   steps: int, params, cache, tok, rng):
     """`steps` greedy/sampled decode steps as one on-device scan.
 
-    Returns the emitted tokens (steps, B); the donated cache is consumed."""
+    Returns the emitted tokens (steps, B) — plus each step's last-position
+    logits (steps, B, V) when `collect_logits` — the donated cache is
+    consumed."""
     LOOP_COMPILES[0] += 1
 
     def step(carry, _):
@@ -63,7 +65,8 @@ def _generate_loop(model, temperature: float, steps: int, params, cache,
         logits, cache = model.decode_step(params, cache, tok)
         rng, k = jax.random.split(rng)
         tok = _sample(temperature, logits, k)
-        return (cache, tok, rng), tok[:, 0]
+        out = (tok[:, 0], logits[:, -1, :]) if collect_logits else tok[:, 0]
+        return (cache, tok, rng), out
 
     (cache, tok, rng), toks = jax.lax.scan(
         step, (cache, tok, rng), None, length=steps)
@@ -71,23 +74,29 @@ def _generate_loop(model, temperature: float, steps: int, params, cache,
 
 
 class BatchedServer:
-    def __init__(self, model, params, cfg: ServeConfig):
+    def __init__(self, model, params, cfg: ServeConfig,
+                 collect_logits: bool = False):
         self.model = model
         self.params = params
         self.cfg = cfg
+        self.collect_logits = collect_logits
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, cache_len=cfg.max_len))
         # static `steps`, donated cache: one compile per generation length,
         # zero host round-trips inside the loop
         self._loop = jax.jit(
-            functools.partial(_generate_loop, model, cfg.temperature),
+            functools.partial(_generate_loop, model, cfg.temperature,
+                              collect_logits),
             static_argnums=(0,), donate_argnums=(2,))
 
     def generate(self, batch: Dict[str, Any],
                  max_new_tokens: Optional[int] = None) -> Dict[str, Any]:
         """batch: model inputs with 'tokens' (B, S_prompt) [+ frames/prefix].
 
-        Returns {'tokens': (B, S_new), 'stats': ServeStats}."""
+        Returns {'tokens': (B, S_new), 'stats': ServeStats}; with
+        `collect_logits` also 'logits' (B, S_new, V) — the last-position
+        logits that produced each emitted token (prefill step included),
+        the reference side of the prefix-sharing bit-identity regression."""
         n_new = max_new_tokens or self.cfg.max_new_tokens
         rng = jax.random.PRNGKey(self.cfg.seed)
         stats = ServeStats()
@@ -100,18 +109,30 @@ class BatchedServer:
         rng, k = jax.random.split(rng)
         tok = _sample(self.cfg.temperature, logits, k)
         first = np.asarray(tok)
+        first_logits = (np.asarray(logits[:, -1, :])
+                        if self.collect_logits else None)
 
         t0 = time.perf_counter()
+        step_logits = None
         if n_new > 1:
             toks = self._loop(n_new - 1, self.params, cache, tok, rng)
+            if self.collect_logits:
+                toks, step_logits = toks
+                step_logits = np.asarray(step_logits)       # (steps, B, V)
             toks.block_until_ready()
             rest = np.asarray(toks).T                       # (B, steps)
         else:
             rest = np.zeros((first.shape[0], 0), first.dtype)
         stats.decode_s = time.perf_counter() - t0
         stats.tokens_generated = n_new * first.shape[0]
-        return {"tokens": np.concatenate([first, rest], axis=1),
-                "stats": stats}
+        out = {"tokens": np.concatenate([first, rest], axis=1),
+               "stats": stats}
+        if self.collect_logits:
+            parts = [first_logits[:, None]]
+            if step_logits is not None:
+                parts.append(step_logits.transpose(1, 0, 2))
+            out["logits"] = np.concatenate(parts, axis=1)   # (B, n_new, V)
+        return out
 
 
 def loop_compile_count() -> int:

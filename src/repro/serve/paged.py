@@ -30,7 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.transformer import (init_paged_cache, write_prefill_to_pages)
+from repro.models.transformer import (init_paged_cache, prefix_tail_rows,
+                                      write_prefill_to_pages)
 from repro.serve.scheduler import Request, SchedulerStats
 from repro.sim.trace import AccessStats, OccupancyTrace, TraceBundle
 
@@ -139,11 +140,13 @@ class PagedKVLedger:
 LOOP_COMPILES = [0]
 
 
-def _decode_loop(model, steps: int, attn_backend: str, params, cache, tok,
-                 eos, remaining):
+def _decode_loop(model, steps: int, attn_backend: str, collect_logits: bool,
+                 params, cache, tok, eos, remaining):
     """Greedy multi-token decode: `steps` tokens for every slot in one
     on-device `lax.scan`. Slots retire in-scan (EOS or token budget) via the
-    cache's `active` mask; inactive lanes emit -1 and stop advancing."""
+    cache's `active` mask; inactive lanes emit -1 and stop advancing. With
+    `collect_logits` the scan additionally emits every step's last-position
+    logits (exactness debugging / the bit-identity regression)."""
     LOOP_COMPILES[0] += 1
 
     def step(carry, _):
@@ -158,7 +161,8 @@ def _decode_loop(model, steps: int, attn_backend: str, params, cache, tok,
         cache = dict(cache)
         cache["active"] = active & ~done
         tok = jnp.where(active[:, None], nxt[:, None], tok)
-        return (cache, tok, remaining), emit
+        out = (emit, logits[:, -1, :]) if collect_logits else emit
+        return (cache, tok, remaining), out
 
     (cache, tok, remaining), emitted = jax.lax.scan(
         step, (cache, tok, remaining), None, length=steps)
@@ -175,6 +179,9 @@ class PagedStats(SchedulerStats):
     pages_freed: int = 0
     peak_pages: int = 0
     chunks: int = 0
+    # prefix-sharing counters (stay zero without prefix_cache)
+    cow_splits: int = 0
+    evicted_pages: int = 0
 
 
 class PagedContinuousBatcher:
@@ -197,14 +204,28 @@ class PagedContinuousBatcher:
     Compile discipline: the chunk decode loop compiles exactly once (shapes
     are fixed by the pool geometry). Admission prefill, like the dense
     batcher's, still traces per distinct (prompt length, page count) — pad
-    or bucket prompts client-side if admission latency matters.
+    or bucket prompts client-side if admission latency matters. With
+    `prefix_cache` the hit path traces per (matched length, suffix length)
+    pair instead.
+
+    Prefix sharing (`prefix_cache=True`, pure full-attention stacks only):
+    admission probes a `RadixPrefixIndex` with the prompt, maps matched
+    pages read-only into the slot's table, runs a *suffix-only* prefill
+    against the gathered prefix KV (bit-exact vs the full prefill), and
+    caches every admitted run for later requests. The last page of a shared
+    run is copy-on-write split on the first divergent write; unreferenced
+    cached prefixes are LRU-evicted under page pressure. The ledger then
+    emits dual Stage-I traces — "kv" (physical: unique referenced pages,
+    cache-resident pages as obsolete) and "kv_logical" (per-slot demand sum)
+    — so Stage II can price the gating headroom sharing unlocks.
     """
 
     def __init__(self, model, params, *, num_slots: int = 4,
                  page_size: int = 16, num_pages: int = 64,
                  max_pages_per_slot: Optional[int] = None,
                  chunk_steps: int = 16, attn_backend: str = "auto",
-                 step_time_s: float = 1e-3, prefill_tok_s: float = 5e-5):
+                 step_time_s: float = 1e-3, prefill_tok_s: float = 5e-5,
+                 prefix_cache: bool = False, collect_logits: bool = False):
         if not hasattr(model, "decode_step_paged"):
             raise TypeError("model lacks a paged decode path")
         self.model = model
@@ -218,11 +239,20 @@ class PagedContinuousBatcher:
         self.chunk_steps = chunk_steps
         self.step_time_s = step_time_s
         self.prefill_tok_s = prefill_tok_s
+        self.prefix_cache = prefix_cache
+        self.collect_logits = collect_logits
 
         kv_bytes = jnp.dtype(model.compute_dtype).itemsize
         self.page_bytes = page_bytes(self.cfg, page_size, kv_bytes)
         self.row_bytes = self.page_bytes // page_size
-        self.ledger = PagedKVLedger(num_pages, self.page_bytes)
+        if prefix_cache:
+            from repro.serve.prefix import SharedKVLedger
+            self.ledger = SharedKVLedger(
+                num_pages, self.page_bytes, page_size,
+                num_slots=num_slots,
+                max_pages_per_slot=self.max_pages_per_slot)
+        else:
+            self.ledger = PagedKVLedger(num_pages, self.page_bytes)
         self.access = AccessStats()
         self.stats = PagedStats()
 
@@ -244,17 +274,46 @@ class PagedContinuousBatcher:
                                                 self.cfg),
                               donate_argnums=(0,))
         self._loop = jax.jit(
-            functools.partial(_decode_loop, model, chunk_steps, attn_backend),
+            functools.partial(_decode_loop, model, chunk_steps, attn_backend,
+                              collect_logits),
             donate_argnums=(1,))
+        if prefix_cache:
+            from repro.models.transformer import (_require_pure_full,
+                                                  copy_pages,
+                                                  gather_prefix_pages,
+                                                  write_shared_prefill_to_pages)
+            _require_pure_full(model.cfg, "prefix_cache")
+            self._gather = jax.jit(
+                functools.partial(gather_prefix_pages, self.cfg),
+                static_argnums=(2,))
+            # fixed attention width = slot capacity: makes the suffix
+            # prefill's reduction tree independent of who computed the
+            # prefix (donor-exact KV, see _apply_block_shared_prefill)
+            pad_to = self.max_pages_per_slot * page_size
+            self._prefill_shared = jax.jit(
+                lambda p, t, pfx: model.prefill_shared(
+                    p, {"tokens": t}, pfx, pad_to=pad_to))
+            self._write_shared = jax.jit(
+                functools.partial(write_shared_prefill_to_pages, self.cfg),
+                donate_argnums=(0,))
+            self._copy = jax.jit(functools.partial(copy_pages, self.cfg),
+                                 donate_argnums=(0,))
 
     # ------------------------------------------------------------ client API
     def submit(self, req: Request) -> None:
-        worst = pages_for(int(len(req.tokens)) + max(req.max_new_tokens - 1, 0),
-                          self.page_size)
-        if worst > min(self.max_pages_per_slot, self.num_pages - 1):
+        S = int(len(req.tokens))
+        worst = pages_for(S + max(req.max_new_tokens - 1, 0), self.page_size)
+        # prefix mode reserves one extra pool page for the deferred COW
+        # split of a mid-page prompt boundary; it never occupies a table
+        # slot (COW swaps an entry in place), but it must fit the pool or
+        # admission could wait forever on a demand no drain can satisfy
+        pool_worst = worst + (1 if self.prefix_cache and S % self.page_size
+                              and req.max_new_tokens > 1 else 0)
+        if worst > self.max_pages_per_slot or pool_worst > self.num_pages - 1:
             raise OutOfPages(
-                f"request {req.rid} needs {worst} pages; slot tables hold "
-                f"{self.max_pages_per_slot}, pool holds {self.num_pages - 1}")
+                f"request {req.rid} needs {worst} table / {pool_worst} pool "
+                f"pages; slot tables hold {self.max_pages_per_slot}, pool "
+                f"holds {self.num_pages - 1}")
         req.submitted_s = time.perf_counter()
         self.queue.append(req)
 
@@ -268,11 +327,21 @@ class PagedContinuousBatcher:
         return done
 
     def occupancy_bundle(self) -> TraceBundle:
-        """Page-granular Stage-II view: feed to explorer.sweep() unchanged."""
-        return TraceBundle(graph_name=f"{self.cfg.name}-paged-serve",
+        """Page-granular Stage-II view: feed to explorer.sweep() unchanged.
+
+        With `prefix_cache` the bundle carries the dual traces: "kv" is the
+        *physical* occupancy (unique referenced pages as needed, cached
+        pages as obsolete — what Stage II should gate against) and
+        "kv_logical" the per-slot demand sum a non-sharing allocator would
+        pin; their gap is the headroom sharing unlocked."""
+        traces = {"kv": self.ledger.trace}
+        name = f"{self.cfg.name}-paged-serve"
+        if self.prefix_cache:
+            traces["kv_logical"] = self.ledger.logical
+            name = f"{self.cfg.name}-prefix-serve"
+        return TraceBundle(graph_name=name,
                            total_time=max(self._sim_t, self.step_time_s),
-                           traces={"kv": self.ledger.trace},
-                           access=self.access)
+                           traces=traces, access=self.access)
 
     # ------------------------------------------------------------- internals
     def _available_pages(self) -> int:
@@ -294,6 +363,10 @@ class PagedContinuousBatcher:
     def _admit(self, done: List[Request]) -> None:
         for i in range(self.num_slots):
             if self.slots[i] is not None or not self.queue:
+                continue
+            if self.prefix_cache:
+                if not self._admit_prefix(i, done):
+                    break                  # FCFS: wait for pages to free up
                 continue
             req = self.queue[0]
             prompt_len = int(len(req.tokens))
@@ -320,20 +393,122 @@ class PagedContinuousBatcher:
 
             self._cache = self._write(self._cache, dense, i,
                                       jnp.asarray(pages, jnp.int32))
-            self.slots[i] = req
-            self._ctx[i] = prompt_len
-            self._next_tok[i] = tok
-            self._table[i, :] = 0
-            self._table[i, :npg] = pages
-            req.output.append(tok)
-            self.stats.admitted += 1
-            self.stats.prefills += 1
-            self.stats.peak_active_slots = max(
-                self.stats.peak_active_slots,
-                sum(s is not None for s in self.slots))
-            if (req.max_new_tokens <= 1
-                    or (req.eos_id is not None and tok == req.eos_id)):
-                self._retire(i, req, done, self._sim_t)
+            self._commit_admission(i, req, done, tok, logits, prompt_len,
+                                   pages)
+
+    def _commit_admission(self, i: int, req: Request, done: List[Request],
+                          tok: int, logits, ctx: int,
+                          table_pages: List[int]) -> None:
+        """Shared admission tail for the plain and prefix paths: host
+        mirrors, stats, the prefill-produced first token, and the immediate
+        retire when that token already satisfies the request."""
+        self.slots[i] = req
+        self._ctx[i] = ctx
+        self._next_tok[i] = tok
+        self._table[i, :] = 0
+        self._table[i, :len(table_pages)] = table_pages
+        req.output.append(tok)
+        if self.collect_logits:
+            req.logits.append(np.asarray(logits[0, -1]))
+        self.stats.admitted += 1
+        self.stats.prefills += 1
+        self.stats.peak_active_slots = max(
+            self.stats.peak_active_slots,
+            sum(s is not None for s in self.slots))
+        if (req.max_new_tokens <= 1
+                or (req.eos_id is not None and tok == req.eos_id)):
+            self._retire(i, req, done, self._sim_t)
+
+    def _admit_prefix(self, i: int, done: List[Request]) -> bool:
+        """Prefix-cache admission of the queue head into slot `i`.
+
+        Returns False when the pool (after LRU-evicting cached prefixes)
+        still cannot cover the request's worst-case *fresh* page demand —
+        FCFS then waits. The worst case reserves the pages the match did
+        not cover, plus one page for the deferred COW split of a
+        mid-page prompt boundary."""
+        req = self.queue[0]
+        prompt = np.asarray(req.tokens)
+        S = int(len(prompt))
+        ps = self.page_size
+        worst_total = pages_for(S + max(req.max_new_tokens - 1, 0), ps)
+        cow_extra = 1 if (S % ps and req.max_new_tokens > 1) else 0
+
+        def demand(match):
+            return worst_total - len(match.pages) + cow_extra
+
+        match = self.ledger.index.probe(prompt, limit=S - 1)
+        short = demand(match) - self._available_pages()
+        while short > 0:
+            freed = self.ledger.evict_for(short, self._sim_t)
+            if not freed:
+                return False
+            self.stats.evicted_pages += freed
+            # eviction may have dropped part of the matched path: re-probe
+            match = self.ledger.index.probe(prompt, limit=S - 1)
+            short = demand(match) - self._available_pages()
+        self.queue.popleft()
+
+        n_full, j = len(match.pages), match.tail_tokens
+        m = n_full * ps + j
+        npg_total = pages_for(S, ps)
+        fresh_n = npg_total - n_full
+
+        gather_ids = list(match.pages) + \
+            ([match.tail_page] if j else [])
+        prefix = self._gather(self._cache,
+                              jnp.asarray(gather_ids, jnp.int32), m)
+        head = prefix_tail_rows(prefix, j)
+        logits, suffix = self._prefill_shared(
+            self.params, jnp.asarray(prompt[None, m:], jnp.int32), prefix)
+        tok = int(jnp.argmax(logits[0, -1]))
+        self._sim_t += (S - m) * self.prefill_tok_s   # prefill skip: suffix only
+
+        fresh = self.ledger.admit(i, fresh_n, self._sim_t,
+                                  shared=match.pages)
+        self._reserved[i] = demand(match) - fresh_n
+        self.stats.pages_allocated += fresh_n
+        self.stats.peak_pages = max(self.stats.peak_pages,
+                                    self.ledger.allocator.n_allocated)
+        self.stats.admitted_kv_bytes += fresh_n * self.page_bytes
+        self.access.add_write("kv", (S - m) * self.row_bytes)
+        if m:
+            self.stats.prefix_hits += 1
+            self.stats.prefix_tokens_reused += m
+
+        self._cache = self._write_shared(
+            self._cache, suffix, head, jnp.int32(i),
+            jnp.asarray(match.pages, jnp.int32),
+            jnp.asarray(fresh, jnp.int32))
+        # cache this run for later requests (index refs its pages)
+        self.ledger.insert_run(prompt, self.ledger.slot_pages[i], self._sim_t)
+        self._commit_admission(i, req, done, tok, logits, S,
+                               self.ledger.slot_pages[i])
+        return True
+
+    def _cow_for_chunk(self, i: int, steps_i: int, t: float) -> None:
+        """Copy-on-write split every shared page this chunk will write.
+
+        Decode appends rows [ctx, ctx + steps_i); only the page holding the
+        prompt's mid-page boundary can be shared (with the prefix index, or
+        with slots that mapped the same run), so at most one split fires per
+        slot — but the scan is range-exact regardless. The reservation made
+        at admission covers the extra page, so `alloc` cannot fail."""
+        ps = self.page_size
+        ctx = int(self._ctx[i])
+        pages = self.ledger.slot_pages[i]
+        first, last = ctx // ps, (ctx + steps_i - 1) // ps
+        for idx in range(first, min(last + 1, len(pages))):
+            page = pages[idx]
+            if self.ledger.allocator.refcount(page) <= 1:
+                continue
+            new = self.ledger.cow(i, idx, t)
+            self._cache = self._copy(self._cache, jnp.int32(page),
+                                     jnp.int32(new))
+            self._table[i, idx] = new
+            self._reserved[i] -= 1
+            self.stats.cow_splits += 1
+            self.stats.pages_allocated += 1
 
     def _decode_chunk(self, done: List[Request]) -> None:
         live = [i for i, s in enumerate(self.slots) if s is not None]
@@ -355,6 +530,8 @@ class PagedContinuousBatcher:
                 self._reserved[i] -= len(new_pages)
                 self.stats.pages_allocated += len(new_pages)
                 self.stats.admitted_kv_bytes += len(new_pages) * self.page_bytes
+            if self.prefix_cache:
+                self._cow_for_chunk(i, steps_i, t0)
         self.stats.peak_pages = max(self.stats.peak_pages,
                                     self.ledger.allocator.n_allocated)
 
@@ -373,6 +550,10 @@ class PagedContinuousBatcher:
             jnp.asarray(remaining))
         self._cache = cache
         self.stats.chunks += 1
+        step_logits = None
+        if self.collect_logits:
+            emitted, step_logits = emitted
+            step_logits = np.asarray(step_logits)  # (steps, num_slots, V)
         emitted = np.asarray(emitted)                    # (steps, num_slots)
         self._next_tok = np.array(tok[:, 0])
         still_active = np.array(cache["active"])
@@ -384,6 +565,8 @@ class PagedContinuousBatcher:
             neg = np.nonzero(col < 0)[0]
             g = int(neg[0]) if len(neg) else len(col)
             req.output.extend(int(t) for t in col[:g])
+            if step_logits is not None:
+                req.logits.extend(step_logits[:g, i])
             self.stats.decode_steps += g
             # page-granular access accounting: each step streams the resident
             # pages and appends one row

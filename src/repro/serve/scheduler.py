@@ -83,6 +83,9 @@ class Request:
     eos_id: Optional[int] = None
     # filled by the scheduler
     output: List[int] = field(default_factory=list)
+    # per-token last-position logits, filled only by engines running with
+    # collect_logits=True (the bit-identity regressions compare these)
+    logits: List[np.ndarray] = field(default_factory=list)
     submitted_s: float = 0.0
     finished_s: float = 0.0
 
@@ -100,6 +103,9 @@ class SchedulerStats:
     peak_active_slots: int = 0
     admitted_kv_bytes: int = 0
     retired_kv_bytes: int = 0
+    # prefix-cache reuse (stays zero on engines without a prefix index)
+    prefix_hits: int = 0
+    prefix_tokens_reused: int = 0
 
 
 class ContinuousBatcher:

@@ -29,14 +29,20 @@ from repro.core.candidates import lower_bound_energies, make_grid
 from repro.core.explorer import DEFAULT_BANKS, MIB, min_capacity_mib  # noqa: F401 (re-exported)
 from repro.traffic.controller import ControllerComparison, ControllerConfig, \
     compare, compare_grid
-from repro.traffic.generators import LengthModel, generate
-from repro.traffic.occupancy import TrafficSim, simulate_traffic, \
-    utilization_summary
+from repro.traffic.generators import LengthModel, generate, generate_workload
+from repro.traffic.occupancy import TrafficSim, simulate_prefix_traffic, \
+    simulate_traffic, utilization_summary
 
 
 @dataclass(frozen=True)
 class Scenario:
-    """One cell of the campaign grid (arch x traffic point)."""
+    """One cell of the campaign grid (arch x traffic point).
+
+    `workload` selects a shared-prefix family ("chat_sysprompt", "fewshot",
+    "agentic_fanout") or "plain" for unstructured traffic. Shared workloads
+    run through the page-granular prefix-sharing simulator; the (C, B) grid
+    is then evaluated against *physical* occupancy — the logical trace
+    rides along in the sim bundle for headroom reporting."""
     arch: str
     arrival: str = "poisson"
     rate: float = 4.0
@@ -44,11 +50,16 @@ class Scenario:
     horizon_s: float = 30.0
     num_slots: int = 8
     max_len: int = 2048
+    workload: str = "plain"
+    prefix_len: int = 512
+    sharing: int = 8
+    page_size: int = 16
 
     @property
     def traffic_key(self) -> Tuple:
         """Scenarios sharing this key see byte-identical request streams."""
-        return (self.arrival, self.rate, self.seed, self.horizon_s)
+        return (self.arrival, self.rate, self.seed, self.horizon_s,
+                self.workload, self.prefix_len, self.sharing)
 
 
 @dataclass
@@ -161,10 +172,20 @@ def run_scenario(scn: Scenario, *, capacities_mib: Optional[Sequence[int]],
     pruned points — which cannot win under any policy — get no rows."""
     cfg = resolve_arch(scn.arch)
     lengths = lengths or LengthModel(max_len=scn.max_len)
-    reqs = generate(scn.arrival, scn.rate, scn.horizon_s, seed=scn.seed,
-                    lengths=lengths)
-    sim = simulate_traffic(cfg, reqs, num_slots=scn.num_slots,
-                           max_len=scn.max_len, fidelity=fidelity)
+    if scn.workload != "plain":
+        reqs = generate_workload(scn.workload, scn.rate, scn.horizon_s,
+                                 seed=scn.seed, lengths=lengths,
+                                 arrival=scn.arrival,
+                                 prefix_len=scn.prefix_len,
+                                 sharing=scn.sharing, fanout=scn.sharing)
+        sim = simulate_prefix_traffic(cfg, reqs, num_slots=scn.num_slots,
+                                      page_size=scn.page_size,
+                                      max_len=scn.max_len, seed=scn.seed)
+    else:
+        reqs = generate(scn.arrival, scn.rate, scn.horizon_s, seed=scn.seed,
+                        lengths=lengths)
+        sim = simulate_traffic(cfg, reqs, num_slots=scn.num_slots,
+                               max_len=scn.max_len, fidelity=fidelity)
     trace = sim.trace
     if resample_dt:
         trace = trace.resampled(resample_dt, sim.total_time)
@@ -222,7 +243,11 @@ def run_campaign(archs: Sequence[str], *, arrivals: Sequence[str] = ("poisson",)
                  fast_backend: str = "auto",
                  backend: str = "auto",
                  prune: bool = False,
-                 fidelity: str = "auto") -> CampaignReport:
+                 fidelity: str = "auto",
+                 workload: str = "plain",
+                 prefix_len: int = 512,
+                 sharing: int = 8,
+                 page_size: int = 16) -> CampaignReport:
     """The full grid. Identical (arrival, rate, seed) cells share one request
     stream across architectures, so MHA-vs-GQA rows are directly comparable."""
     ctrl = ctrl or ControllerConfig()
@@ -233,7 +258,9 @@ def run_campaign(archs: Sequence[str], *, arrivals: Sequence[str] = ("poisson",)
                 for arch in archs:
                     scn = Scenario(arch=arch, arrival=arrival, rate=rate,
                                    seed=seed, horizon_s=horizon_s,
-                                   num_slots=num_slots, max_len=max_len)
+                                   num_slots=num_slots, max_len=max_len,
+                                   workload=workload, prefix_len=prefix_len,
+                                   sharing=sharing, page_size=page_size)
                     sim, rows, fast = run_scenario(
                         scn, capacities_mib=capacities_mib, banks=banks,
                         ctrl=ctrl, lengths=lengths, resample_dt=resample_dt,

@@ -78,6 +78,90 @@ def build_golden() -> dict:
     return {name: case_payload(name) for name in sorted(CASES)}
 
 
+# ---------------------------------------------------------------------------
+# Shared-prefix serving golden (host-level, model-free and fully
+# deterministic: seeded workload -> radix index / COW ledger -> dual traces)
+# ---------------------------------------------------------------------------
+
+PREFIX_GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                                  "prefix_golden.json")
+
+PREFIX_CASES = {
+    "dsr1d-chat-sysprompt": dict(
+        arch="dsr1d-qwen-1.5b", workload="chat_sysprompt", rate=4.0,
+        horizon_s=8.0, seed=0, prefix_len=256, sharing=6, num_slots=4,
+        page_size=16, max_len=1024),
+    "gpt2-agentic-fanout": dict(
+        arch="gpt2-xl", workload="agentic_fanout", rate=4.0,
+        horizon_s=8.0, seed=1, prefix_len=256, sharing=4, num_slots=4,
+        page_size=16, max_len=1024),
+}
+
+
+def prefix_case_payload(name: str) -> dict:
+    from repro.traffic.generators import LengthModel, generate_workload
+    from repro.traffic.occupancy import simulate_prefix_traffic
+
+    spec = PREFIX_CASES[name]
+    cfg = get_arch(spec["arch"])
+    lengths = LengthModel(max_len=spec["max_len"])
+    reqs = generate_workload(spec["workload"], spec["rate"],
+                             spec["horizon_s"], seed=spec["seed"],
+                             lengths=lengths, prefix_len=spec["prefix_len"],
+                             sharing=spec["sharing"],
+                             fanout=spec["sharing"])
+    sim = simulate_prefix_traffic(cfg, reqs, num_slots=spec["num_slots"],
+                                  page_size=spec["page_size"],
+                                  max_len=spec["max_len"],
+                                  seed=spec["seed"])
+    st = sim.stats
+    mems = {}
+    for m, tr in sim.bundle.traces.items():
+        dur, needed, obsolete, _ = tr.segments(sim.total_time)
+        _, n_int, o_int = tr.as_arrays()
+        mems[m] = {
+            "n_events": tr.n_events,
+            "peak_needed": int(tr.peak_needed()),
+            "peak_total": int(tr.peak_total()),
+            # integrated state after the last event (the drain check: the
+            # final retire lands at total_time, so segments() filters its
+            # zero-duration row)
+            "final_needed": int(n_int[-1]) if len(n_int) else 0,
+            "final_obsolete": int(o_int[-1]) if len(o_int) else 0,
+            "durations": [float(d) for d in dur],
+            "needed": [int(v) for v in needed],
+            "obsolete": [int(v) for v in obsolete],
+        }
+    return {
+        "total_time": float(sim.total_time),
+        "n_requests": len(reqs),
+        "stats": {
+            "admitted": st.admitted, "finished": st.finished,
+            "decode_steps": st.decode_steps,
+            "prefix_hits": st.prefix_hits,
+            "prefix_tokens_reused": st.prefix_tokens_reused,
+            "cow_splits": st.cow_splits,
+            "evicted_pages": st.evicted_pages,
+        },
+        "access_reads": {k: int(v)
+                         for k, v in sorted(sim.bundle.access
+                                            .reads_bytes.items())},
+        "access_writes": {k: int(v)
+                          for k, v in sorted(sim.bundle.access
+                                             .writes_bytes.items())},
+        "mems": mems,
+    }
+
+
+def build_prefix_golden() -> dict:
+    return {name: prefix_case_payload(name) for name in sorted(PREFIX_CASES)}
+
+
+def load_prefix_golden() -> dict:
+    with open(PREFIX_GOLDEN_PATH) as f:
+        return json.load(f)
+
+
 def load_golden() -> dict:
     with open(GOLDEN_PATH) as f:
         return json.load(f)

@@ -79,6 +79,60 @@ def test_pss_probe_step_matches_golden(case, golden):
         assert [float(d) for d in dur] == want["durations"], m
 
 
+# ---------------------------------------------------------------------------
+# Shared-prefix serving golden: the dual logical/physical occupancy traces
+# of the prefix-sharing simulator are regression-locked (host-level, fully
+# deterministic: seeded workload -> radix index / COW ledger -> traces)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def prefix_golden():
+    assert os.path.exists(golden_util.PREFIX_GOLDEN_PATH), \
+        "missing fixtures: run PYTHONPATH=src python scripts/regen_golden.py"
+    data = golden_util.load_prefix_golden()
+    assert sorted(data) == sorted(golden_util.PREFIX_CASES)
+    return data
+
+
+@pytest.mark.parametrize("case", sorted(golden_util.PREFIX_CASES))
+def test_prefix_occupancy_matches_golden(case, prefix_golden):
+    got = golden_util.prefix_case_payload(case)
+    want = prefix_golden[case]
+    errs = []
+    for key in ("n_requests", "stats", "access_reads", "access_writes"):
+        if got[key] != want[key]:
+            errs.append(f"{key}: {got[key]!r} != {want[key]!r}")
+    if got["total_time"] != want["total_time"]:
+        errs.append(f"total_time: {got['total_time']!r} != "
+                    f"{want['total_time']!r}")
+    assert sorted(got["mems"]) == sorted(want["mems"]) == \
+        ["kv", "kv_logical"]
+    for m, w in want["mems"].items():
+        g = got["mems"][m]
+        for key in ("n_events", "peak_needed", "peak_total", "final_needed",
+                    "final_obsolete", "needed", "obsolete", "durations"):
+            if g[key] != w[key]:
+                errs.append(f"{m}.{key} mismatch")
+    assert not errs, "\n".join(
+        [f"{case} drifted from prefix golden — if intentional, regenerate "
+         f"with scripts/regen_golden.py:"] + errs)
+
+
+@pytest.mark.parametrize("case", sorted(golden_util.PREFIX_CASES))
+def test_prefix_golden_invariants(case, prefix_golden):
+    """Structural invariants of the frozen fixtures themselves: physical
+    needed <= logical everywhere, both drain to zero, sharing happened."""
+    want = prefix_golden[case]
+    phys = want["mems"]["kv"]
+    logi = want["mems"]["kv_logical"]
+    assert phys["peak_needed"] <= logi["peak_needed"]
+    assert phys["final_needed"] == 0 and logi["final_needed"] == 0
+    assert want["stats"]["prefix_hits"] > 0
+    assert want["stats"]["prefix_tokens_reused"] > 0
+    assert want["stats"]["cow_splits"] > 0
+    assert all(v >= 0 for v in phys["obsolete"])
+
+
 def test_fixture_case_coverage(golden):
     """Both paper workloads appear in both phases, and fixtures are sane."""
     phases = {(CASES[n]["arch"], CASES[n]["phase"]) for n in golden}

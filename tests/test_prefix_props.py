@@ -1,0 +1,286 @@
+"""Hypothesis property tests on the prefix-sharing allocator, radix index
+and dual-trace ledger (the host half of the prefix-reuse subsystem),
+mirroring test_paged_alloc_props.py."""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serve.paged import OutOfPages, pages_for  # noqa: E402
+from repro.serve.prefix import (RadixPrefixIndex,  # noqa: E402
+                                SharedKVLedger, SharedPageAllocator)
+
+PAGE_BYTES = 4096
+PS = 4                                   # page size [tokens] for index tests
+
+
+# ---------------------------------------------------------------------------
+# SharedPageAllocator: refcounts vs a shadow reference count
+# ---------------------------------------------------------------------------
+
+# op stream: +n = alloc n, 0 = retain a random live page, -k = release from
+# a random live handle batch
+ops_st = st.lists(st.integers(-6, 6), min_size=1, max_size=100)
+
+
+@given(st.integers(2, 48), ops_st, st.randoms(use_true_random=False))
+@settings(max_examples=80, deadline=None)
+def test_shared_allocator_refcounts(num_pages, ops, rnd):
+    """refcount == number of live references taken through the API; pages
+    free exactly when the last reference drops; pool conservation (free +
+    allocated == num_pages - 1) holds after every op."""
+    a = SharedPageAllocator(num_pages)
+    shadow = {}                           # page -> reference count
+    for op in ops:
+        live = sorted(shadow)
+        if op > 0:
+            try:
+                pages = a.alloc(op)
+            except OutOfPages:
+                assert op > a.n_free
+                continue
+            for p in pages:
+                assert p not in shadow          # no double allocation
+                assert p != 0                   # null page reserved
+                shadow[p] = 1
+        elif op == 0 and live:
+            p = live[rnd.randrange(len(live))]
+            a.retain([p])
+            shadow[p] += 1
+        elif op < 0 and live:
+            p = live[rnd.randrange(len(live))]
+            k = min(-op, shadow[p])
+            freed = a.release([p] * k)
+            shadow[p] -= k
+            if shadow[p] == 0:
+                assert freed == [p]             # freed at zero refs...
+                del shadow[p]
+            else:
+                assert freed == []              # ...and only at zero
+        for p, c in shadow.items():
+            assert a.refcount(p) == c
+        assert a.n_allocated == len(shadow)
+        assert a.n_free + a.n_allocated == num_pages - 1
+    # full drain restores the pool
+    for p, c in list(shadow.items()):
+        a.release([p] * c)
+    assert a.n_allocated == 0 and a.n_free == num_pages - 1
+
+
+def test_shared_allocator_rejects_foreign_retain_release():
+    a = SharedPageAllocator(8)
+    pages = a.alloc(2)
+    with pytest.raises(ValueError):
+        a.retain([0])
+    with pytest.raises(ValueError):
+        a.release([7 if 7 not in pages else 6])
+    a.release(pages)
+    with pytest.raises(ValueError):
+        a.release(pages)
+
+
+# ---------------------------------------------------------------------------
+# RadixPrefixIndex: token-exact cache contents + page-granular matching
+# ---------------------------------------------------------------------------
+
+runs_st = st.lists(
+    st.lists(st.integers(0, 3), min_size=1, max_size=4 * PS + 3),
+    min_size=1, max_size=12)
+
+
+def _fresh_index(num_pages=256):
+    alloc = SharedPageAllocator(num_pages)
+    return RadixPrefixIndex(PS, alloc), alloc
+
+
+@given(runs_st)
+@settings(max_examples=60, deadline=None)
+def test_index_preserves_inserted_token_runs(token_runs):
+    """Every root-to-leaf path of the index spells a prefix of some inserted
+    run (token-exact cache contents), and probing an inserted run matches
+    it back page-for-page."""
+    idx, alloc = _fresh_index()
+    inserted = []
+    for toks in token_runs:
+        toks = np.asarray(toks)
+        pages = alloc.alloc(pages_for(len(toks), PS))
+        idx.insert(toks, pages)
+        inserted.append([int(t) for t in toks])
+    for path in idx.runs():
+        assert any(run[:len(path)] == path for run in inserted), \
+            (path, inserted)
+    for run in inserted:
+        m = idx.probe(np.asarray(run))
+        matched = m.tokens(PS)
+        # the full run (or a sibling sharing its full length) is cached
+        assert matched == len(run)
+
+
+@given(runs_st, st.integers(0, 5))
+@settings(max_examples=60, deadline=None)
+def test_index_probe_is_longest_common_prefix(token_runs, salt):
+    """probe() == page-granular longest common prefix against the best
+    inserted run, never exceeding the probe limit."""
+    idx, alloc = _fresh_index()
+    inserted = []
+    for toks in token_runs[:-1]:
+        toks = np.asarray(toks)
+        idx.insert(toks, alloc.alloc(pages_for(len(toks), PS)))
+        inserted.append([int(t) for t in toks])
+    q = token_runs[-1] + [salt]
+    limit = max(len(q) - 1, 0)
+    m = idx.probe(np.asarray(q), limit=limit)
+    got = m.tokens(PS)
+    best = max((len(_lcp(run, q[:limit])) for run in inserted), default=0)
+    # full pages always match; the tail only when the boundary page exists
+    assert (best // PS) * PS <= got <= best
+    assert got <= limit
+
+
+def _lcp(a, b):
+    out = []
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        out.append(x)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SharedKVLedger: dual-trace invariants under random request streams
+# ---------------------------------------------------------------------------
+
+stream_st = st.lists(
+    st.tuples(st.integers(0, 3),                  # slot id
+              st.integers(1, 3 * PS + 2),         # prompt length [tokens]
+              st.integers(0, 2),                  # which shared vocabulary
+              st.integers(0, 2 * PS)),            # decode tokens
+    min_size=1, max_size=24)
+
+
+@given(stream_st)
+@settings(max_examples=50, deadline=None)
+def test_ledger_dual_trace_invariants(stream):
+    """Drive admission/decode/COW/retire through the ledger the way the
+    batcher does. At every step: physical needed <= logical, needed ==
+    unique slot-referenced pages, refcounts == table references + index
+    references, and everything drains when the last slot retires."""
+    led = SharedKVLedger(512, PAGE_BYTES, PS, num_slots=4,
+                        max_pages_per_slot=8)
+    t = 0.0
+    live = {}                                     # slot -> ctx
+    for slot, plen, vocab, dec in stream:
+        t += 1.0
+        if slot in live:
+            led.retire(slot, t)
+            del live[slot]
+            continue
+        toks = np.asarray([vocab] * plen)         # heavy sharing by design
+        match = led.index.probe(toks, limit=plen - 1)
+        fresh_n = pages_for(plen, PS) - len(match.pages)
+        led.admit(slot, fresh_n, t, shared=match.pages)
+        led.insert_run(toks, led.slot_pages[slot], t)
+        ctx = plen
+        for _ in range(dec):
+            t += 0.1
+            idx = ctx // PS
+            pages = led.slot_pages[slot]
+            if idx < len(pages):
+                if led.allocator.refcount(pages[idx]) > 1:
+                    led.cow(slot, idx, t)
+            else:
+                led.grow(slot, idx + 1, t)
+            ctx += 1
+        live[slot] = ctx
+        _check_ledger(led)
+    for slot in list(live):
+        t += 1.0
+        led.retire(slot, t)
+    _check_ledger(led)
+    # logical drains to zero; physical needed too (cache may stay obsolete)
+    _, n, o = led.trace.as_arrays()
+    _, ln, _ = led.logical.as_arrays()
+    assert int(n[-1]) == 0
+    assert int(ln[-1]) == 0
+    assert int(o[-1]) == led.allocator.n_allocated * PAGE_BYTES
+
+
+def _check_ledger(led):
+    sref = set()
+    logical = 0
+    table_refs = {}
+    for pages in led.slot_pages.values():
+        sref.update(pages)
+        logical += len(pages)
+        for p in pages:
+            table_refs[p] = table_refs.get(p, 0) + 1
+    index_pages = led.index.pages()
+    for p in set(list(table_refs) + index_pages):
+        assert led.allocator.refcount(p) == \
+            table_refs.get(p, 0) + index_pages.count(p), p
+    t, n, o = led.trace.as_arrays()
+    _, ln, _ = led.logical.as_arrays()
+    phys_needed = int(n[-1]) if len(n) else 0
+    assert phys_needed == len(sref) * PAGE_BYTES
+    assert phys_needed <= (int(ln[-1]) if len(ln) else 0)
+    assert (int(ln[-1]) if len(ln) else 0) == logical * PAGE_BYTES
+    assert (int(o[-1]) if len(o) else 0) == \
+        (led.allocator.n_allocated - len(sref)) * PAGE_BYTES
+    assert phys_needed % PAGE_BYTES == 0
+
+
+@given(stream_st, st.integers(1, 64))
+@settings(max_examples=50, deadline=None)
+def test_eviction_never_frees_referenced_pages(stream, want):
+    """LRU eviction frees only index-exclusive pages: every page a slot
+    references survives, and the freed count never exceeds the cache-only
+    population."""
+    led = SharedKVLedger(512, PAGE_BYTES, PS, num_slots=4,
+                        max_pages_per_slot=8)
+    t = 0.0
+    for slot, plen, vocab, _ in stream:
+        t += 1.0
+        if slot in led.slot_pages:
+            led.retire(slot, t)
+            continue
+        toks = np.asarray([vocab] * plen)
+        match = led.index.probe(toks, limit=plen - 1)
+        led.admit(slot, pages_for(plen, PS) - len(match.pages), t,
+                  shared=match.pages)
+        led.insert_run(toks, led.slot_pages[slot], t)
+    slot_refs = set()
+    for pages in led.slot_pages.values():
+        slot_refs.update(pages)
+    cache_only = led.allocator.n_allocated - len(slot_refs)
+    freed = led.evict_for(want, t + 1.0)
+    assert freed <= cache_only
+    for pages in led.slot_pages.values():
+        for p in pages:
+            assert led.allocator.refcount(p) >= 1   # still allocated
+    _check_ledger(led)
+
+
+def test_cow_requires_shared_page_and_preserves_cache():
+    """A COW split leaves the original page cached (token-exact for future
+    probes) while the slot gets a private copy."""
+    led = SharedKVLedger(64, PAGE_BYTES, PS, num_slots=2,
+                        max_pages_per_slot=8)
+    toks = np.asarray([7] * (PS + 2))              # partial last page
+    m0 = led.index.probe(toks, limit=len(toks) - 1)
+    led.admit(0, pages_for(len(toks), PS), 1.0, shared=m0.pages)
+    led.insert_run(toks, led.slot_pages[0], 1.0)
+    boundary = led.slot_pages[0][1]
+    assert led.allocator.refcount(boundary) == 2   # slot + index
+    new = led.cow(0, 1, 2.0)
+    assert new != boundary
+    assert led.allocator.refcount(boundary) == 1   # index keeps original
+    assert led.allocator.refcount(new) == 1
+    # the cached run still probes back token-exact
+    m1 = led.index.probe(toks, limit=len(toks) - 1)
+    assert m1.tokens(PS) == len(toks) - 1
+    assert m1.pages == [led.slot_pages[0][0]]
+    assert m1.tail_page == boundary
+    with pytest.raises(ValueError):
+        led.cow(0, 1, 3.0)                         # now private: no COW

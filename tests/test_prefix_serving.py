@@ -1,0 +1,198 @@
+"""Prefix-sharing serving path: bit-exact shared-prefix decode, COW splits,
+LRU eviction under pressure, dual logical/physical Stage-I traces."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.models import build_model
+from repro.serve import (BatchedServer, PagedContinuousBatcher, Request,
+                         ServeConfig)
+from repro.serve import paged as paged_mod
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = reduced(get_arch("tinyllama-1.1b"), layers=2)
+    m = build_model(cfg, compute_dtype=jnp.float32, remat="none")
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _batcher(m, params, **kw):
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("num_pages", 64)
+    kw.setdefault("max_pages_per_slot", 8)
+    kw.setdefault("chunk_steps", 4)
+    kw.setdefault("attn_backend", "ref")
+    kw.setdefault("prefix_cache", True)
+    return PagedContinuousBatcher(m, params, **kw)
+
+
+def _shared_prompts(cfg, seed=0):
+    """Ragged batch: three prompts sharing a 21-token prefix (mid-page for
+    page_size=8) plus one unshared prompt — the ragged-slot harness of
+    test_paged_serving, with sharing structure."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab_size, 21)
+    prompts = [np.concatenate([shared, rng.integers(0, cfg.vocab_size, k)])
+               for k in (9, 5, 13)]
+    prompts.append(rng.integers(0, cfg.vocab_size, 11))
+    return prompts, [7, 9, 6, 8]
+
+
+# ---------------------------------------------------------------------------
+# Exactness regression: a batch with shared prefixes is bit-identical to the
+# same requests decoded in isolation with no sharing
+# ---------------------------------------------------------------------------
+
+def test_shared_prefix_batch_is_bit_identical_to_isolated_decode(small):
+    cfg, m, params = small
+    prompts, new = _shared_prompts(cfg)
+
+    # isolation = a fresh batcher per request: the index is empty, so no
+    # sharing can occur, but the arithmetic (fixed-width suffix prefill,
+    # paged decode) is identical — the clean no-sharing reference
+    iso = []
+    for p, n in zip(prompts, new):
+        b = _batcher(m, params, collect_logits=True)
+        b.submit(Request(rid=0, tokens=p, max_new_tokens=n))
+        (r,) = b.run()
+        assert b.stats.prefix_hits == 0
+        iso.append(r)
+
+    cb = _batcher(m, params, collect_logits=True)
+    for i, (p, n) in enumerate(zip(prompts, new)):
+        cb.submit(Request(rid=i, tokens=p, max_new_tokens=n))
+    done = cb.run()
+    assert len(done) == 4
+    assert cb.stats.prefix_hits == 2              # two later shared prompts
+    assert cb.stats.prefix_tokens_reused > 0
+    for r in done:
+        ref = iso[r.rid]
+        np.testing.assert_array_equal(np.asarray(r.output),
+                                      np.asarray(ref.output))
+        np.testing.assert_array_equal(np.stack(r.logits),
+                                      np.stack(ref.logits))
+
+
+def test_shared_prefix_tokens_match_dense_reference(small):
+    """Greedy tokens also agree with the dense BatchedServer harness (the
+    PR-4 ragged-slot reference)."""
+    cfg, m, params = small
+    prompts, new = _shared_prompts(cfg)
+    srv = BatchedServer(m, params, ServeConfig(max_len=64))
+    refs = [np.asarray(srv.generate(
+        {"tokens": jnp.asarray(p[None, :], jnp.int32)},
+        max_new_tokens=n)["tokens"][0]) for p, n in zip(prompts, new)]
+    cb = _batcher(m, params)
+    for i, (p, n) in enumerate(zip(prompts, new)):
+        cb.submit(Request(rid=i, tokens=p, max_new_tokens=n))
+    done = cb.run()
+    for r in done:
+        np.testing.assert_array_equal(np.asarray(r.output), refs[r.rid])
+
+
+# ---------------------------------------------------------------------------
+# Sharing mechanics
+# ---------------------------------------------------------------------------
+
+def test_identical_prompts_share_pages_and_cow_split(small):
+    """Two identical prompts: the second reuses the cached run page-for-page
+    (suffix = 1 recomputed token + COW of the boundary page), and physical
+    occupancy stays below logical."""
+    cfg, m, params = small
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab_size, 30)   # mid-page boundary
+    cb = _batcher(m, params)
+    for i in range(2):
+        cb.submit(Request(rid=i, tokens=prompt, max_new_tokens=6))
+    done = cb.run()
+    assert len(done) == 2
+    np.testing.assert_array_equal(done[0].output, done[1].output)
+    assert cb.stats.prefix_hits == 1
+    # match is page-granular: 3 full pages of the 30-token prompt, plus the
+    # 5 valid rows of the cached partial page (29 of 30 tokens reused)
+    assert cb.stats.prefix_tokens_reused == 29
+    assert cb.stats.cow_splits >= 1
+    bundle = cb.occupancy_bundle()
+    phys, logi = bundle.traces["kv"], bundle.traces["kv_logical"]
+    assert phys.peak_needed() < logi.peak_needed()
+    assert phys.peak_needed() % cb.page_bytes == 0
+
+
+def test_retired_run_stays_cached_and_hits_later(small):
+    """The cache outlives the request: occupancy flips to obsolete at
+    retirement, and a later identical prompt still hits."""
+    cfg, m, params = small
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab_size, 24)
+    cb = _batcher(m, params, num_slots=1)
+    cb.submit(Request(rid=0, tokens=prompt, max_new_tokens=4))
+    cb.run()
+    t, n, o = cb.ledger.trace.as_arrays()
+    assert int(n[-1]) == 0                         # no slot references...
+    assert int(o[-1]) > 0                          # ...but the cache holds
+    cb.submit(Request(rid=1, tokens=prompt, max_new_tokens=4))
+    (r1,) = cb.run()
+    assert cb.stats.prefix_hits == 1
+    assert cb.stats.prefix_tokens_reused == 23     # 24-token prompt, S-1 cap
+
+
+def test_eviction_under_page_pressure(small):
+    """Distinct prompts through a pool that cannot hold every cached run:
+    LRU leaves are evicted, requests still complete, nothing referenced is
+    freed (the run would crash on a corrupted table otherwise)."""
+    cfg, m, params = small
+    cb = _batcher(m, params, num_slots=1, num_pages=12, max_pages_per_slot=8)
+    rng = np.random.default_rng(3)
+    for i in range(5):
+        cb.submit(Request(rid=i, tokens=rng.integers(0, cfg.vocab_size, 25),
+                          max_new_tokens=5))
+    done = cb.run()
+    assert len(done) == 5
+    assert cb.stats.evicted_pages > 0
+    assert cb.ledger.allocator.n_allocated <= cb.num_pages - 1
+
+
+def test_prefix_trace_feeds_stage2_unchanged(small):
+    """The physical-occupancy TraceBundle is consumed by the Stage-II sweep
+    with no adaptation; the logical trace rides along."""
+    cfg, m, params = small
+    prompts, new = _shared_prompts(cfg, seed=4)
+    cb = _batcher(m, params)
+    for i, (p, n) in enumerate(zip(prompts, new)):
+        cb.submit(Request(rid=i, tokens=p, max_new_tokens=n))
+    cb.run()
+    bundle = cb.occupancy_bundle()
+    from repro.core.explorer import sweep
+    tbl = sweep(bundle, mem_name="kv", capacities_mib=[16], banks=[1, 4])
+    assert len(tbl.rows) == 2
+    assert tbl.best().result.e_total > 0
+    # integrals: physical needed <= logical everywhere
+    phys = bundle.traces["kv"].time_integral(bundle.total_time, use="needed")
+    logi = bundle.traces["kv_logical"].time_integral(bundle.total_time,
+                                                     use="needed")
+    assert phys <= logi
+
+
+def test_chunk_loop_still_compiles_once_with_prefix_cache(small):
+    cfg, m, params = small
+    cb = _batcher(m, params)
+    prompts, new = _shared_prompts(cfg, seed=5)
+    for i, (p, n) in enumerate(zip(prompts, new)):
+        cb.submit(Request(rid=i, tokens=p, max_new_tokens=n))
+    n0 = paged_mod.loop_compile_count()
+    done = cb.run()
+    assert len(done) == 4
+    assert cb.stats.chunks > 1
+    assert paged_mod.loop_compile_count() - n0 == 1
+
+
+def test_prefix_cache_rejects_non_full_stacks():
+    cfg = reduced(get_arch("recurrentgemma-2b"))
+    m = build_model(cfg, compute_dtype=jnp.float32, remat="none")
+    with pytest.raises(NotImplementedError):
+        PagedContinuousBatcher(m, None, prefix_cache=True)
