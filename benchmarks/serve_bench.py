@@ -33,6 +33,7 @@ from repro.serve.paged import pages_for
 
 DEFAULT_OUT = "BENCH_serve.json"
 SPEEDUP_BAR = 5.0
+TELEMETRY_OVERHEAD_BAR_PCT = 3.0
 
 
 def _legacy_decode_tok_s(model, params, prompts: np.ndarray,
@@ -69,15 +70,17 @@ def _legacy_decode_tok_s(model, params, prompts: np.ndarray,
     return (n_new - 1) * prompts.shape[0] / dt
 
 
-def _paged_decode_tok_s(model, params, prompts: np.ndarray, n_new: int,
-                        page_size: int, chunk_steps: int) -> tuple:
-    """Decode tokens/s through the paged chunk loop (prefills untimed)."""
+def _paged_run_fn(model, params, prompts: np.ndarray, n_new: int,
+                  page_size: int, chunk_steps: int, telemetry=None):
+    """(timed-run closure, batcher) for the paged chunk loop; one call
+    decodes every slot to completion and returns the decode seconds
+    (prefills untimed)."""
     B, S = prompts.shape
     worst = pages_for(S + n_new, page_size)
     cb = PagedContinuousBatcher(
         model, params, num_slots=B, page_size=page_size,
         num_pages=B * worst + 8, max_pages_per_slot=worst + 1,
-        chunk_steps=chunk_steps, attn_backend="ref")
+        chunk_steps=chunk_steps, attn_backend="ref", telemetry=telemetry)
 
     def run():
         for i in range(B):
@@ -92,9 +95,18 @@ def _paged_decode_tok_s(model, params, prompts: np.ndarray, n_new: int,
         assert len(done) == B
         return dt
 
+    return run, cb
+
+
+def _paged_decode_tok_s(model, params, prompts: np.ndarray, n_new: int,
+                        page_size: int, chunk_steps: int,
+                        telemetry=None) -> tuple:
+    """Decode tokens/s through the paged chunk loop (prefills untimed)."""
+    run, cb = _paged_run_fn(model, params, prompts, n_new, page_size,
+                            chunk_steps, telemetry)
     run()                                        # warm compile
     dt = min(run() for _ in range(3))
-    return (n_new - 1) * B / dt, cb
+    return (n_new - 1) * prompts.shape[0] / dt, cb
 
 
 def _kernel_exactness() -> float:
@@ -135,6 +147,29 @@ def bench_serve(out_path: str = DEFAULT_OUT):
                                           page_size=16, chunk_steps=64)
     speedup = paged_tok_s / base_tok_s
 
+    # telemetry-overhead guard: a fully-enabled registry (metrics + spans +
+    # per-request SLO timelines) must not cost more than 3% decode
+    # throughput vs the disabled default. Legs are interleaved with the
+    # order alternated each round (whichever leg runs first in a pair is
+    # systematically faster on a busy host) and min-taken, so scheduler
+    # noise and position bias cancel instead of reading as overhead.
+    from repro.obs import Telemetry
+    run_off, _ = _paged_run_fn(model, params, prompts, n_new,
+                               page_size=16, chunk_steps=64)
+    run_on, _ = _paged_run_fn(model, params, prompts, n_new,
+                              page_size=16, chunk_steps=64,
+                              telemetry=Telemetry(enabled=True))
+    run_off(), run_on()                          # warm both
+    offs, ons = [], []
+    for k in range(16):
+        if k % 2:
+            ons.append(run_on()), offs.append(run_off())
+        else:
+            offs.append(run_off()), ons.append(run_on())
+    dt_off, dt_on = min(offs), min(ons)
+    tel_tok_s = (n_new - 1) * B / dt_on
+    overhead_pct = max(0.0, (dt_on - dt_off) / dt_off * 100.0)
+
     report = {
         "config": f"{cfg.name} ({cfg.num_layers} layers)",
         "slots": B,
@@ -145,6 +180,8 @@ def bench_serve(out_path: str = DEFAULT_OUT):
         "kernel_max_abs_err": err,
         "baseline_tok_s": base_tok_s,
         "paged_tok_s": paged_tok_s,
+        "paged_tok_s_telemetry": tel_tok_s,
+        "telemetry_overhead_pct": overhead_pct,
         "speedup": speedup,
         "pages_peak": cb.stats.peak_pages,
         "note": ("baseline = pre-PR per-token host loop (one decode_step "
@@ -154,6 +191,9 @@ def bench_serve(out_path: str = DEFAULT_OUT):
     assert speedup >= SPEEDUP_BAR, (
         f"paged decode {speedup:.2f}x over per-token loop, bar is "
         f"{SPEEDUP_BAR}x")
+    assert overhead_pct <= TELEMETRY_OVERHEAD_BAR_PCT, (
+        f"enabled telemetry costs {overhead_pct:.2f}% decode throughput, "
+        f"bar is {TELEMETRY_OVERHEAD_BAR_PCT}%")
     with open(out_path, "w") as f:
         json.dump(report, f, indent=1)
     return report

@@ -73,6 +73,23 @@ PYTHONPATH=src timeout 120 python examples/prefix_serving.py \
 grep -q "prefix" /tmp/prefix_smoke.out
 grep -q "physical" /tmp/prefix_smoke.out
 
+# observability smoke: telemetry-enabled paged serve exported as a
+# Perfetto-loadable Chrome trace with SLO percentiles in otherData
+PYTHONPATH=src timeout 120 python -m repro.launch.obs export \
+    --arch dsr1d_qwen_1_5b --requests 4 --new-tokens 8 --slots 2 \
+    --out /tmp/obs_trace.json > /tmp/obs_smoke.out
+grep -q "ui.perfetto.dev" /tmp/obs_smoke.out
+python - <<'EOF'
+import json, math
+obj = json.load(open("/tmp/obs_trace.json"))
+evs = obj["traceEvents"]
+assert evs, "empty traceEvents"
+assert any(e["ph"] == "C" for e in evs), "no counter track"
+assert any(e["ph"] == "X" and e["name"] == "request" for e in evs)
+slo = obj["otherData"]["slo"]
+assert math.isfinite(slo["ttft_p99_s"]) and slo["ttft_p99_s"] > 0
+EOF
+
 # shared-prefix workload campaign through the traffic CLI (host-only sim;
 # fan-out = concurrent copies of one prefix, the strongest sharing signal)
 PYTHONPATH=src timeout 120 python -m repro.launch.traffic \

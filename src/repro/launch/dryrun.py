@@ -183,10 +183,10 @@ def lower_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
     chips = mesh.size
 
     # ---- 1) the real artifact: full model, scanned layers ------------------
-    t0 = time.time()
+    t0 = time.perf_counter()
     compiled = _compile_step(cfg, shape, mesh, remat=remat, unroll=False,
                              donate=donate, microbatches=microbatches)
-    cell["compile_s"] = round(time.time() - t0, 1)
+    cell["compile_s"] = round(time.perf_counter() - t0, 1)
 
     peak = {}
     try:
@@ -209,7 +209,7 @@ def lower_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
     # extrapolate linearly in depth — exact for the homogeneous layer stack,
     # and cheap enough to run for every cell.
     if probe_costs:
-        t1 = time.time()
+        t1 = time.perf_counter()
         c1 = _cost_terms(_compile_step(_probe_cfg(cfg, 1), shape, mesh,
                                        remat=remat, unroll=True,
                                        donate=donate,
@@ -218,7 +218,7 @@ def lower_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
                                        remat=remat, unroll=True,
                                        donate=donate,
                                        microbatches=microbatches))
-        cell["probe_s"] = round(time.time() - t1, 1)
+        cell["probe_s"] = round(time.perf_counter() - t1, 1)
         n_groups = cfg.num_layers / len(cfg.block_pattern)
         if cfg.is_encdec:
             n_groups = cfg.num_layers  # enc+dec scale together in the probes

@@ -1,0 +1,109 @@
+"""Observability CLI: run a small paged serve, report metrics or export a
+Perfetto timeline.
+
+Drives `PagedContinuousBatcher` with an enabled `Telemetry` registry over a
+seeded shared-prefix workload, then either prints the registry + SLO
+percentiles (`report`) or writes a Chrome-trace-event JSON (`export`) that
+ui.perfetto.dev / chrome://tracing load directly — request lifecycle spans,
+per-slot prefill lanes, decode chunks and the KV-occupancy counter track
+all on the batcher's one logical timeline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.obs report --arch dsr1d_qwen_1_5b
+    PYTHONPATH=src python -m repro.launch.obs export --arch dsr1d_qwen_1_5b \
+        --requests 4 --new-tokens 8 --slots 2 --out obs_trace.json
+"""
+from __future__ import annotations
+
+import argparse
+from dataclasses import asdict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import reduced, resolve_arch
+from repro.models import build_model
+from repro.obs import Telemetry, export_chrome_trace
+from repro.serve import PagedContinuousBatcher, Request
+from repro.traffic.generators import (LengthModel, generate_workload,
+                                      materialize_tokens)
+
+
+def run_serve(args) -> tuple:
+    """One telemetry-enabled paged serve; returns (tel, batcher, done)."""
+    cfg = reduced(resolve_arch(args.arch), layers=args.layers)
+    model = build_model(cfg, compute_dtype=jnp.float32, remat="none")
+    params = model.init(jax.random.PRNGKey(0))
+
+    lengths = LengthModel(prompt_mean=16.0, prompt_sigma=0.4,
+                          output_mean=args.new_tokens, max_len=96)
+    specs = generate_workload("chat_sysprompt", rate=4.0,
+                              horizon_s=float(args.requests), seed=args.seed,
+                              lengths=lengths, prefix_len=args.prefix_len,
+                              sharing=args.sharing)[:args.requests]
+    tokens = materialize_tokens(specs, cfg.vocab_size, seed=args.seed)
+
+    tel = Telemetry(enabled=True)        # spans on; clock -> batcher sim time
+    cb = PagedContinuousBatcher(
+        model, params, num_slots=args.slots, page_size=args.page_size,
+        num_pages=args.num_pages, chunk_steps=args.chunk_steps,
+        attn_backend="ref", prefix_cache=args.prefix, telemetry=tel)
+    for s, toks in zip(specs, tokens):
+        cb.submit(Request(rid=s.rid, tokens=np.asarray(toks),
+                          max_new_tokens=max(s.output_len, 2)))
+    done = cb.run()
+    return tel, cb, done
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    for name in ("report", "export"):
+        p = sub.add_parser(name)
+        p.add_argument("--arch", default="dsr1d_qwen_1_5b")
+        p.add_argument("--layers", type=int, default=2,
+                       help="reduced-config layer count (CPU-sized)")
+        p.add_argument("--requests", type=int, default=8)
+        p.add_argument("--new-tokens", type=int, default=8)
+        p.add_argument("--slots", type=int, default=2)
+        p.add_argument("--page-size", type=int, default=8)
+        p.add_argument("--num-pages", type=int, default=64)
+        p.add_argument("--chunk-steps", type=int, default=4)
+        p.add_argument("--prefix", action="store_true",
+                       help="enable the prefix cache (adds COW/eviction "
+                            "spans and the dual kv_logical track)")
+        p.add_argument("--prefix-len", type=int, default=24)
+        p.add_argument("--sharing", type=int, default=4)
+        p.add_argument("--seed", type=int, default=0)
+        if name == "export":
+            p.add_argument("--out", default="obs_trace.json")
+    args = ap.parse_args()
+
+    tel, cb, done = run_serve(args)
+    summary = cb.slo_summary()
+    print(f"served {len(done)} requests on {args.slots} slots "
+          f"({cb.stats.chunks} chunks, {cb.stats.decode_steps} decode steps)")
+
+    if args.cmd == "report":
+        print()
+        print(tel.format())
+        print()
+        print(summary.format())
+        return
+
+    bundle = cb.occupancy_bundle()
+    export_chrome_trace(args.out, tel, traces=bundle.traces.values(),
+                        end_time=bundle.total_time,
+                        other_data={"slo": asdict(summary),
+                                    "counters": tel.snapshot()["counters"]})
+    print(f"wrote {args.out} ({len(tel.spans)} spans, "
+          f"{len(bundle.traces)} counter tracks) — load it at "
+          f"ui.perfetto.dev or chrome://tracing")
+    print(f"ttft p99 = {summary.ttft_p99_s:.4f}s, "
+          f"tbt p99 = {summary.tbt_p99_s:.4f}s over "
+          f"{summary.n_requests} requests")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Unified telemetry: metrics registry, spans, SLOs, Perfetto export."""
+from repro.obs.perfetto import (chrome_trace_events, counter_integral,
+                                export_chrome_trace)
+from repro.obs.slo import (RequestTimeline, SLOSummary, SLOTracker,
+                           percentile_summary, summarize_histograms)
+from repro.obs.telemetry import (DEFAULT_BUCKETS, LATENCY_BUCKETS, Counter,
+                                 Gauge, Histogram, Span, Telemetry,
+                                 default_registry, log_bucket_edges,
+                                 noop_registry)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Span", "Telemetry",
+    "DEFAULT_BUCKETS", "LATENCY_BUCKETS", "log_bucket_edges",
+    "default_registry", "noop_registry",
+    "RequestTimeline", "SLOSummary", "SLOTracker",
+    "percentile_summary", "summarize_histograms",
+    "chrome_trace_events", "counter_integral", "export_chrome_trace",
+]

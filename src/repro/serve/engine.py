@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.telemetry import default_registry, noop_registry
+
 
 @dataclass
 class ServeConfig:
@@ -32,6 +34,10 @@ class ServeStats:
     prefill_s: float = 0.0
     decode_s: float = 0.0
     tokens_generated: int = 0
+    # serving SLOs of the lockstep batch: every sequence sees its first
+    # token at prefill end and one token per scan step after that
+    ttft_s: float = 0.0
+    tbt_s: float = 0.0
 
     @property
     def decode_tokens_per_s(self) -> float:
@@ -47,8 +53,9 @@ def _sample(temperature: float, logits: jax.Array, rng: jax.Array) -> jax.Array:
 
 
 # traced once per XLA compilation — tests assert repeated generate() calls
-# with stable shapes never re-trace the decode loop
-LOOP_COMPILES = [0]
+# with stable shapes never re-trace the decode loop; the count lives on the
+# process-wide telemetry registry (loop_compile_count() is the shim view)
+_COMPILES = default_registry().counter("serve.engine.loop_compiles")
 
 
 def _generate_loop(model, temperature: float, collect_logits: bool,
@@ -58,7 +65,7 @@ def _generate_loop(model, temperature: float, collect_logits: bool,
     Returns the emitted tokens (steps, B) — plus each step's last-position
     logits (steps, B, V) when `collect_logits` — the donated cache is
     consumed."""
-    LOOP_COMPILES[0] += 1
+    _COMPILES.inc()
 
     def step(carry, _):
         cache, tok, rng = carry
@@ -75,11 +82,13 @@ def _generate_loop(model, temperature: float, collect_logits: bool,
 
 class BatchedServer:
     def __init__(self, model, params, cfg: ServeConfig,
-                 collect_logits: bool = False):
+                 collect_logits: bool = False, telemetry=None):
         self.model = model
         self.params = params
         self.cfg = cfg
         self.collect_logits = collect_logits
+        # wall-clock spans (this engine has no logical sim clock)
+        self.tel = telemetry if telemetry is not None else noop_registry()
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, cache_len=cfg.max_len))
         # static `steps`, donated cache: one compile per generation length,
@@ -102,8 +111,9 @@ class BatchedServer:
         stats = ServeStats()
 
         t0 = time.perf_counter()
-        logits, cache = self._prefill(self.params, batch)
-        logits.block_until_ready()
+        with self.tel.span("prefill", tokens=int(batch["tokens"].shape[1])):
+            logits, cache = self._prefill(self.params, batch)
+            logits.block_until_ready()
         stats.prefill_s = time.perf_counter() - t0
 
         rng, k = jax.random.split(rng)
@@ -111,20 +121,26 @@ class BatchedServer:
         first = np.asarray(tok)
         first_logits = (np.asarray(logits[:, -1, :])
                         if self.collect_logits else None)
+        stats.ttft_s = time.perf_counter() - t0
 
         t0 = time.perf_counter()
         step_logits = None
         if n_new > 1:
-            toks = self._loop(n_new - 1, self.params, cache, tok, rng)
-            if self.collect_logits:
-                toks, step_logits = toks
-                step_logits = np.asarray(step_logits)       # (steps, B, V)
-            toks.block_until_ready()
+            with self.tel.span("decode", steps=n_new - 1):
+                toks = self._loop(n_new - 1, self.params, cache, tok, rng)
+                if self.collect_logits:
+                    toks, step_logits = toks
+                    step_logits = np.asarray(step_logits)   # (steps, B, V)
+                toks.block_until_ready()
             rest = np.asarray(toks).T                       # (B, steps)
         else:
             rest = np.zeros((first.shape[0], 0), first.dtype)
         stats.decode_s = time.perf_counter() - t0
         stats.tokens_generated = n_new * first.shape[0]
+        stats.tbt_s = stats.decode_s / (n_new - 1) if n_new > 1 else 0.0
+        self.tel.counter("serve.engine.generate_calls").inc()
+        self.tel.counter("serve.engine.tokens_generated").inc(
+            stats.tokens_generated)
         out = {"tokens": np.concatenate([first, rest], axis=1),
                "stats": stats}
         if self.collect_logits:
@@ -136,5 +152,7 @@ class BatchedServer:
 
 
 def loop_compile_count() -> int:
-    """Process-wide compile count of the BatchedServer decode loop."""
-    return LOOP_COMPILES[0]
+    """Process-wide compile count of the BatchedServer decode loop —
+    compatibility shim over the `serve.engine.loop_compiles` registry
+    counter (the old module-global it replaced)."""
+    return int(_COMPILES.value)

@@ -32,6 +32,8 @@ import numpy as np
 
 from repro.models.transformer import (init_paged_cache, prefix_tail_rows,
                                       write_prefill_to_pages)
+from repro.obs.slo import RequestTimeline, SLOSummary, SLOTracker
+from repro.obs.telemetry import default_registry, noop_registry
 from repro.serve.scheduler import Request, SchedulerStats
 from repro.sim.trace import AccessStats, OccupancyTrace, TraceBundle
 
@@ -136,8 +138,9 @@ class PagedKVLedger:
 # ---------------------------------------------------------------------------
 
 # traced once per XLA compilation of the chunk loop — tests assert the
-# continuous batcher never recompiles it across chunks/admissions
-LOOP_COMPILES = [0]
+# continuous batcher never recompiles it across chunks/admissions; counted
+# on the process-wide registry (loop_compile_count() is the shim view)
+_COMPILES = default_registry().counter("serve.paged.loop_compiles")
 
 
 def _decode_loop(model, steps: int, attn_backend: str, collect_logits: bool,
@@ -147,7 +150,7 @@ def _decode_loop(model, steps: int, attn_backend: str, collect_logits: bool,
     cache's `active` mask; inactive lanes emit -1 and stop advancing. With
     `collect_logits` the scan additionally emits every step's last-position
     logits (exactness debugging / the bit-identity regression)."""
-    LOOP_COMPILES[0] += 1
+    _COMPILES.inc()
 
     def step(carry, _):
         cache, tok, remaining = carry
@@ -225,7 +228,8 @@ class PagedContinuousBatcher:
                  max_pages_per_slot: Optional[int] = None,
                  chunk_steps: int = 16, attn_backend: str = "auto",
                  step_time_s: float = 1e-3, prefill_tok_s: float = 5e-5,
-                 prefix_cache: bool = False, collect_logits: bool = False):
+                 prefix_cache: bool = False, collect_logits: bool = False,
+                 telemetry=None):
         if not hasattr(model, "decode_step_paged"):
             raise TypeError("model lacks a paged decode path")
         self.model = model
@@ -242,6 +246,30 @@ class PagedContinuousBatcher:
         self.prefix_cache = prefix_cache
         self.collect_logits = collect_logits
 
+        # spans and SLOs record on the batcher's logical sim clock — the
+        # time base the ledger's occupancy trace uses — so a passed-in
+        # registry has its clock re-pointed here: the Perfetto export then
+        # shows request spans and the KV counter track on one timeline
+        self.tel = telemetry if telemetry is not None else noop_registry()
+        if telemetry is not None:
+            telemetry.clock = lambda: self._sim_t
+        tel = self.tel
+        self._slo = (SLOTracker(tel, "serve.paged") if tel.enabled else None)
+        self._c_admitted = tel.counter("serve.paged.admitted")
+        self._c_retired = tel.counter("serve.paged.retired")
+        self._c_prefills = tel.counter("serve.paged.prefills")
+        self._c_chunks = tel.counter("serve.paged.chunks")
+        self._c_steps = tel.counter("serve.paged.decode_steps")
+        self._c_alloc = tel.counter("serve.paged.pages_allocated")
+        self._c_freed = tel.counter("serve.paged.pages_freed")
+        self._c_evicted = tel.counter("serve.paged.pages_evicted")
+        self._c_cow = tel.counter("serve.paged.cow_splits")
+        self._c_hits = tel.counter("serve.paged.prefix_hits")
+        self._c_miss = tel.counter("serve.paged.prefix_misses")
+        self._c_reused = tel.counter("serve.paged.prefix_tokens_reused")
+        self._c_wait = tel.counter("serve.paged.backpressure_waits")
+        self._g_pages = tel.gauge("serve.paged.pages_in_use")
+
         kv_bytes = jnp.dtype(model.compute_dtype).itemsize
         self.page_bytes = page_bytes(self.cfg, page_size, kv_bytes)
         self.row_bytes = self.page_bytes // page_size
@@ -250,7 +278,8 @@ class PagedContinuousBatcher:
             self.ledger = SharedKVLedger(
                 num_pages, self.page_bytes, page_size,
                 num_slots=num_slots,
-                max_pages_per_slot=self.max_pages_per_slot)
+                max_pages_per_slot=self.max_pages_per_slot,
+                telemetry=tel)
         else:
             self.ledger = PagedKVLedger(num_pages, self.page_bytes)
         self.access = AccessStats()
@@ -315,6 +344,8 @@ class PagedContinuousBatcher:
                 f"pages; slot tables hold {self.max_pages_per_slot}, pool "
                 f"holds {self.num_pages - 1}")
         req.submitted_s = time.perf_counter()
+        if self.tel.enabled:
+            req.timeline = RequestTimeline(rid=req.rid, submit_t=self._sim_t)
         self.queue.append(req)
 
     def run(self, max_chunks: int = 10_000) -> List[Request]:
@@ -324,7 +355,23 @@ class PagedContinuousBatcher:
                 break
             self._admit(done)
             self._decode_chunk(done)
+        if self._slo is not None:
+            self.slo_summary()           # refresh stats percentiles once
         return done
+
+    def slo_summary(self) -> SLOSummary:
+        """Percentile view of per-request TTFT / TBT / e2e on the sim clock
+        (zeros when the batcher runs without an enabled registry). Quantiles
+        are computed here, at read time — never inside the decode loop, so
+        enabled telemetry stays off the serving hot path."""
+        if self._slo is None:
+            return SLOSummary()
+        s = self._slo.summary()
+        st = self.stats
+        st.ttft_p50_s, st.ttft_p99_s = s.ttft_p50_s, s.ttft_p99_s
+        st.tbt_p50_s, st.tbt_p99_s = s.tbt_p50_s, s.tbt_p99_s
+        st.e2e_p50_s, st.e2e_p99_s = s.e2e_p50_s, s.e2e_p99_s
+        return s
 
     def occupancy_bundle(self) -> TraceBundle:
         """Page-granular Stage-II view: feed to explorer.sweep() unchanged.
@@ -359,6 +406,18 @@ class PagedContinuousBatcher:
         self._reserved[i] = 0
         self._ctx[i] = 0
         self._table[i, :] = 0
+        self._c_retired.inc()
+        self._c_freed.inc(n)
+        self._g_pages.set(self.ledger.allocator.n_allocated)
+        tl = req.timeline
+        if tl is not None and self._slo is not None:
+            tl.finish_t = t
+            self._slo.observe(tl)
+            self.tel.add_span("request", tl.submit_t, t, rid=req.rid,
+                              tokens=len(req.output))
+            if np.isfinite(tl.first_token_t) and t > tl.first_token_t:
+                self.tel.add_span("decode", tl.first_token_t, t, slot=i,
+                                  rid=req.rid)
 
     def _admit(self, done: List[Request]) -> None:
         for i in range(self.num_slots):
@@ -373,9 +432,11 @@ class PagedContinuousBatcher:
             worst = pages_for(prompt_len + max(req.max_new_tokens - 1, 0),
                               self.page_size)
             if worst > self._available_pages():
+                self._c_wait.inc()
                 break                      # FCFS: wait for pages to free up
             self.queue.popleft()
             npg = pages_for(prompt_len, self.page_size)
+            t_pre = self._sim_t
 
             batch = {"tokens": jnp.asarray(np.asarray(req.tokens)[None, :],
                                            jnp.int32)}
@@ -390,19 +451,32 @@ class PagedContinuousBatcher:
                                         self.ledger.allocator.n_allocated)
             self.stats.admitted_kv_bytes += npg * self.page_bytes
             self.access.add_write("kv", prompt_len * self.row_bytes)
+            self._c_alloc.inc(npg)
 
             self._cache = self._write(self._cache, dense, i,
                                       jnp.asarray(pages, jnp.int32))
             self._commit_admission(i, req, done, tok, logits, prompt_len,
-                                   pages)
+                                   pages, t_pre)
 
     def _commit_admission(self, i: int, req: Request, done: List[Request],
                           tok: int, logits, ctx: int,
-                          table_pages: List[int]) -> None:
+                          table_pages: List[int], t_pre: float) -> None:
         """Shared admission tail for the plain and prefix paths: host
         mirrors, stats, the prefill-produced first token, and the immediate
-        retire when that token already satisfies the request."""
+        retire when that token already satisfies the request. `t_pre` is
+        the sim time before the prefill advance (the span start)."""
         self.slots[i] = req
+        self._c_admitted.inc()
+        self._c_prefills.inc()
+        self._g_pages.set(self.ledger.allocator.n_allocated)
+        if self.tel.enabled:
+            self.tel.add_span("prefill", t_pre, self._sim_t, slot=i,
+                              rid=req.rid, tokens=ctx)
+            tl = req.timeline
+            if tl is not None:
+                tl.admit_t = t_pre
+                tl.first_token_t = self._sim_t
+                tl.token_ts.append(self._sim_t)
         self._ctx[i] = ctx
         self._next_tok[i] = tok
         self._table[i, :] = 0
@@ -442,8 +516,10 @@ class PagedContinuousBatcher:
         while short > 0:
             freed = self.ledger.evict_for(short, self._sim_t)
             if not freed:
+                self._c_wait.inc()
                 return False
             self.stats.evicted_pages += freed
+            self._c_evicted.inc(freed)
             # eviction may have dropped part of the matched path: re-probe
             match = self.ledger.index.probe(prompt, limit=S - 1)
             short = demand(match) - self._available_pages()
@@ -462,6 +538,7 @@ class PagedContinuousBatcher:
         logits, suffix = self._prefill_shared(
             self.params, jnp.asarray(prompt[None, m:], jnp.int32), prefix)
         tok = int(jnp.argmax(logits[0, -1]))
+        t_pre = self._sim_t
         self._sim_t += (S - m) * self.prefill_tok_s   # prefill skip: suffix only
 
         fresh = self.ledger.admit(i, fresh_n, self._sim_t,
@@ -472,9 +549,14 @@ class PagedContinuousBatcher:
                                     self.ledger.allocator.n_allocated)
         self.stats.admitted_kv_bytes += fresh_n * self.page_bytes
         self.access.add_write("kv", (S - m) * self.row_bytes)
+        self._c_alloc.inc(fresh_n)
         if m:
             self.stats.prefix_hits += 1
             self.stats.prefix_tokens_reused += m
+            self._c_hits.inc()
+            self._c_reused.inc(m)
+        else:
+            self._c_miss.inc()
 
         self._cache = self._write_shared(
             self._cache, suffix, head, jnp.int32(i),
@@ -483,7 +565,7 @@ class PagedContinuousBatcher:
         # cache this run for later requests (index refs its pages)
         self.ledger.insert_run(prompt, self.ledger.slot_pages[i], self._sim_t)
         self._commit_admission(i, req, done, tok, logits, S,
-                               self.ledger.slot_pages[i])
+                               self.ledger.slot_pages[i], t_pre)
         return True
 
     def _cow_for_chunk(self, i: int, steps_i: int, t: float) -> None:
@@ -509,6 +591,9 @@ class PagedContinuousBatcher:
             self._reserved[i] -= 1
             self.stats.cow_splits += 1
             self.stats.pages_allocated += 1
+            self._c_cow.inc()
+            self._c_alloc.inc()
+            self.tel.add_span("cow", t, t, slot=i, page=new)
 
     def _decode_chunk(self, done: List[Request]) -> None:
         live = [i for i, s in enumerate(self.slots) if s is not None]
@@ -530,6 +615,7 @@ class PagedContinuousBatcher:
                 self._reserved[i] -= len(new_pages)
                 self.stats.pages_allocated += len(new_pages)
                 self.stats.admitted_kv_bytes += len(new_pages) * self.page_bytes
+                self._c_alloc.inc(len(new_pages))
             if self.prefix_cache:
                 self._cow_for_chunk(i, steps_i, t0)
         self.stats.peak_pages = max(self.stats.peak_pages,
@@ -558,6 +644,8 @@ class PagedContinuousBatcher:
         self._next_tok = np.array(tok[:, 0])
         still_active = np.array(cache["active"])
         self._sim_t = t0 + self.chunk_steps * self.step_time_s
+        self._c_chunks.inc()
+        self.tel.add_span("decode_chunk", t0, self._sim_t, slots=len(live))
 
         for i in live:
             req = self.slots[i]
@@ -575,6 +663,10 @@ class PagedContinuousBatcher:
                 "kv", int((np.ceil(ctxs / self.page_size)).sum())
                 * self.page_bytes)
             self.access.add_write("kv", g * self.row_bytes)
+            self._c_steps.inc(g)
+            if req.timeline is not None and g:
+                req.timeline.token_ts.extend(
+                    (t0 + self.step_time_s * np.arange(1, g + 1)).tolist())
             self._ctx[i] += g
             if not still_active[i]:
                 self._retire(i, req, done, t0 + g * self.step_time_s)
@@ -582,5 +674,7 @@ class PagedContinuousBatcher:
 
 def loop_compile_count() -> int:
     """How many times the chunk decode loop has been traced/compiled
-    process-wide (tests assert it does not grow across chunks)."""
-    return LOOP_COMPILES[0]
+    process-wide (tests assert it does not grow across chunks) —
+    compatibility shim over the `serve.paged.loop_compiles` registry
+    counter (the old module-global it replaced)."""
+    return int(_COMPILES.value)

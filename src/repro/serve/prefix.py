@@ -138,7 +138,14 @@ class RadixPrefixIndex:
     dropped at eviction; probing touches the matched path so eviction is
     leaf-LRU."""
 
-    def __init__(self, page_size: int, allocator: SharedPageAllocator):
+    def __init__(self, page_size: int, allocator: SharedPageAllocator,
+                 telemetry=None):
+        from repro.obs.telemetry import noop_registry
+        tel = telemetry if telemetry is not None else noop_registry()
+        self._c_probe_hits = tel.counter("serve.prefix.probe_hits")
+        self._c_probe_miss = tel.counter("serve.prefix.probe_misses")
+        self._c_matched = tel.counter("serve.prefix.tokens_matched")
+        self._c_inserted = tel.counter("serve.prefix.pages_inserted")
         self.page_size = page_size
         self.allocator = allocator
         self._root = _Node((), -1, None)
@@ -189,6 +196,12 @@ class RadixPrefixIndex:
                 m.tail_page = best.page
                 m.tail_tokens = best_j
                 self._touch(best)
+            matched = m.tokens(ps)
+            if matched:
+                self._c_probe_hits.inc()
+                self._c_matched.inc(matched)
+            else:
+                self._c_probe_miss.inc()
             return m
 
     # ---------------------------------------------------------------- insert
@@ -220,6 +233,7 @@ class RadixPrefixIndex:
             if len(chunk) < ps:
                 break            # partial pages are leaves (never descended)
             node = child
+        self._c_inserted.inc(new)
         return new
 
     # --------------------------------------------------------------- queries
@@ -306,9 +320,19 @@ class SharedKVLedger:
         logical always; the gap is the sharing win."""
 
     def __init__(self, num_pages: int, page_bytes_: int, page_size: int,
-                 num_slots: int = 0, max_pages_per_slot: int = 0):
+                 num_slots: int = 0, max_pages_per_slot: int = 0,
+                 telemetry=None):
+        from repro.obs.telemetry import noop_registry
+        tel = telemetry if telemetry is not None else noop_registry()
+        self.tel = tel
+        self._c_evicted = tel.counter("serve.prefix.evicted_pages")
+        self._c_cow = tel.counter("serve.prefix.cow_splits")
+        self._g_physical = tel.gauge("serve.prefix.pages_physical")
+        self._g_cached = tel.gauge("serve.prefix.pages_cached")
+        self._g_logical = tel.gauge("serve.prefix.pages_logical")
         self.allocator = SharedPageAllocator(num_pages)
-        self.index = RadixPrefixIndex(page_size, self.allocator)
+        self.index = RadixPrefixIndex(page_size, self.allocator,
+                                      telemetry=telemetry)
         self.page_bytes = page_bytes_
         self.page_size = page_size
         cap = (num_pages - 1) * page_bytes_
@@ -342,6 +366,9 @@ class SharedKVLedger:
         self.trace.event(t, (needed - pn) * pb, (obsolete - po) * pb)
         self.logical.event(t, (logical - pl) * pb, 0)
         self._last = (needed, obsolete, logical)
+        self._g_physical.set(needed)
+        self._g_cached.set(obsolete)
+        self._g_logical.set(logical)
 
     # ------------------------------------------------------------------ verbs
     def admit(self, slot: int, n_pages: int, t: float,
@@ -382,6 +409,7 @@ class SharedKVLedger:
         new = self.allocator.alloc(1)[0]
         self.slot_pages[slot][table_idx] = new
         self.allocator.release([old])
+        self._c_cow.inc()
         self.sync(t)
         return new
 
@@ -399,6 +427,7 @@ class SharedKVLedger:
         evictable remains). Returns pages actually freed."""
         freed = self.index.evict(n_pages)
         if freed:
+            self._c_evicted.inc(len(freed))
             self.sync(t)
         return len(freed)
 

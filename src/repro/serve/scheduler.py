@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.slo import RequestTimeline, SLOSummary, SLOTracker
+from repro.obs.telemetry import noop_registry
 from repro.sim.trace import AccessStats, OccupancyTrace, TraceBundle
 
 
@@ -88,6 +90,9 @@ class Request:
     logits: List[np.ndarray] = field(default_factory=list)
     submitted_s: float = 0.0
     finished_s: float = 0.0
+    # lifecycle on the engine's logical clock, stamped when the engine runs
+    # with an enabled Telemetry registry (None otherwise)
+    timeline: Optional[RequestTimeline] = None
 
     @property
     def latency_s(self) -> float:
@@ -106,6 +111,14 @@ class SchedulerStats:
     # prefix-cache reuse (stays zero on engines without a prefix index)
     prefix_hits: int = 0
     prefix_tokens_reused: int = 0
+    # per-request serving SLOs on the logical sim clock (populated when the
+    # engine runs with an enabled Telemetry registry; zero otherwise)
+    ttft_p50_s: float = 0.0
+    ttft_p99_s: float = 0.0
+    tbt_p50_s: float = 0.0
+    tbt_p99_s: float = 0.0
+    e2e_p50_s: float = 0.0
+    e2e_p99_s: float = 0.0
 
 
 class ContinuousBatcher:
@@ -121,11 +134,20 @@ class ContinuousBatcher:
 
     def __init__(self, model, params, *, num_slots: int = 4,
                  max_len: int = 128, kv_dtype_bytes: int = 2,
-                 step_time_s: float = 1e-3, prefill_tok_s: float = 5e-5):
+                 step_time_s: float = 1e-3, prefill_tok_s: float = 5e-5,
+                 telemetry=None):
         self.model = model
         self.params = params
         self.num_slots = num_slots
         self.max_len = max_len
+        # spans/SLOs record on the batcher's logical sim clock — the same
+        # time base the occupancy trace uses — so a passed-in registry has
+        # its clock re-pointed here (one shared Perfetto timeline)
+        self.tel = telemetry if telemetry is not None else noop_registry()
+        if telemetry is not None:
+            telemetry.clock = lambda: self._sim_t
+        self._slo = (SLOTracker(self.tel, "serve.dense")
+                     if self.tel.enabled else None)
         self.queue: "collections.deque[Request]" = collections.deque()
         self.slots: List[Optional[Request]] = [None] * num_slots
         self.slot_pos: np.ndarray = np.zeros(num_slots, np.int64)
@@ -159,7 +181,22 @@ class ContinuousBatcher:
     # ------------------------------------------------------------ client API
     def submit(self, req: Request) -> None:
         req.submitted_s = time.perf_counter()
+        if self.tel.enabled:
+            req.timeline = RequestTimeline(rid=req.rid, submit_t=self._sim_t)
         self.queue.append(req)
+
+    def slo_summary(self) -> SLOSummary:
+        """TTFT / time-between-tokens / e2e percentiles of retired requests
+        (empty unless constructed with an enabled Telemetry). Quantiles are
+        computed at read time, never per retire."""
+        if self._slo is None:
+            return SLOSummary()
+        s = self._slo.summary()
+        st = self.stats
+        st.ttft_p50_s, st.ttft_p99_s = s.ttft_p50_s, s.ttft_p99_s
+        st.tbt_p50_s, st.tbt_p99_s = s.tbt_p50_s, s.tbt_p99_s
+        st.e2e_p50_s, st.e2e_p99_s = s.e2e_p50_s, s.e2e_p99_s
+        return s
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
         done: List[Request] = []
@@ -168,6 +205,8 @@ class ContinuousBatcher:
                 break
             self._admit(done)
             self._step(done)
+        if self._slo is not None:
+            self.slo_summary()           # refresh stats percentiles once
         return done
 
     def occupancy_bundle(self) -> TraceBundle:
@@ -191,12 +230,21 @@ class ContinuousBatcher:
             self.stats.retired_kv_bytes += self._slot_bytes[i]
         self._slot_bytes[i] = 0
         self._slot_ctx[i] = 0
+        if self.tel.enabled:
+            self.tel.counter("serve.dense.retired").inc()
+            tl = req.timeline
+            if tl is not None:
+                tl.finish_t = self._sim_t
+                self._slo.observe(tl)
+                self.tel.add_span("request", tl.submit_t, self._sim_t,
+                                  rid=req.rid, tokens=len(req.output))
 
     def _admit(self, done: List[Request]) -> None:
         for i in range(self.num_slots):
             if self.slots[i] is not None or not self.queue:
                 continue
             req = self.queue.popleft()
+            t_pre = self._sim_t
             batch = {"tokens": jnp.asarray(req.tokens[None, :], jnp.int32)}
             logits, cache = self._prefill(self.params, batch)
             tok = int(jnp.argmax(logits[0, -1]))
@@ -221,6 +269,16 @@ class ContinuousBatcher:
                 self.trace.event(self._sim_t, b, 0)
                 self.access.add_write("kv", b)
                 self.stats.admitted_kv_bytes += b
+            if self.tel.enabled:
+                self.tel.counter("serve.dense.admitted").inc()
+                self.tel.counter("serve.dense.prefills").inc()
+                self.tel.add_span("prefill", t_pre, self._sim_t,
+                                  slot=i, rid=req.rid, tokens=ctx)
+                tl = req.timeline
+                if tl is not None:
+                    tl.admit_t = t_pre
+                    tl.first_token_t = self._sim_t
+                    tl.token_ts.append(self._sim_t)
             # the prefill already produced the first new token: retire now if
             # it satisfies the request (counts against max_new_tokens / EOS)
             if (req.max_new_tokens <= 1
@@ -241,6 +299,10 @@ class ContinuousBatcher:
             req.output.append(nxt)
             self._next_tok[i] = nxt
             self.stats.decode_steps += 1
+            if self.tel.enabled:
+                self.tel.counter("serve.dense.decode_steps").inc()
+                if req.timeline is not None:
+                    req.timeline.token_ts.append(self._sim_t)
             if self.cfg is not None:
                 # attention reads the whole resident KV, then appends one row
                 # (the bounded cache stops growing at max_len)

@@ -847,6 +847,14 @@ class Engine:
         assert n_done == len(g.ops), (n_done, len(g.ops))
         wb = sum(m.writebacks for m in mems.values())
         wbb = sum(m.writeback_bytes for m in mems.values())
+        from repro.obs.telemetry import default_registry
+        tel = default_registry()
+        tel.counter("sim.des.runs").inc()
+        tel.counter("sim.des.ops").inc(n_done)
+        tel.counter("sim.des.layers_replayed").inc(replayed)
+        tel.counter("sim.des.writebacks").inc(wb)
+        for reason, k in self.memo_misses.items():
+            tel.counter(f"sim.des.memo_miss.{reason}").inc(k)
         return SimResult(
             graph_name=g.name, accel_name=accel.name, total_time=end_time,
             traces={name: m.trace for name, m in mems.items()},

@@ -71,6 +71,12 @@ class CampaignRow:
     peak_mib: float
     mean_mib: float
     p95_latency_s: float
+    # serving SLO percentiles of the scenario's traffic (same for every
+    # (C, B) row of one scenario — the grid reprices energy, not latency)
+    ttft_p50_s: float = 0.0
+    ttft_p99_s: float = 0.0
+    tbt_p50_s: float = 0.0
+    tbt_p99_s: float = 0.0
 
     @property
     def e_online(self) -> float:
@@ -109,7 +115,8 @@ class CampaignReport:
     def format(self) -> str:
         lines = [f"{'arch':>20} {'arrival':>8} {'rate':>5} {'C':>5} {'B':>3} "
                  f"{'peak':>7} {'E_none':>8} {'E_oracle':>9} {'E_online':>9} "
-                 f"{'dNone%':>7} {'dOrcl%':>7} {'wakes':>6} {'p95[s]':>7}"]
+                 f"{'dNone%':>7} {'dOrcl%':>7} {'wakes':>6} {'p95[s]':>7} "
+                 f"{'ttft50':>7} {'ttft99':>7} {'tbt50':>8} {'tbt99':>8}"]
         for r in self.rows:
             c = r.comparison
             lines.append(
@@ -118,7 +125,9 @@ class CampaignReport:
                 f"{r.peak_mib:>6.1f}M {r.e_none*1e3:>8.1f} "
                 f"{r.e_oracle*1e3:>9.1f} {r.e_online*1e3:>9.1f} "
                 f"{c.online_vs_none_pct:>+7.1f} {c.online_vs_oracle_pct:>+7.1f} "
-                f"{c.online.wake_violations:>6} {r.p95_latency_s:>7.2f}")
+                f"{c.online.wake_violations:>6} {r.p95_latency_s:>7.2f} "
+                f"{r.ttft_p50_s:>7.3f} {r.ttft_p99_s:>7.3f} "
+                f"{r.tbt_p50_s:>8.4f} {r.tbt_p99_s:>8.4f}")
         return "\n".join(lines)
 
 
@@ -161,7 +170,8 @@ def run_scenario(scn: Scenario, *, capacities_mib: Optional[Sequence[int]],
                  fast_backend: str = "auto",
                  backend: str = "auto", prune: bool = False,
                  prune_margin: float = 1e-3,
-                 fidelity: str = "auto") -> Tuple[
+                 fidelity: str = "auto",
+                 telemetry=None) -> Tuple[
                      TrafficSim, List[CampaignRow], np.ndarray]:
     """Simulate one scenario's traffic, then evaluate its (C, B) grid.
 
@@ -170,22 +180,25 @@ def run_scenario(scn: Scenario, *, capacities_mib: Optional[Sequence[int]],
     the candidate set first: a point survives only if its bound does not
     exceed the incumbent's exact online energy by `prune_margin` (relative);
     pruned points — which cannot win under any policy — get no rows."""
+    from repro.obs.telemetry import noop_registry
+    tel = telemetry if telemetry is not None else noop_registry()
     cfg = resolve_arch(scn.arch)
     lengths = lengths or LengthModel(max_len=scn.max_len)
-    if scn.workload != "plain":
-        reqs = generate_workload(scn.workload, scn.rate, scn.horizon_s,
-                                 seed=scn.seed, lengths=lengths,
-                                 arrival=scn.arrival,
-                                 prefix_len=scn.prefix_len,
-                                 sharing=scn.sharing, fanout=scn.sharing)
-        sim = simulate_prefix_traffic(cfg, reqs, num_slots=scn.num_slots,
-                                      page_size=scn.page_size,
-                                      max_len=scn.max_len, seed=scn.seed)
-    else:
-        reqs = generate(scn.arrival, scn.rate, scn.horizon_s, seed=scn.seed,
-                        lengths=lengths)
-        sim = simulate_traffic(cfg, reqs, num_slots=scn.num_slots,
-                               max_len=scn.max_len, fidelity=fidelity)
+    with tel.span("campaign.simulate", arch=scn.arch, rate=scn.rate):
+        if scn.workload != "plain":
+            reqs = generate_workload(scn.workload, scn.rate, scn.horizon_s,
+                                     seed=scn.seed, lengths=lengths,
+                                     arrival=scn.arrival,
+                                     prefix_len=scn.prefix_len,
+                                     sharing=scn.sharing, fanout=scn.sharing)
+            sim = simulate_prefix_traffic(cfg, reqs, num_slots=scn.num_slots,
+                                          page_size=scn.page_size,
+                                          max_len=scn.max_len, seed=scn.seed)
+        else:
+            reqs = generate(scn.arrival, scn.rate, scn.horizon_s,
+                            seed=scn.seed, lengths=lengths)
+            sim = simulate_traffic(cfg, reqs, num_slots=scn.num_slots,
+                                   max_len=scn.max_len, fidelity=fidelity)
     trace = sim.trace
     if resample_dt:
         trace = trace.resampled(resample_dt, sim.total_time)
@@ -198,9 +211,11 @@ def run_scenario(scn: Scenario, *, capacities_mib: Optional[Sequence[int]],
         lo = max(min_capacity_mib(peak), 16)
         capacities_mib = sorted({lo, 2 * lo})
 
-    fast = fast_candidate_energies(
-        dur, occ, capacities_mib=list(capacities_mib), banks=list(banks),
-        alpha=ctrl.alpha, n_reads=n_r, n_writes=n_w, backend=fast_backend)
+    with tel.span("campaign.fast_grid", arch=scn.arch,
+                  n_points=len(capacities_mib) * len(banks)):
+        fast = fast_candidate_energies(
+            dur, occ, capacities_mib=list(capacities_mib), banks=list(banks),
+            alpha=ctrl.alpha, n_reads=n_r, n_writes=n_w, backend=fast_backend)
 
     points = [(int(c_mib * MIB), b)
               for c_mib in capacities_mib for b in banks
@@ -218,16 +233,24 @@ def run_scenario(scn: Scenario, *, capacities_mib: Optional[Sequence[int]],
         cutoff = inc.online.e_total * (1.0 + prune_margin)
         points = [p for p in points if lb[p] <= cutoff or p == best]
 
-    comparisons = compare_grid(
-        dur, occ, points=[p for p in points if p not in precomputed],
-        n_reads=n_r, n_writes=n_w, cfg=ctrl, backend=backend)
+    with tel.span("campaign.compare_grid", arch=scn.arch,
+                  n_points=len(points)):
+        comparisons = compare_grid(
+            dur, occ, points=[p for p in points if p not in precomputed],
+            n_reads=n_r, n_writes=n_w, cfg=ctrl, backend=backend)
     comparisons.update(precomputed)
     util = utilization_summary(sim)
     rows = [CampaignRow(scn, cap // MIB, b, comparisons[(cap, b)],
                         peak_mib=util["peak_bytes"] / MIB,
                         mean_mib=util["mean_bytes"] / MIB,
-                        p95_latency_s=util["p95_latency_s"])
+                        p95_latency_s=util["p95_latency_s"],
+                        ttft_p50_s=util["ttft_p50_s"],
+                        ttft_p99_s=util["ttft_p99_s"],
+                        tbt_p50_s=util["tbt_p50_s"],
+                        tbt_p99_s=util["tbt_p99_s"])
             for cap, b in points]
+    tel.counter("campaign.scenarios").inc()
+    tel.counter("campaign.rows").inc(len(rows))
     return sim, rows, fast
 
 
@@ -247,7 +270,8 @@ def run_campaign(archs: Sequence[str], *, arrivals: Sequence[str] = ("poisson",)
                  workload: str = "plain",
                  prefix_len: int = 512,
                  sharing: int = 8,
-                 page_size: int = 16) -> CampaignReport:
+                 page_size: int = 16,
+                 telemetry=None) -> CampaignReport:
     """The full grid. Identical (arrival, rate, seed) cells share one request
     stream across architectures, so MHA-vs-GQA rows are directly comparable."""
     ctrl = ctrl or ControllerConfig()
@@ -265,7 +289,7 @@ def run_campaign(archs: Sequence[str], *, arrivals: Sequence[str] = ("poisson",)
                         scn, capacities_mib=capacities_mib, banks=banks,
                         ctrl=ctrl, lengths=lengths, resample_dt=resample_dt,
                         fast_backend=fast_backend, backend=backend,
-                        prune=prune, fidelity=fidelity)
+                        prune=prune, fidelity=fidelity, telemetry=telemetry)
                     key = (arch, scn.traffic_key)
                     report.sims[key] = sim
                     report.rows.extend(rows)

@@ -18,6 +18,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.obs.telemetry import LATENCY_BUCKETS, Histogram
 from repro.serve.scheduler import kv_bytes_at, slot_state_bytes
 from repro.sim.trace import AccessStats, OccupancyTrace, TraceBundle
 from repro.traffic.generators import RequestSpec, materialize_tokens
@@ -57,6 +58,16 @@ class TrafficStats:
     peak_active_slots: int = 0
     queue_delay_s: List[float] = field(default_factory=list)
     latency_s: List[float] = field(default_factory=list)
+    # inter-token gap distribution (standalone mergeable histogram; the
+    # fast-forward path bulk-observes so it stays bit-identical to exact)
+    tbt: Histogram = field(default_factory=lambda: Histogram(
+        "traffic.tbt_s", edges=LATENCY_BUCKETS))
+
+    @property
+    def ttft_s(self) -> List[float]:
+        """TTFT per request: queue delay is stamped *after* the prefill
+        advance, so it already spans arrival -> first token."""
+        return self.queue_delay_s
 
     def percentile_latency(self, q: float) -> float:
         return float(np.percentile(self.latency_s, q)) if self.latency_s else 0.0
@@ -119,6 +130,7 @@ def simulate_traffic(cfg, requests: Sequence[RequestSpec], *,
         produced: int                 # decoded tokens so far
         bytes: int
         t_admit: float
+        tok_t: float                  # time of the last emitted token
 
     slots: List[Optional[_Slot]] = [None] * num_slots
     t = 0.0
@@ -136,7 +148,7 @@ def simulate_traffic(cfg, requests: Sequence[RequestSpec], *,
             b = kv_bytes_at(cfg, ctx, kv_dtype_bytes) + state_b
             trace.event(t, b, 0)
             access.add_write(mem_name, b)
-            slots[i] = _Slot(r, ctx, 0, b, r.arrival_s)
+            slots[i] = _Slot(r, ctx, 0, b, r.arrival_s, t)
             stats.admitted += 1
             stats.admitted_bytes += b
             stats.queue_delay_s.append(t - r.arrival_s)
@@ -204,6 +216,10 @@ def simulate_traffic(cfg, requests: Sequence[RequestSpec], *,
                 stats.admitted_bytes += k * d1
             s.ctx = min(s.ctx + k, max_len)
             s.produced += k
+            # diff over [last token, window tokens] yields the same float
+            # subtractions the exact loop performs step by step
+            stats.tbt.observe_array(np.diff(np.r_[s.tok_t, ts]))
+            s.tok_t = float(ts[-1])
         if grow:
             trace.extend(np.repeat(ts, len(grow)),
                          np.tile(np.asarray(grow, np.int64), k),
@@ -231,6 +247,8 @@ def simulate_traffic(cfg, requests: Sequence[RequestSpec], *,
         stats.decode_steps += 1
         for i in active:
             s = slots[i]
+            stats.tbt.observe(t - s.tok_t)
+            s.tok_t = t
             # attention reads all resident KV, then appends one row (the
             # bounded cache stops growing at max_len, like ContinuousBatcher)
             access.add_read(mem_name, s.bytes)
@@ -329,6 +347,7 @@ def simulate_prefix_traffic(cfg, requests: Sequence[RequestSpec], *,
         req: RequestSpec
         ctx: int
         produced: int
+        tok_t: float
 
     slots: List[Optional[_Slot]] = [None] * num_slots
     reserved = [0] * num_slots
@@ -369,7 +388,7 @@ def simulate_prefix_traffic(cfg, requests: Sequence[RequestSpec], *,
             ledger.admit(i, fresh_n, t, shared=match.pages)
             ledger.insert_run(toks, ledger.slot_pages[i], t)
             reserved[i] = worst_total - len(match.pages) + cow_extra - fresh_n
-            slots[i] = _Slot(r, S, 0)
+            slots[i] = _Slot(r, S, 0, t)
             access.add_write(mem_name, (S - m) * (pb // ps))
             stats.admitted += 1
             stats.admitted_bytes += fresh_n * pb
@@ -411,6 +430,8 @@ def simulate_prefix_traffic(cfg, requests: Sequence[RequestSpec], *,
         stats.decode_steps += 1
         for i in active:
             s = slots[i]
+            stats.tbt.observe(t - s.tok_t)
+            s.tok_t = t
             access.add_read(mem_name, pages_for(s.ctx, ps) * pb)
             if s.ctx < max_len:
                 idx = s.ctx // ps
@@ -438,15 +459,21 @@ def simulate_prefix_traffic(cfg, requests: Sequence[RequestSpec], *,
 
 
 def utilization_summary(sim: TrafficSim) -> Dict[str, float]:
-    """Headline occupancy numbers for reports."""
+    """Headline occupancy numbers + serving SLO percentiles for reports."""
     tr = sim.trace
+    st = sim.stats
+    ttft = st.queue_delay_s
     return {
         "peak_bytes": float(tr.peak_needed()),
         "mean_bytes": tr.time_weighted_mean(sim.total_time),
         "capacity_bytes": float(tr.capacity),
         "peak_frac_of_capacity": (tr.peak_needed() / tr.capacity
                                   if tr.capacity else 0.0),
-        "finished": float(sim.stats.finished),
-        "p50_latency_s": sim.stats.percentile_latency(50),
-        "p95_latency_s": sim.stats.percentile_latency(95),
+        "finished": float(st.finished),
+        "p50_latency_s": st.percentile_latency(50),
+        "p95_latency_s": st.percentile_latency(95),
+        "ttft_p50_s": float(np.percentile(ttft, 50)) if ttft else 0.0,
+        "ttft_p99_s": float(np.percentile(ttft, 99)) if ttft else 0.0,
+        "tbt_p50_s": st.tbt.quantile(0.5) if st.tbt.count else 0.0,
+        "tbt_p99_s": st.tbt.quantile(0.99) if st.tbt.count else 0.0,
     }

@@ -1,0 +1,84 @@
+"""Hypothesis property tests on the telemetry histogram and merge laws."""
+import math
+
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.obs.telemetry import (DEFAULT_BUCKETS, Histogram, Telemetry,
+                                 log_bucket_edges)
+
+samples_st = st.lists(st.floats(1e-7, 1e5, allow_nan=False,
+                                allow_infinity=False),
+                      min_size=1, max_size=200)
+
+
+def _hist(xs, name="h"):
+    h = Histogram(name, edges=DEFAULT_BUCKETS)
+    for x in xs:
+        h.observe(x)
+    return h
+
+
+@given(samples_st, samples_st)
+@settings(max_examples=80, deadline=None)
+def test_merge_equals_concatenated_observation(xs, ys):
+    """merge(H(xs), H(ys)) is indistinguishable from H(xs + ys): identical
+    bucket counts, extrema, and therefore identical quantile estimates."""
+    merged = _hist(xs)
+    merged.merge(_hist(ys))
+    concat = _hist(xs + ys)
+    assert merged == concat
+    for q in (0.0, 0.25, 0.5, 0.9, 0.99, 1.0):
+        assert merged.quantile(q) == concat.quantile(q)
+
+
+@given(samples_st, st.sampled_from([0.0, 0.1, 0.5, 0.9, 0.99, 1.0]))
+@settings(max_examples=120, deadline=None)
+def test_quantile_estimate_bounded_by_true_order_stat_buckets(xs, q):
+    """The estimate for quantile q lies inside the union of the buckets
+    that truly contain the two bounding order statistics (numpy rank
+    convention k = q*(n-1)), clamped to the observed extrema — the
+    resolution guarantee fixed bucket edges can actually deliver."""
+    h = _hist(xs)
+    s = sorted(xs)
+    k = q * (len(s) - 1)
+    x_lo, x_hi = s[int(math.floor(k))], s[int(math.ceil(k))]
+    lo = max(h.bucket_bounds(x_lo)[0], h.min_value)
+    hi = min(h.bucket_bounds(x_hi)[1], h.max_value)
+    est = h.quantile(q)
+    assert lo - 1e-12 <= est <= hi + 1e-12
+    # and never escapes the observed range
+    assert h.min_value - 1e-12 <= est <= h.max_value + 1e-12
+
+
+@given(samples_st)
+@settings(max_examples=60, deadline=None)
+def test_observe_array_matches_scalar_observes(xs):
+    bulk = Histogram("b", edges=DEFAULT_BUCKETS)
+    bulk.observe_array(np.asarray(xs))
+    assert bulk == _hist(xs)
+
+
+@given(st.lists(st.integers(0, 1000), min_size=1, max_size=5),
+       st.lists(st.integers(0, 1000), min_size=1, max_size=5),
+       st.lists(st.integers(0, 1000), min_size=1, max_size=5))
+@settings(max_examples=40, deadline=None)
+def test_registry_merge_is_associative_on_counters(a, b, c):
+    def reg(vals):
+        t = Telemetry(enabled=True)
+        for i, v in enumerate(vals):
+            t.counter(f"c{i}").inc(v)
+        return t
+
+    left = reg(a).merge(reg(b).merge(reg(c)))
+    right = reg(a).merge(reg(b)).merge(reg(c))
+    assert left.snapshot()["counters"] == right.snapshot()["counters"]
+
+
+def test_bucket_edges_monotone():
+    for edges in (DEFAULT_BUCKETS, log_bucket_edges(1e-5, 1e3, per_decade=8)):
+        assert all(a < b for a, b in zip(edges, edges[1:]))
