@@ -1,0 +1,177 @@
+"""Quantized paged-KV benchmark: fp32 vs int8 vs fp8 serving.
+
+Three measurements on the reduced dsr1d config, identical request streams:
+
+  * decode tok/s through the paged chunk loop per kv_dtype (the quantized
+    paths add a per-row quantize on append and an in-register dequant in
+    the attention reference — parity with fp32 is the bar, not speedup:
+    the win is bytes, which Stage I/II convert into gating energy);
+  * max-abs logit error of the int8 / fp8 rollouts vs the fp32 batcher
+    (greedy tokens must match exactly on this config);
+  * bytes/page per kv_dtype via `serve.paged.page_bytes` (int8 carries a
+    4-byte f32 scale per (page, kv_head, row); fp8-E4M3 is scale-free).
+
+Also checks the quantized paged kernel (interpret mode) against its jnp
+reference on a ragged page-table batch, and the pinned quantization-error
+bound vs the fp32 kernel. Writes `BENCH_quant.json`.
+
+Run:  PYTHONPATH=src python -m benchmarks.quant_bench [out.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.serve_bench import _paged_run_fn
+from repro.configs import get_arch, reduced
+from repro.kernels.quant import quantize_page_rows
+from repro.models import build_model
+from repro.serve import Request
+from repro.serve.paged import page_bytes
+
+DEFAULT_OUT = "BENCH_quant.json"
+INT8_BYTES_BAR = 2.0       # >=2x smaller pages than fp32 (scales included)
+FP8_BYTES_BAR = 4.0        # fp8-E4M3 is scale-free: exactly 4x
+TOK_S_PARITY_BAR = 0.9     # quantized decode >= 0.9x fp32 throughput
+KERNEL_REF_TOL = 1e-6      # quant kernel vs mirrored jnp reference
+QUANT_VS_FP32_BOUND = 0.05  # pinned: quantized attention vs fp32 kernel
+
+
+def _ragged_case(rng, B=4, H=12, K=2, d=64, ps=16, P=4, N=24):
+    q = jnp.asarray(rng.normal(size=(B, H, d)), jnp.float32)
+    pk = jnp.asarray(rng.normal(size=(N, K, ps, d)), jnp.float32)
+    pv = jnp.asarray(rng.normal(size=(N, K, ps, d)), jnp.float32)
+    lengths = np.array([1, 16, 37, 64], np.int32)[:B]
+    pt = np.zeros((B, P), np.int64)
+    ids = list(range(1, N))
+    rng.shuffle(ids)
+    for b in range(B):
+        for j in range(-(-int(lengths[b]) // ps)):
+            pt[b, j] = ids.pop()
+    return q, pk, pv, jnp.asarray(pt, jnp.int32), jnp.asarray(lengths)
+
+
+def _kernel_exactness() -> tuple:
+    """(quant kernel vs quant ref, quant ref vs fp32 kernel) max abs err."""
+    from repro.kernels.paged_gqa_decode import (
+        paged_gqa_decode, paged_gqa_decode_quant,
+        paged_gqa_decode_quant_mirror_ref)
+    rng = np.random.default_rng(0)
+    q, pk, pv, pt, lengths = _ragged_case(rng)
+    qk, ks = quantize_page_rows(pk)
+    qv, vs = quantize_page_rows(pv)
+    out = paged_gqa_decode_quant(q, qk, qv, ks, vs, pt, lengths,
+                                 backend="interpret")
+    ref = paged_gqa_decode_quant_mirror_ref(q, qk, qv, ks, vs, pt, lengths)
+    fp32 = paged_gqa_decode(q, pk, pv, pt, lengths, backend="interpret")
+    return float(jnp.abs(out - ref).max()), float(jnp.abs(out - fp32).max())
+
+
+def _decode_tok_s(model, params, prompts, n_new, kv_dtype) -> float:
+    run, _ = _paged_run_fn(model, params, prompts, n_new, page_size=16,
+                           chunk_steps=64, kv_dtype=kv_dtype)
+    run()                                        # warm compile
+    dt = min(run() for _ in range(3))
+    return (n_new - 1) * prompts.shape[0] / dt
+
+
+def _rollout(model, params, prompts, n_new, kv_dtype):
+    """{rid: (tokens, logits (T, V))} of a full greedy rollout."""
+    _, cb = _paged_run_fn(model, params, prompts, n_new, page_size=16,
+                          chunk_steps=16, kv_dtype=kv_dtype,
+                          collect_logits=True)
+    for i in range(prompts.shape[0]):
+        cb.submit(Request(rid=i, tokens=prompts[i], max_new_tokens=n_new))
+    done = cb.run()
+    return {r.rid: (list(map(int, r.tokens)), np.stack(r.logits))
+            for r in done}
+
+
+def bench_quant(out_path: str = DEFAULT_OUT):
+    cfg = reduced(get_arch("dsr1d-qwen-1.5b"), layers=2)
+    model = build_model(cfg, compute_dtype=jnp.float32, remat="none")
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    B, prompt_len, n_new = 4, 32, 64
+    prompts = rng.integers(0, cfg.vocab_size, (B, prompt_len)).astype(np.int32)
+
+    err_ref, err_fp32 = _kernel_exactness()
+    assert err_ref < KERNEL_REF_TOL, (
+        f"quant kernel vs reference: max abs err {err_ref:.2e}")
+    assert err_fp32 < QUANT_VS_FP32_BOUND, (
+        f"quantized vs fp32 kernel: max abs err {err_fp32:.2e}")
+
+    pb = {dt: page_bytes(cfg, 16, *spec) for dt, spec in
+          [("fp32", (4, 0)), ("int8", (1, 4)), ("fp8", (1, 0))]}
+    int8_ratio = pb["fp32"] / pb["int8"]
+    fp8_ratio = pb["fp32"] / pb["fp8"]
+    assert int8_ratio >= INT8_BYTES_BAR, f"int8 pages only {int8_ratio:.2f}x"
+    assert fp8_ratio >= FP8_BYTES_BAR, f"fp8 pages only {fp8_ratio:.2f}x"
+
+    tok_s = {dt: _decode_tok_s(model, params, prompts, n_new, dt)
+             for dt in ("native", "int8", "fp8")}
+    roll = {dt: _rollout(model, params, prompts, n_new // 4, dt)
+            for dt in ("native", "int8", "fp8")}
+    logit_err, tokens_match = {}, {}
+    for dt in ("int8", "fp8"):
+        logit_err[dt] = max(
+            float(np.abs(roll[dt][i][1] - roll["native"][i][1]).max())
+            for i in roll["native"])
+        tokens_match[dt] = all(roll[dt][i][0] == roll["native"][i][0]
+                               for i in roll["native"])
+
+    report = {
+        "config": f"{cfg.name} ({cfg.num_layers} layers)",
+        "slots": B, "prompt_len": prompt_len, "new_tokens": n_new,
+        "page_size": 16, "chunk_steps": 64,
+        "kernel_vs_ref_err": err_ref,
+        "kernel_vs_fp32_err": err_fp32,
+        "page_bytes": pb,
+        "int8_bytes_ratio": int8_ratio,
+        "fp8_bytes_ratio": fp8_ratio,
+        "fp32_tok_s": tok_s["native"],
+        "int8_tok_s": tok_s["int8"],
+        "fp8_tok_s": tok_s["fp8"],
+        "int8_logit_err": logit_err["int8"],
+        "fp8_logit_err": logit_err["fp8"],
+        "int8_tokens_match_fp32": tokens_match["int8"],
+        "fp8_tokens_match_fp32": tokens_match["fp8"],
+        "note": ("tok/s through the paged chunk loop (jnp ref attention on "
+                 "CPU); the quantized win is bytes/page, throughput parity "
+                 "is the guard"),
+    }
+    for dt in ("int8", "fp8"):
+        rel = tok_s[dt] / tok_s["native"]
+        assert rel >= TOK_S_PARITY_BAR, (
+            f"{dt} decode at {rel:.2f}x fp32 throughput, bar is "
+            f"{TOK_S_PARITY_BAR}x")
+        assert tokens_match[dt], f"{dt} greedy tokens diverged from fp32"
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    return report
+
+
+def bench_serve_quant():
+    """benchmarks.run adapter: (us_per_token, derived) of the int8 path."""
+    r = bench_quant()
+    return 1e6 / r["int8_tok_s"], (
+        f"int8 {r['int8_tok_s']:.0f} tok/s ({r['int8_tok_s'] / r['fp32_tok_s']:.2f}x fp32), "
+        f"pages {r['int8_bytes_ratio']:.2f}x/{r['fp8_bytes_ratio']:.2f}x "
+        f"smaller, logit err {r['int8_logit_err']:.1e}")
+
+
+def main() -> None:
+    out = sys.argv[1] if len(sys.argv) > 1 else DEFAULT_OUT
+    r = bench_quant(out)
+    print(json.dumps(r, indent=1))
+    print(f"wrote {out}: int8 {r['int8_tok_s']:.0f} tok/s vs fp32 "
+          f"{r['fp32_tok_s']:.0f} tok/s, pages {r['int8_bytes_ratio']:.2f}x "
+          f"(int8) / {r['fp8_bytes_ratio']:.2f}x (fp8) smaller")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,7 @@ import sys
 import traceback
 
 from benchmarks import kernels_bench, paper_figs, prefix_bench, \
-    serve_bench, stage1_bench, stage2_bench, traffic_bench
+    quant_bench, serve_bench, stage1_bench, stage2_bench, traffic_bench
 
 BENCHES = [
     ("fig1_mha_vs_gqa", paper_figs.fig1_mha_vs_gqa),
@@ -24,6 +24,7 @@ BENCHES = [
     ("stage2_engine", stage2_bench.bench_stage2_engine),
     ("serve_paged", serve_bench.bench_serve_paged),
     ("serve_prefix", prefix_bench.bench_serve_prefix),
+    ("serve_quant", quant_bench.bench_serve_quant),
     ("kern_flash_attention", kernels_bench.bench_flash_attention),
     ("kern_gqa_decode", kernels_bench.bench_gqa_decode),
     ("kern_int8_matmul", kernels_bench.bench_int8_matmul),

@@ -71,7 +71,8 @@ def _legacy_decode_tok_s(model, params, prompts: np.ndarray,
 
 
 def _paged_run_fn(model, params, prompts: np.ndarray, n_new: int,
-                  page_size: int, chunk_steps: int, telemetry=None):
+                  page_size: int, chunk_steps: int, telemetry=None,
+                  kv_dtype: str = "native", collect_logits: bool = False):
     """(timed-run closure, batcher) for the paged chunk loop; one call
     decodes every slot to completion and returns the decode seconds
     (prefills untimed)."""
@@ -80,7 +81,8 @@ def _paged_run_fn(model, params, prompts: np.ndarray, n_new: int,
     cb = PagedContinuousBatcher(
         model, params, num_slots=B, page_size=page_size,
         num_pages=B * worst + 8, max_pages_per_slot=worst + 1,
-        chunk_steps=chunk_steps, attn_backend="ref", telemetry=telemetry)
+        chunk_steps=chunk_steps, attn_backend="ref", telemetry=telemetry,
+        kv_dtype=kv_dtype, collect_logits=collect_logits)
 
     def run():
         for i in range(B):

@@ -103,4 +103,17 @@ grep -q "logical vs physical" /tmp/prefix_campaign.out
 # (512-token shared prefix) and decode-throughput parity asserted inside
 PYTHONPATH=src timeout 600 python -m benchmarks.prefix_bench \
     /tmp/BENCH_prefix.json | tail -1
+
+# quantized-KV smoke: fp32/int8/fp8 batchers on one request stream, greedy
+# tokens must agree, byte-accurate traces priced through Stage II
+PYTHONPATH=src timeout 300 python examples/quant_serving.py \
+    --requests 4 --new-tokens 8 > /tmp/quant_smoke.out
+grep -q "quant-serve" /tmp/quant_smoke.out
+grep -q "exact" /tmp/quant_smoke.out
+
+# quantized-KV benchmark: kernel-vs-reference exactness, the pinned
+# quantization-error bound vs fp32, >=2x (int8) / >=4x (fp8) bytes/page and
+# >=0.9x decode-throughput parity are all asserted inside
+PYTHONPATH=src timeout 600 python -m benchmarks.quant_bench \
+    /tmp/BENCH_quant.json | tail -1
 echo "ci: OK"

@@ -48,6 +48,19 @@ def main() -> None:
               f"logical_peak={case['mems']['kv_logical']['peak_needed']} B")
     print(f"wrote {pout}")
 
+    # quantized-ledger fixtures: the prefix scenarios at 1 payload byte/el
+    qout = golden_util.QUANT_GOLDEN_PATH if len(sys.argv) <= 1 else \
+        os.path.join(os.path.dirname(out), "quant_golden.json")
+    qpayload = golden_util.build_quant_golden()
+    with open(qout, "w") as f:
+        json.dump(qpayload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    for name, case in qpayload.items():
+        print(f"{name}: {case['kv_dtype_bytes']} B/el, "
+              f"phys_peak={case['mems']['kv']['peak_needed']} B "
+              f"(base {case['base_case']})")
+    print(f"wrote {qout}")
+
 
 if __name__ == "__main__":
     main()

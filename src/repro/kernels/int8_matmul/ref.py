@@ -1,8 +1,15 @@
-"""Pure-jnp oracle for the int8 matmul kernel + quantization helpers."""
+"""Pure-jnp oracle for the int8 matmul kernel + quantization helpers.
+
+The scale/round/clip logic lives in `repro.kernels.quant` (shared with the
+quantized paged KV pools); `quantize_rows`/`quantize_cols` stay importable
+from here for compatibility.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.quant import quantize_cols, quantize_rows  # noqa: F401
 
 
 def int8_matmul_ref(x: jax.Array, w: jax.Array, sx: jax.Array,
@@ -10,18 +17,3 @@ def int8_matmul_ref(x: jax.Array, w: jax.Array, sx: jax.Array,
     acc = jnp.matmul(x.astype(jnp.int32), w.astype(jnp.int32))
     return (acc.astype(jnp.float32) * sx.astype(jnp.float32)
             * sw.astype(jnp.float32)).astype(out_dtype)
-
-
-def quantize_rows(x: jax.Array):
-    """Symmetric per-row int8 quantization: x ~= q * s."""
-    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
-    s = jnp.maximum(amax, 1e-8) / 127.0
-    q = jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8)
-    return q, s.astype(jnp.float32)
-
-
-def quantize_cols(w: jax.Array):
-    amax = jnp.max(jnp.abs(w), axis=0, keepdims=True)
-    s = jnp.maximum(amax, 1e-8) / 127.0
-    q = jnp.clip(jnp.round(w / s), -127, 127).astype(jnp.int8)
-    return q, s.astype(jnp.float32)

@@ -5,8 +5,11 @@ import functools
 
 import jax
 
-from repro.kernels.paged_gqa_decode.kernel import paged_gqa_decode_kernel
-from repro.kernels.paged_gqa_decode.ref import paged_gqa_decode_ref
+from repro.kernels import quant
+from repro.kernels.paged_gqa_decode.kernel import (
+    paged_gqa_decode_kernel, paged_gqa_decode_quant_kernel)
+from repro.kernels.paged_gqa_decode.ref import (paged_gqa_decode_quant_ref,
+                                                paged_gqa_decode_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))
@@ -20,5 +23,29 @@ def paged_gqa_decode(q, k_pages, v_pages, page_table, lengths, *,
         backend = ("pallas" if jax.default_backend() == "tpu" else "ref")
     if backend == "ref":
         return paged_gqa_decode_ref(q, k_pages, v_pages, page_table, lengths)
+    if k_pages.dtype == quant.FP8_STORAGE_DTYPE:
+        # fp8 pools travel as uint8 bit codes (see quant.FP8_STORAGE_DTYPE);
+        # the kernel wants the float8 view
+        k_pages = jax.lax.bitcast_convert_type(k_pages, quant.FP8_DTYPE)
+        v_pages = jax.lax.bitcast_convert_type(v_pages, quant.FP8_DTYPE)
     return paged_gqa_decode_kernel(q, k_pages, v_pages, page_table, lengths,
                                    interpret=(backend == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def paged_gqa_decode_quant(q, k_pages, v_pages, k_scale, v_scale, page_table,
+                           lengths, *, backend: str = "auto"):
+    """int8-page variant with fused in-register dequant.
+
+    backend: auto | pallas | interpret | ref. q: (B, H, d); k_pages,
+    v_pages: (N, K, page_size, d) int8; k_scale, v_scale: (N, K, page_size)
+    float32 per-row scales; page_table: (B, P) int32; lengths: (B,) int32.
+    -> (B, H, d)."""
+    if backend == "auto":
+        backend = ("pallas" if jax.default_backend() == "tpu" else "ref")
+    if backend == "ref":
+        return paged_gqa_decode_quant_ref(q, k_pages, v_pages, k_scale,
+                                          v_scale, page_table, lengths)
+    return paged_gqa_decode_quant_kernel(q, k_pages, v_pages, k_scale,
+                                         v_scale, page_table, lengths,
+                                         interpret=(backend == "interpret"))

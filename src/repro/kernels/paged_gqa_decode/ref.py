@@ -14,6 +14,103 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import quant
+
+
+def _gather_pool_f32(pool: jax.Array, page_table: jax.Array) -> jax.Array:
+    """`gather_pages` into float32. fp8 pools dequantize (table lookup,
+    bit-identical to astype — see `quant.from_fp8`) BEFORE the gather: on
+    CPU XLA, gathers on 1-byte float dtypes are an order of magnitude
+    slower than on f32, and the widening convert is not vectorized
+    either — dequant-then-gather is ~4x faster than gather-then-astype."""
+    if quant.is_fp8_pool(pool.dtype):
+        return gather_pages(quant.from_fp8(pool), page_table)
+    return gather_pages(pool, page_table).astype(jnp.float32)
+
+
+def gather_page_scales(scales: jax.Array, page_table: jax.Array) -> jax.Array:
+    """scales: (N, K, ps); page_table: (B, P) int32 -> dense (B, K, P*ps)."""
+    B, P = page_table.shape
+    N, K, ps = scales.shape
+    g = scales[page_table]                     # (B, P, K, ps)
+    return g.transpose(0, 2, 1, 3).reshape(B, K, P * ps)
+
+
+def paged_gqa_decode_quant_mirror_ref(q: jax.Array, k_pages: jax.Array,
+                                      v_pages: jax.Array, k_scale: jax.Array,
+                                      v_scale: jax.Array,
+                                      page_table: jax.Array,
+                                      lengths: jax.Array) -> jax.Array:
+    """Quantized-page oracle: int8 pools + per-row float32 scales.
+
+    q: (B, H, d); k_pages, v_pages: (N, K, ps, d) int8; k_scale, v_scale:
+    (N, K, ps); page_table: (B, P); lengths: (B,). Returns (B, H, d).
+
+    Deliberately mirrors the Pallas kernel's split-K online softmax page by
+    page — same dequant (int8 * per-row scale in fp32), same masked-score /
+    m-l-acc update order — so interpret-mode kernel output is bit-exact
+    against this reference, not merely close. Page-table slots at or past
+    `lengths` contribute an exact no-op update (corr == 1, p == 0), which is
+    float-identical to the kernel skipping the block.
+    """
+    B, H, d = q.shape
+    N, K, ps, _ = k_pages.shape
+    P = page_table.shape[1]
+    group = H // K
+    scale = 1.0 / math.sqrt(d)
+    qg = (q.astype(jnp.float32) * scale).reshape(B, K, group, d)
+
+    m = jnp.full((B, K, group), -1.0e30, jnp.float32)
+    l = jnp.zeros((B, K, group), jnp.float32)
+    acc = jnp.zeros((B, K, group, d), jnp.float32)
+    for it in range(P):
+        pid = page_table[:, it]                               # (B,)
+        k = k_pages[pid].astype(jnp.float32) * k_scale[pid][..., None]
+        v = v_pages[pid].astype(jnp.float32) * v_scale[pid][..., None]
+        s = jnp.einsum("bkgd,bkpd->bkgp", qg, k)
+        tpos = it * ps + jnp.arange(ps, dtype=jnp.int32)
+        s = jnp.where(tpos[None, None, None, :] <
+                      lengths[:, None, None, None], s, -1.0e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(s <= -1.0e30 / 2, 0.0, p)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bkgp,bkpd->bkgd", p, v)
+        m = m_new
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, H, d).astype(q.dtype)
+
+
+def paged_gqa_decode_quant_ref(q: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array, k_scale: jax.Array,
+                               v_scale: jax.Array, page_table: jax.Array,
+                               lengths: jax.Array) -> jax.Array:
+    """Vectorized quantized-page oracle — the serving `ref` backend.
+
+    Same signature as the kernel wrapper; gathers pages and scales densely
+    and runs the single-shot masked softmax of `paged_gqa_decode_ref`. The
+    per-row scales factor out of the dot products, so they are folded into
+    the scores (K scale) and the softmax weights (V scale) instead of
+    materializing dequantized (B, K, T, d) pools. Numerically equivalent to
+    the kernel within ~1e-6 but not bit-exact (different reduction order);
+    `paged_gqa_decode_quant_mirror_ref` is the bit-level oracle."""
+    B, H, d = q.shape
+    k = gather_pages(k_pages, page_table).astype(jnp.float32)
+    v = gather_pages(v_pages, page_table).astype(jnp.float32)
+    ks = gather_page_scales(k_scale, page_table)             # (B, K, T)
+    vs = gather_page_scales(v_scale, page_table)
+    K, T = k.shape[1], k.shape[2]
+    group = H // K
+    qg = (q.astype(jnp.float32) / math.sqrt(d)).reshape(B, K, group, d)
+    s = jnp.einsum("bkgd,bktd->bkgt", qg, k) * ks[:, :, None, :]
+    valid = jnp.arange(T)[None, :] < lengths[:, None]        # (B, T)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    out = jnp.einsum("bkgt,bktd->bkgd", p * vs[:, :, None, :], v)
+    return out.reshape(B, H, d).astype(q.dtype)
+
 
 def gather_pages(pool: jax.Array, page_table: jax.Array) -> jax.Array:
     """pool: (N, K, ps, d); page_table: (B, P) int32 -> dense (B, K, P*ps, d)."""
@@ -37,13 +134,13 @@ def paged_gqa_decode_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     K, ps = k_pages.shape[1], k_pages.shape[2]
     T = page_table.shape[1] * ps
     group = H // K
-    k = gather_pages(k_pages, page_table)
-    v = gather_pages(v_pages, page_table)
+    k = _gather_pool_f32(k_pages, page_table)
+    v = _gather_pool_f32(v_pages, page_table)
     qg = (q.astype(jnp.float32) / math.sqrt(d)).reshape(B, K, group, d)
-    s = jnp.einsum("bkgd,bktd->bkgt", qg, k.astype(jnp.float32))
+    s = jnp.einsum("bkgd,bktd->bkgt", qg, k)
     valid = jnp.arange(T)[None, :] < lengths[:, None]        # (B, T)
     s = jnp.where(valid[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     p = jnp.where(valid[:, None, None, :], p, 0.0)
-    out = jnp.einsum("bkgt,bktd->bkgd", p, v.astype(jnp.float32))
+    out = jnp.einsum("bkgt,bktd->bkgd", p, v)
     return out.reshape(B, H, d).astype(q.dtype)

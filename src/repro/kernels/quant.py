@@ -1,0 +1,169 @@
+"""Shared symmetric quantization helpers for kernels and KV page pools.
+
+One home for the scale/round/clip logic that `kernels/int8_matmul` and the
+quantized paged KV cache both use, so the write paths (prefill scatter,
+decode row append, shared-prefix rewrite) and the read paths (jnp reference,
+fused in-register dequant kernel) quantize identically — bit-for-bit.
+
+Two storage formats:
+
+  * int8 — symmetric per-row scales: each (token row, kv head) keeps a
+    float32 scale ``s = max(|x|, eps) / 127`` alongside the int8 payload.
+    Row granularity matters for the paged cache: a decode step appends one
+    token row into an existing page, and per-row scales make that append
+    local (no requantization of rows already in the page). Quantization is
+    idempotent per row (the max element always maps to +-127, so a
+    dequantize -> requantize round trip reproduces the same int8 codes).
+  * fp8 (E4M3) — scale-free: the per-element exponent bits play the role of
+    the group scale, so pages store raw ``float8_e4m3fn`` values at exactly
+    1 byte/element. E4M3 has no inf and overflows to NaN, so the cast clips
+    to the finite range (+-448) first.
+
+`kv_dtype_spec` maps a serving-level kv_dtype name to (pool dtype,
+bytes/element, scale bytes/row) so `serve.paged.page_bytes` and the
+Stage-I ledgers account the true physical footprint.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+INT8_QMAX = 127.0
+SCALE_EPS = 1e-8
+FP8_DTYPE = jnp.float8_e4m3fn
+FP8_MAX = float(jnp.finfo(jnp.float8_e4m3fn).max)        # 448.0
+
+
+def quantize_rows(x: jax.Array):
+    """Symmetric per-row int8 quantization: x ~= q * s (s keeps dims)."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    s = jnp.maximum(amax, SCALE_EPS) / INT8_QMAX
+    q = jnp.clip(jnp.round(x / s), -INT8_QMAX, INT8_QMAX).astype(jnp.int8)
+    return q, s.astype(jnp.float32)
+
+
+def quantize_cols(w: jax.Array):
+    """Symmetric per-column int8 quantization: w ~= q * s."""
+    amax = jnp.max(jnp.abs(w), axis=0, keepdims=True)
+    s = jnp.maximum(amax, SCALE_EPS) / INT8_QMAX
+    q = jnp.clip(jnp.round(w / s), -INT8_QMAX, INT8_QMAX).astype(jnp.int8)
+    return q, s.astype(jnp.float32)
+
+
+def quantize_page_rows(x: jax.Array):
+    """Per-row int8 for page pools: (..., rows, d) -> q (..., rows, d) int8
+    and s (..., rows) float32, one scale per row (the last axis is the
+    quantization group)."""
+    x = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    s = jnp.maximum(amax, SCALE_EPS) / INT8_QMAX
+    q = jnp.clip(jnp.round(x / s[..., None]),
+                 -INT8_QMAX, INT8_QMAX).astype(jnp.int8)
+    return q, s.astype(jnp.float32)
+
+
+def dequantize_page_rows(q: jax.Array, s: jax.Array) -> jax.Array:
+    """Inverse of `quantize_page_rows`: q (..., rows, d), s (..., rows)."""
+    return q.astype(jnp.float32) * s[..., None].astype(jnp.float32)
+
+
+def to_fp8(x: jax.Array) -> jax.Array:
+    """Saturating cast to E4M3 (values beyond +-448 clip, never NaN)."""
+    return jnp.clip(x.astype(jnp.float32), -FP8_MAX, FP8_MAX).astype(FP8_DTYPE)
+
+
+# fp8 pools are STORED as uint8 bit codes, not as float8 arrays: CPU XLA
+# treats the ml_dtypes float8 types as exotic everywhere — gathers, scatters
+# and especially the lax.scan slice/stack over stacked per-layer pools run
+# 10-100x slower than the same ops on u8 (measured: a pass-through scan over
+# (L, N, K, ps, d) pools is ~1.3 ms as float8_e4m3fn vs ~14 us as uint8).
+# The bit pattern is identical either way; `to_fp8_codes` / `from_fp8`
+# bitcast at the few sites that touch values.
+FP8_STORAGE_DTYPE = jnp.dtype(jnp.uint8)
+
+
+def is_fp8_pool(dtype) -> bool:
+    """True for a KV pool holding E4M3 codes (stored u8 or native fp8)."""
+    dt = jnp.dtype(dtype)
+    return dt == FP8_STORAGE_DTYPE or dt == jnp.dtype(FP8_DTYPE)
+
+
+def to_fp8_codes(x: jax.Array) -> jax.Array:
+    """Saturating E4M3 cast, returned as uint8 storage codes."""
+    return jax.lax.bitcast_convert_type(to_fp8(x), FP8_STORAGE_DTYPE)
+
+
+_FP8_F32_TABLE = None
+
+
+def from_fp8(x: jax.Array) -> jax.Array:
+    """E4M3 (as float8 values or uint8 codes) -> float32 by 256-entry table
+    lookup. Bit-identical to ``x.astype(float32)`` of the float8 view but
+    measurably faster on CPU XLA, where the widening convert is not
+    vectorized — and the jnp reference attention is the decode hot path
+    whenever there is no TPU."""
+    global _FP8_F32_TABLE
+    if _FP8_F32_TABLE is None:
+        import numpy as np
+        # kept as numpy: a cached jax.Array created under a trace would
+        # leak a tracer; as a numpy constant it folds into each jaxpr
+        _FP8_F32_TABLE = np.arange(256, dtype=np.uint8).view(
+            np.dtype(FP8_DTYPE)).astype(np.float32)
+    idx = (x if x.dtype == FP8_STORAGE_DTYPE
+           else jax.lax.bitcast_convert_type(x, jnp.uint8)).astype(jnp.int32)
+    return jnp.take(jnp.asarray(_FP8_F32_TABLE), idx, axis=0)
+
+
+@dataclasses.dataclass(frozen=True)
+class KVDtypeSpec:
+    """Resolved kv_dtype: pool storage dtype plus physical byte accounting."""
+    name: str
+    pool_dtype: Any
+    itemsize: int                 # payload bytes per cached element
+    scale_bytes_per_row: int      # extra bytes per (token row, kv head)
+    quantized: bool
+
+    @property
+    def has_scales(self) -> bool:
+        return self.scale_bytes_per_row > 0
+
+
+_FLOAT_KV_DTYPES = {
+    "fp32": jnp.float32,
+    "bf16": jnp.bfloat16,
+    "fp16": jnp.float16,
+}
+
+
+def kv_dtype_spec(name: str, native: Optional[Any] = None) -> KVDtypeSpec:
+    """Resolve a serving-level kv_dtype name.
+
+    "native" (the default knob) stores pages in `native` (the model compute
+    dtype) — the pre-quantization behaviour. "fp32"/"bf16"/"fp16" force a
+    float pool dtype; "int8" selects per-row-scale int8 pools; "fp8"
+    selects scale-free E4M3 pools.
+    """
+    if name == "native":
+        if native is None:
+            raise ValueError("kv_dtype='native' needs the model dtype")
+        dt = jnp.dtype(native)
+        return KVDtypeSpec("native", dt, dt.itemsize, 0, False)
+    if name in _FLOAT_KV_DTYPES:
+        dt = jnp.dtype(_FLOAT_KV_DTYPES[name])
+        return KVDtypeSpec(name, dt, dt.itemsize, 0, False)
+    if name == "int8":
+        return KVDtypeSpec("int8", jnp.dtype(jnp.int8), 1, 4, True)
+    if name == "fp8":
+        # storage dtype is uint8: the pools hold E4M3 bit codes (see the
+        # FP8_STORAGE_DTYPE note above); `from_fp8` decodes at read sites
+        return KVDtypeSpec("fp8", FP8_STORAGE_DTYPE, 1, 0, True)
+    raise ValueError(f"unknown kv_dtype {name!r} (want native/fp32/bf16/"
+                     f"fp16/int8/fp8)")
+
+
+def kv_dtype_bytes(name: str, native: Optional[Any] = None) -> int:
+    """Payload bytes/element for a kv_dtype name (model-free simulators)."""
+    return kv_dtype_spec(name, native).itemsize

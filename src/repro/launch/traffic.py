@@ -18,12 +18,14 @@ import argparse
 import json
 
 from repro.configs import resolve_arch
-from repro.core.explorer import MIB, sweep
+from repro.core.explorer import MIB, min_capacity_mib, sweep
 from repro.traffic.campaign import DEFAULT_BANKS, CampaignReport, run_campaign
 from repro.traffic.controller import ControllerConfig
 from repro.traffic.generators import LengthModel
 
 MHA_REFERENCE = "gpt2-xl"
+
+KV_DTYPES = ["fp32", "bf16", "fp16", "int8", "fp8"]
 
 
 def build_report_dict(report: CampaignReport) -> dict:
@@ -33,6 +35,7 @@ def build_report_dict(report: CampaignReport) -> dict:
         rows.append({
             "arch": r.scenario.arch, "arrival": r.scenario.arrival,
             "rate": r.scenario.rate, "seed": r.scenario.seed,
+            "kv_dtype": r.scenario.kv_dtype,
             "capacity_mib": r.capacity_mib, "banks": r.banks,
             "peak_mib": r.peak_mib, "mean_mib": r.mean_mib,
             "e_none_j": c.none.e_total, "e_oracle_j": c.oracle.e_total,
@@ -66,6 +69,12 @@ def main() -> None:
                          "fan-out width for agentic_fanout)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="KV page size [tokens] for shared workloads")
+    ap.add_argument("--kv-dtype", nargs="+", default=["bf16"],
+                    choices=KV_DTYPES,
+                    help="KV-cache dtype(s); more than one runs the "
+                         "campaign once per dtype on identical request "
+                         "streams and prints the quantized-KV "
+                         "energy frontier")
     ap.add_argument("--rate", nargs="+", type=float, default=[4.0],
                     help="mean request rate(s) [req/s]")
     ap.add_argument("--seed", nargs="+", type=int, default=[0])
@@ -110,21 +119,27 @@ def main() -> None:
     # dedupe, keep order
     archs = list(dict.fromkeys(archs))
 
+    kv_dtypes = list(dict.fromkeys(args.kv_dtype))
     print(f"traffic campaign: models={archs} arrivals={args.arrival} "
           f"rates={args.rate} seeds={args.seed} horizon={args.horizon}s "
-          f"slots={args.slots} max_len={args.max_len}")
+          f"slots={args.slots} max_len={args.max_len} "
+          f"kv_dtype={kv_dtypes}")
 
-    report = run_campaign(
-        archs, arrivals=args.arrival, rates=args.rate, seeds=args.seed,
-        horizon_s=args.horizon, num_slots=args.slots, max_len=args.max_len,
-        capacities_mib=args.capacity, banks=args.banks,
-        ctrl=ControllerConfig(alpha=args.alpha,
-                              hysteresis_multiple=args.hysteresis),
-        lengths=LengthModel(max_len=args.max_len),
-        resample_dt=args.resample_dt, fast_backend=args.fast_backend,
-        backend=args.backend, prune=args.prune, fidelity=args.fidelity,
-        workload=args.workload, prefix_len=args.prefix_len,
-        sharing=args.sharing, page_size=args.page_size)
+    reports = {}
+    for dt in kv_dtypes:
+        reports[dt] = run_campaign(
+            archs, arrivals=args.arrival, rates=args.rate, seeds=args.seed,
+            horizon_s=args.horizon, num_slots=args.slots,
+            max_len=args.max_len,
+            capacities_mib=args.capacity, banks=args.banks,
+            ctrl=ControllerConfig(alpha=args.alpha,
+                                  hysteresis_multiple=args.hysteresis),
+            lengths=LengthModel(max_len=args.max_len),
+            resample_dt=args.resample_dt, fast_backend=args.fast_backend,
+            backend=args.backend, prune=args.prune, fidelity=args.fidelity,
+            workload=args.workload, prefix_len=args.prefix_len,
+            sharing=args.sharing, page_size=args.page_size, kv_dtype=dt)
+    report = reports[kv_dtypes[0]]
 
     if args.workload != "plain":
         print(f"\n# prefix sharing ({args.workload}, sharing={args.sharing}, "
@@ -186,9 +201,45 @@ def main() -> None:
         print(table.format())
         break
 
+    # ---- quantized-KV energy frontier ---------------------------------------
+    # every dtype leg saw the identical request stream; Stage II is swept at
+    # the capacity the WIDEST dtype's trace needs, so shrinking bytes shows
+    # up as gating headroom (dB1% = banked+gated energy vs monolithic B=1)
+    # rather than as a smaller memory
+    if len(reports) > 1:
+        wide = max(kv_dtypes,
+                   key=lambda d: reports[d].rows[0].scenario.kv_dtype_bytes
+                   if reports[d].rows else 0)
+        print(f"\n# quantized-KV energy frontier (Stage-II at the "
+              f"{wide}-trace capacity)")
+        for (arch, tkey), wide_sim in sorted(reports[wide].sims.items()):
+            cap_mib = max(min_capacity_mib(wide_sim.trace.peak_needed()), 16)
+            print(f"  {arch} {tkey[0]}@{tkey[1]:g}/s seed={tkey[2]} "
+                  f"(C={cap_mib} MiB):")
+            print(f"    {'kv_dtype':>8} {'B/el':>4} {'peak[MiB]':>9} "
+                  f"{'E_online[mJ]':>12} {'dNone%':>7} {'E_bank[mJ]':>10} "
+                  f"{'dB1%':>7}")
+            for dt in kv_dtypes:
+                rep = reports[dt]
+                best = {(r.scenario.arch, r.scenario.traffic_key): r
+                        for r in rep.best_per_scenario()}.get((arch, tkey))
+                sim = rep.sims.get((arch, tkey))
+                if best is None or sim is None:
+                    continue
+                brow = sweep(sim.bundle, mem_name="kv",
+                             capacities_mib=[cap_mib]).best()
+                print(f"    {dt:>8} {best.scenario.kv_dtype_bytes:>4} "
+                      f"{best.peak_mib:>9.1f} {best.e_online * 1e3:>12.2f} "
+                      f"{best.comparison.online_vs_none_pct:>+7.1f} "
+                      f"{brow.result.e_total * 1e3:>10.2f} "
+                      f"{brow.delta_e_pct:>+7.1f}")
+
     if args.json:
+        payload = build_report_dict(report) if len(reports) == 1 else {
+            "rows": [row for dt in kv_dtypes
+                     for row in build_report_dict(reports[dt])["rows"]]}
         with open(args.json, "w") as f:
-            json.dump(build_report_dict(report), f, indent=1)
+            json.dump(payload, f, indent=1)
         print(f"\nwrote {args.json}")
 
 

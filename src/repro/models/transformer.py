@@ -26,6 +26,7 @@ from repro.models import ffn as ffn_mod
 from repro.models import moe as moe_mod
 from repro.models import rglru as rglru_mod
 from repro.models import ssm as ssm_mod
+from repro.kernels import quant
 from repro.models.common import (PTpl, abstract_params, apply_norm, apply_rope,
                                  cross_entropy, embed_template, embed_tokens,
                                  init_params, lm_logits, norm_template,
@@ -249,18 +250,36 @@ def cache_specs(cfg, batch: int, cache_len: int, mesh,
 PAGED_NULL_PAGE = 0
 
 
+def _pool_cast(x: jax.Array, dtype) -> jax.Array:
+    """Cast KV rows to a pool dtype. fp8 pools store E4M3 bit codes in
+    uint8 (see `quant.FP8_STORAGE_DTYPE`), and the cast saturates because
+    E4M3 overflows to NaN, not inf."""
+    if jnp.dtype(dtype) == quant.FP8_STORAGE_DTYPE:
+        return quant.to_fp8_codes(x)
+    if jnp.dtype(dtype) == jnp.dtype(quant.FP8_DTYPE):
+        return quant.to_fp8(x)
+    return x.astype(dtype)
+
+
 def init_paged_cache(cfg, num_slots: int, num_pages: int, page_size: int,
-                     max_pages_per_slot: int, dtype=jnp.bfloat16) -> dict:
+                     max_pages_per_slot: int, dtype=jnp.bfloat16,
+                     kv_dtype: Optional[str] = None) -> dict:
     """Paged decode state: per-layer page pools shared by all slots, one page
     table + true position per slot. Recurrent (SSM / RG-LRU) blocks keep
     their fixed-size per-slot state dense, batched over slots — only
     attention KV grows with context, so only it is paged. Sliding-window /
-    chunked layers are bounded by construction and not supported here."""
+    chunked layers are bounded by construction and not supported here.
+
+    `kv_dtype` selects the page storage format (see `kernels.quant`):
+    None/"native" keeps pages in `dtype`; "int8" stores int8 payload pools
+    plus per-row float32 scale pools ("ks"/"vs"); "fp8" stores scale-free
+    E4M3 pools. Recurrent state always stays in `dtype`."""
     pat = cfg.block_pattern
     if any(k in ("local", "chunked") for k in pat):
         raise NotImplementedError(
             "paged decode supports full-attention (+ssm/rglru) stacks; "
             "window-bounded layers gain nothing from paging")
+    spec = quant.kv_dtype_spec(kv_dtype or "native", native=dtype)
     n_rep = cfg.num_layers // len(pat)
     tail_kinds = cfg.layer_kinds()[n_rep * len(pat):]
 
@@ -269,8 +288,14 @@ def init_paged_cache(cfg, num_slots: int, num_pages: int, page_size: int,
             return a if stack is None else jnp.broadcast_to(a, (stack,) + a.shape)
         if kind == "full":
             z = jnp.zeros((num_pages, cfg.num_kv_heads, page_size,
-                           cfg.head_dim), dtype)
-            return {"kp": maybe_stack(z), "vp": maybe_stack(z)}
+                           cfg.head_dim), spec.pool_dtype)
+            e = {"kp": maybe_stack(z), "vp": maybe_stack(z)}
+            if spec.has_scales:
+                zs = jnp.zeros((num_pages, cfg.num_kv_heads, page_size),
+                               jnp.float32)
+                e["ks"] = maybe_stack(zs)
+                e["vs"] = maybe_stack(zs)
+            return e
         if kind == "rglru":
             c = rglru_mod.init_rglru_cache(cfg, num_slots, dtype)
         else:
@@ -303,16 +328,31 @@ def write_prefill_to_pages(cfg, paged: dict, dense: dict, slot,
             kp = entry["kp"]
             ps = kp.shape[-2]
 
-            def put(pool, dense_kv):
+            def to_pages(x):
                 # (..., 1, npg*ps, K, d) -> (..., npg, K, ps, d)
-                x = dense_kv.astype(pool.dtype)
                 if stacked:
                     n, T, K, d = x.shape[0], x.shape[2], x.shape[3], x.shape[4]
-                    x = x.reshape(n, npg, ps, K, d).transpose(0, 1, 3, 2, 4)
-                    return pool.at[:, page_ids].set(x)
+                    return x.reshape(n, npg, ps, K, d).transpose(0, 1, 3, 2, 4)
                 T, K, d = x.shape[1], x.shape[2], x.shape[3]
-                x = x.reshape(npg, ps, K, d).transpose(0, 2, 1, 3)
-                return pool.at[page_ids].set(x)
+                return x.reshape(npg, ps, K, d).transpose(0, 2, 1, 3)
+
+            def scatter(pool, x):
+                return (pool.at[:, page_ids].set(x) if stacked
+                        else pool.at[page_ids].set(x))
+
+            if "ks" in entry:                    # int8: quantize per row
+                def put_q(pool, spool, dense_kv):
+                    q8, s = quant.quantize_page_rows(to_pages(
+                        dense_kv.astype(jnp.float32)))
+                    return scatter(pool, q8), scatter(spool, s)
+
+                kp_n, ks_n = put_q(kp, entry["ks"], d_entry["k"])
+                vp_n, vs_n = put_q(entry["vp"], entry["vs"], d_entry["v"])
+                return {"kp": kp_n, "vp": vp_n, "ks": ks_n, "vs": vs_n}
+
+            def put(pool, dense_kv):
+                return scatter(pool, to_pages(_pool_cast(dense_kv,
+                                                         pool.dtype)))
 
             return {"kp": put(kp, d_entry["k"]), "vp": put(entry["vp"],
                                                            d_entry["v"])}
@@ -374,24 +414,37 @@ def gather_prefix_pages(cfg, paged: dict, page_ids: jax.Array,
     """Collect the first `n_rows` KV rows stored in `page_ids` (table order)
     as a dense prefix pytree {"slots": [{"k","v"}...], "tail": [...]} with
     leaves (n_rep, 1, n_rows, K, h) / (1, n_rows, K, h). Rows come back
-    exactly as stored (post-RoPE, pool dtype)."""
+    exactly as stored (post-RoPE, pool dtype); int8 pools dequantize with
+    their per-row scales and fp8 pools decode their E4M3 codes, both
+    returning float32 rows."""
     _require_pure_full(cfg, "gather_prefix_pages")
 
-    def take(pool, stacked: bool):
+    def take(pool, spool, stacked: bool):
+        fp8 = pool.dtype == quant.FP8_STORAGE_DTYPE
         if stacked:
             x = pool[:, page_ids]                      # (n, npg, K, ps, h)
+            if spool is not None:
+                x = quant.dequantize_page_rows(x, spool[:, page_ids])
+            elif fp8:
+                x = quant.from_fp8(x)
             n, npg, K, ps, h = x.shape
             x = x.transpose(0, 1, 3, 2, 4).reshape(n, npg * ps, K, h)
             return x[:, None, :n_rows]                 # (n, 1, rows, K, h)
         x = pool[page_ids]                             # (npg, K, ps, h)
+        if spool is not None:
+            x = quant.dequantize_page_rows(x, spool[page_ids])
+        elif fp8:
+            x = quant.from_fp8(x)
         npg, K, ps, h = x.shape
         x = x.transpose(0, 2, 1, 3).reshape(npg * ps, K, h)
         return x[None, :n_rows]                        # (1, rows, K, h)
 
     return {
-        "slots": [{"k": take(e["kp"], True), "v": take(e["vp"], True)}
+        "slots": [{"k": take(e["kp"], e.get("ks"), True),
+                   "v": take(e["vp"], e.get("vs"), True)}
                   for e in paged["slots"]],
-        "tail": [{"k": take(e["kp"], False), "v": take(e["vp"], False)}
+        "tail": [{"k": take(e["kp"], e.get("ks"), False),
+                  "v": take(e["vp"], e.get("vs"), False)}
                  for e in paged["tail"]],
     }
 
@@ -417,28 +470,46 @@ def write_shared_prefill_to_pages(cfg, paged: dict, suffix: dict, head: dict,
     page) followed by `suffix` (the freshly computed suffix KV) page-aligned
     into `fresh_ids`. Sets pos = |shared|*ps + j + |suffix| and activates
     the slot. With empty `shared_ids`/`head` this degenerates to a plain
-    paged admission of a full prefill."""
+    paged admission of a full prefill. int8 pools requantize the written
+    rows per row — idempotent for `head` rows that were dequantized from
+    the donor's pages, so shared pages stay quantized and bit-stable."""
     _require_pure_full(cfg, "write_shared_prefill_to_pages")
     n_shared = shared_ids.shape[0]
     npg_f = fresh_ids.shape[0]
 
-    def put(pool, head_x, suf_x, stacked: bool):
+    def put(pool, spool, head_x, suf_x, stacked: bool):
+        ps = pool.shape[-2]
+        quantized = spool is not None
+        cast = ((lambda a: a.astype(jnp.float32)) if quantized
+                else (lambda a: _pool_cast(a, pool.dtype)))
         if stacked:
-            rows = jnp.concatenate(
-                [head_x[:, 0], suf_x[:, 0].astype(pool.dtype)], axis=1)
+            rows = jnp.concatenate([cast(head_x[:, 0]), cast(suf_x[:, 0])],
+                                   axis=1)
             n, r, K, h = rows.shape
-            ps = pool.shape[-2]
             rows = jnp.pad(rows, ((0, 0), (0, npg_f * ps - r),
                                   (0, 0), (0, 0)))
             x = rows.reshape(n, npg_f, ps, K, h).transpose(0, 1, 3, 2, 4)
-            return pool.at[:, fresh_ids].set(x)
-        rows = jnp.concatenate([head_x[0], suf_x[0].astype(pool.dtype)],
-                               axis=0)
+            if quantized:
+                q8, s = quant.quantize_page_rows(x)
+                return (pool.at[:, fresh_ids].set(q8),
+                        spool.at[:, fresh_ids].set(s))
+            return pool.at[:, fresh_ids].set(x), None
+        rows = jnp.concatenate([cast(head_x[0]), cast(suf_x[0])], axis=0)
         r, K, h = rows.shape
-        ps = pool.shape[-2]
         rows = jnp.pad(rows, ((0, npg_f * ps - r), (0, 0), (0, 0)))
         x = rows.reshape(npg_f, ps, K, h).transpose(0, 2, 1, 3)
-        return pool.at[fresh_ids].set(x)
+        if quantized:
+            q8, s = quant.quantize_page_rows(x)
+            return pool.at[fresh_ids].set(q8), spool.at[fresh_ids].set(s)
+        return pool.at[fresh_ids].set(x), None
+
+    def entry_out(e, hd, sf, stacked: bool):
+        kp, ks = put(e["kp"], e.get("ks"), hd["k"], sf["k"], stacked)
+        vp, vs = put(e["vp"], e.get("vs"), hd["v"], sf["v"], stacked)
+        ne = {"kp": kp, "vp": vp}
+        if ks is not None:
+            ne["ks"], ne["vs"] = ks, vs
+        return ne
 
     ps = paged["slots"][0]["kp"].shape[-2] if paged["slots"] \
         else paged["tail"][0]["kp"].shape[-2]
@@ -449,12 +520,10 @@ def write_shared_prefill_to_pages(cfg, paged: dict, suffix: dict, head: dict,
 
     out = dict(paged)
     out["slots"] = [
-        {"kp": put(e["kp"], hd["k"], sf["k"], True),
-         "vp": put(e["vp"], hd["v"], sf["v"], True)}
+        entry_out(e, hd, sf, True)
         for e, hd, sf in zip(paged["slots"], head["slots"], suffix["slots"])]
     out["tail"] = [
-        {"kp": put(e["kp"], hd["k"], sf["k"], False),
-         "vp": put(e["vp"], hd["v"], sf["v"], False)}
+        entry_out(e, hd, sf, False)
         for e, hd, sf in zip(paged["tail"], head["tail"], suffix["tail"])]
     row = jnp.full((paged["page_table"].shape[1],), PAGED_NULL_PAGE,
                    jnp.int32)
@@ -469,14 +538,14 @@ def write_shared_prefill_to_pages(cfg, paged: dict, suffix: dict, head: dict,
 
 def copy_pages(cfg, paged: dict, src: jax.Array, dst: jax.Array) -> dict:
     """COW split: duplicate page `src` into `dst` across every layer pool
-    (one jitted call, scalars traced — compiles once per pool geometry)."""
+    (one jitted call, scalars traced — compiles once per pool geometry).
+    Quantized pools copy payload and per-row scale pools alike, so COW
+    clones stay quantized bit-for-bit."""
     _require_pure_full(cfg, "copy_pages")
     out = dict(paged)
-    out["slots"] = [{"kp": e["kp"].at[:, dst].set(e["kp"][:, src]),
-                     "vp": e["vp"].at[:, dst].set(e["vp"][:, src])}
+    out["slots"] = [{key: a.at[:, dst].set(a[:, src]) for key, a in e.items()}
                     for e in paged["slots"]]
-    out["tail"] = [{"kp": e["kp"].at[dst].set(e["kp"][src]),
-                    "vp": e["vp"].at[dst].set(e["vp"][src])}
+    out["tail"] = [{key: a.at[dst].set(a[src]) for key, a in e.items()}
                    for e in paged["tail"]]
     return out
 
@@ -539,7 +608,8 @@ def apply_block_decode_paged(cfg, kind: str, p: dict, x: jax.Array,
     kernel at exact per-slot lengths — no max-length mask. Recurrent blocks
     are position-independent and reuse the dense decode path."""
     if kind == "full":
-        from repro.kernels.paged_gqa_decode import paged_gqa_decode
+        from repro.kernels.paged_gqa_decode import (paged_gqa_decode,
+                                                    paged_gqa_decode_quant)
         y = apply_norm(cfg, p["norm1"], x)
         q, k, v = attn.project_qkv(cfg, p["attn"], y, y)
         if cfg.pos_emb == "rope":
@@ -551,10 +621,27 @@ def apply_block_decode_paged(cfg, kind: str, p: dict, x: jax.Array,
         B = x.shape[0]
         pidx = page_table[jnp.arange(B), jnp.clip(pos // ps, 0, P - 1)]
         off = pos % ps
-        kp = kp.at[pidx, :, off].set(k[:, 0].astype(kp.dtype))
-        vp = vp.at[pidx, :, off].set(v[:, 0].astype(vp.dtype))
-        o = paged_gqa_decode(q[:, 0], kp, vp, page_table, pos + 1,
-                             backend=attn_backend)
+        if "ks" in cache:
+            # int8 pages: quantize the appended row per (slot, kv head) and
+            # attend with the fused in-register-dequant kernel. Per-row
+            # scales make the append local — rows already in the page keep
+            # their codes and scales.
+            ks, vs = cache["ks"], cache["vs"]
+            qk, sk = quant.quantize_page_rows(k[:, 0].astype(jnp.float32))
+            qv, sv = quant.quantize_page_rows(v[:, 0].astype(jnp.float32))
+            kp = kp.at[pidx, :, off].set(qk)
+            vp = vp.at[pidx, :, off].set(qv)
+            ks = ks.at[pidx, :, off].set(sk)
+            vs = vs.at[pidx, :, off].set(sv)
+            o = paged_gqa_decode_quant(q[:, 0], kp, vp, ks, vs, page_table,
+                                       pos + 1, backend=attn_backend)
+            new_entry = {"kp": kp, "vp": vp, "ks": ks, "vs": vs}
+        else:
+            kp = kp.at[pidx, :, off].set(_pool_cast(k[:, 0], kp.dtype))
+            vp = vp.at[pidx, :, off].set(_pool_cast(v[:, 0], vp.dtype))
+            o = paged_gqa_decode(q[:, 0], kp, vp, page_table, pos + 1,
+                                 backend=attn_backend)
+            new_entry = {"kp": kp, "vp": vp}
         o = o.reshape(B, 1, cfg.q_dim) @ p["attn"]["wo"].astype(x.dtype)
         x = x + o
         y2 = apply_norm(cfg, p["norm2"], x)
@@ -563,7 +650,7 @@ def apply_block_decode_paged(cfg, kind: str, p: dict, x: jax.Array,
         else:
             f = ffn_mod.apply_ffn(cfg, p["ffn"], y2)
         x = x + f
-        return x, {"kp": kp, "vp": vp}
+        return x, new_entry
     return apply_block_decode(cfg, kind, p, x, cache, pos)
 
 

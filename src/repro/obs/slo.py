@@ -63,6 +63,10 @@ class SLOSummary:
     e2e_p50_s: float = 0.0
     e2e_p90_s: float = 0.0
     e2e_p99_s: float = 0.0
+    # bytes-based KV occupancy (physical, i.e. after quantization /
+    # sharing): filled by engines that own a Stage-I ledger, zero otherwise
+    kv_peak_bytes: float = 0.0
+    kv_mean_bytes: float = 0.0
 
     def format(self) -> str:
         head = f"{'metric':<22} {'p50':>10} {'p90':>10} {'p99':>10}"
@@ -76,6 +80,11 @@ class SLOSummary:
         lines = [f"serving SLOs over {self.n_requests} requests", head]
         lines += [f"{n:<22} {a:>10.4g} {b:>10.4g} {c:>10.4g}"
                   for n, a, b, c in rows]
+        if self.kv_peak_bytes:
+            lines.append(
+                f"{'kv occupancy [MiB]':<22} peak "
+                f"{self.kv_peak_bytes / 2**20:.3f}  mean "
+                f"{self.kv_mean_bytes / 2**20:.3f}")
         return "\n".join(lines)
 
 

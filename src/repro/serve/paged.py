@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.quant import kv_dtype_spec
 from repro.models.transformer import (init_paged_cache, prefix_tail_rows,
                                       write_prefill_to_pages)
 from repro.obs.slo import RequestTimeline, SLOSummary, SLOTracker
@@ -42,10 +43,19 @@ class OutOfPages(RuntimeError):
     """The page pool cannot cover a request's worst-case page demand."""
 
 
-def page_bytes(cfg, page_size: int, kv_dtype_bytes: int = 2) -> int:
-    """Bytes one KV page pins across all full-attention layers (K + V)."""
+def page_bytes(cfg, page_size: int, kv_dtype_bytes: int = 2,
+               scale_bytes_per_row: int = 0) -> int:
+    """Bytes one KV page pins across all full-attention layers (K + V).
+
+    `scale_bytes_per_row` adds the per-(token row, kv head) quantization
+    scale storage (4 for int8's float32 per-row scales, 0 for float and
+    scale-free fp8 pools) so quantized ledgers account the true physical
+    footprint, scales included."""
     n_full = sum(1 for k in cfg.layer_kinds() if k == "full")
-    return n_full * 2 * page_size * cfg.kv_dim * kv_dtype_bytes
+    b = n_full * 2 * page_size * cfg.kv_dim * kv_dtype_bytes
+    if scale_bytes_per_row:
+        b += n_full * 2 * page_size * cfg.num_kv_heads * scale_bytes_per_row
+    return b
 
 
 def pages_for(tokens: int, page_size: int) -> int:
@@ -106,6 +116,10 @@ class PagedKVLedger:
 
     def occupancy_bytes(self) -> int:
         return self.allocator.n_allocated * self.page_bytes
+
+    def logical_bytes(self) -> int:
+        """Without sharing, logical (per-slot demand) == physical bytes."""
+        return self.occupancy_bytes()
 
     def admit(self, slot: int, n_pages: int, t: float) -> List[int]:
         assert slot not in self.slot_pages, f"slot {slot} already admitted"
@@ -229,7 +243,7 @@ class PagedContinuousBatcher:
                  chunk_steps: int = 16, attn_backend: str = "auto",
                  step_time_s: float = 1e-3, prefill_tok_s: float = 5e-5,
                  prefix_cache: bool = False, collect_logits: bool = False,
-                 telemetry=None):
+                 kv_dtype: str = "native", telemetry=None):
         if not hasattr(model, "decode_step_paged"):
             raise TypeError("model lacks a paged decode path")
         self.model = model
@@ -268,10 +282,16 @@ class PagedContinuousBatcher:
         self._c_miss = tel.counter("serve.paged.prefix_misses")
         self._c_reused = tel.counter("serve.paged.prefix_tokens_reused")
         self._c_wait = tel.counter("serve.paged.backpressure_waits")
+        self._c_dequant = tel.counter("quant.dequant_pages")
         self._g_pages = tel.gauge("serve.paged.pages_in_use")
+        self._g_kv_phys = tel.gauge("serve.paged.kv_bytes_physical")
+        self._g_kv_logical = tel.gauge("serve.paged.kv_bytes_logical")
 
-        kv_bytes = jnp.dtype(model.compute_dtype).itemsize
-        self.page_bytes = page_bytes(self.cfg, page_size, kv_bytes)
+        kv_spec = kv_dtype_spec(kv_dtype, native=model.compute_dtype)
+        self.kv_dtype = kv_spec.name
+        self.kv_quantized = kv_spec.quantized
+        self.page_bytes = page_bytes(self.cfg, page_size, kv_spec.itemsize,
+                                     kv_spec.scale_bytes_per_row)
         self.row_bytes = self.page_bytes // page_size
         if prefix_cache:
             from repro.serve.prefix import SharedKVLedger
@@ -295,7 +315,8 @@ class PagedContinuousBatcher:
 
         self._cache = init_paged_cache(
             self.cfg, num_slots, num_pages, page_size,
-            self.max_pages_per_slot, dtype=model.compute_dtype)
+            self.max_pages_per_slot, dtype=model.compute_dtype,
+            kv_dtype=self.kv_dtype)
         self._prefill = jax.jit(
             lambda p, b, L: model.prefill(p, b, cache_len=L),
             static_argnums=(2,))
@@ -367,6 +388,12 @@ class PagedContinuousBatcher:
         if self._slo is None:
             return SLOSummary()
         s = self._slo.summary()
+        # bytes-based physical occupancy (page count x quantized page_bytes)
+        # next to the latency percentiles — page counts alone hide the
+        # footprint reduction a quantized kv_dtype buys
+        s.kv_peak_bytes = float(self.ledger.trace.peak_needed())
+        s.kv_mean_bytes = float(self.ledger.trace.time_weighted_mean(
+            max(self._sim_t, self.step_time_s)))
         st = self.stats
         st.ttft_p50_s, st.ttft_p99_s = s.ttft_p50_s, s.ttft_p99_s
         st.tbt_p50_s, st.tbt_p99_s = s.tbt_p50_s, s.tbt_p99_s
@@ -394,6 +421,15 @@ class PagedContinuousBatcher:
     def _available_pages(self) -> int:
         return self.ledger.allocator.n_free - sum(self._reserved)
 
+    def _set_page_gauges(self) -> None:
+        """Page-count plus bytes-based occupancy gauges: physical = pool
+        pages held x page_bytes (quantization shrinks page_bytes), logical =
+        the per-slot demand a non-sharing allocator would pin."""
+        n = self.ledger.allocator.n_allocated
+        self._g_pages.set(n)
+        self._g_kv_phys.set(n * self.page_bytes)
+        self._g_kv_logical.set(self.ledger.logical_bytes())
+
     def _retire(self, i: int, req: Request, done: List[Request],
                 t: float) -> None:
         req.finished_s = time.perf_counter()
@@ -408,7 +444,7 @@ class PagedContinuousBatcher:
         self._table[i, :] = 0
         self._c_retired.inc()
         self._c_freed.inc(n)
-        self._g_pages.set(self.ledger.allocator.n_allocated)
+        self._set_page_gauges()
         tl = req.timeline
         if tl is not None and self._slo is not None:
             tl.finish_t = t
@@ -468,7 +504,7 @@ class PagedContinuousBatcher:
         self.slots[i] = req
         self._c_admitted.inc()
         self._c_prefills.inc()
-        self._g_pages.set(self.ledger.allocator.n_allocated)
+        self._set_page_gauges()
         if self.tel.enabled:
             self.tel.add_span("prefill", t_pre, self._sim_t, slot=i,
                               rid=req.rid, tokens=ctx)
@@ -534,6 +570,8 @@ class PagedContinuousBatcher:
             ([match.tail_page] if j else [])
         prefix = self._gather(self._cache,
                               jnp.asarray(gather_ids, jnp.int32), m)
+        if self.kv_quantized and gather_ids:
+            self._c_dequant.inc(len(gather_ids))
         head = prefix_tail_rows(prefix, j)
         logits, suffix = self._prefill_shared(
             self.params, jnp.asarray(prompt[None, m:], jnp.int32), prefix)
@@ -659,10 +697,13 @@ class PagedContinuousBatcher:
             # page-granular access accounting: each step streams the resident
             # pages and appends one row
             ctxs = int(self._ctx[i]) + 1 + np.arange(g)
-            self.access.add_read(
-                "kv", int((np.ceil(ctxs / self.page_size)).sum())
-                * self.page_bytes)
+            pages_read = int((np.ceil(ctxs / self.page_size)).sum())
+            self.access.add_read("kv", pages_read * self.page_bytes)
             self.access.add_write("kv", g * self.row_bytes)
+            if self.kv_quantized and pages_read:
+                # every page the fused kernel streams is dequantized
+                # in-register
+                self._c_dequant.inc(pages_read)
             self._c_steps.inc(g)
             if req.timeline is not None and g:
                 req.timeline.token_ts.extend(

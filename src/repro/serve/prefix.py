@@ -347,6 +347,11 @@ class SharedKVLedger:
     def occupancy_bytes(self) -> int:
         return self.allocator.n_allocated * self.page_bytes
 
+    def logical_bytes(self) -> int:
+        """Sum over slots of their page footprint — what a non-sharing
+        allocator would hold. `occupancy_bytes` <= this; gap = sharing win."""
+        return sum(len(p) for p in self.slot_pages.values()) * self.page_bytes
+
     def _counts(self) -> Tuple[int, int, int]:
         sref = set()
         logical = 0

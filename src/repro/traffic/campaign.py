@@ -54,6 +54,17 @@ class Scenario:
     prefix_len: int = 512
     sharing: int = 8
     page_size: int = 16
+    kv_dtype: str = "bf16"
+
+    @property
+    def kv_dtype_bytes(self) -> int:
+        """Data bytes per cached K/V element for the model-free sims.
+
+        Scale overhead of the int8 pools is excluded here deliberately: the
+        sims account data bytes only, so quantized traces stay exact
+        integer ratios of the bf16 baseline (the golden-trace invariant)."""
+        return {"fp32": 4, "bf16": 2, "fp16": 2, "int8": 1, "fp8": 1}[
+            self.kv_dtype]
 
     @property
     def traffic_key(self) -> Tuple:
@@ -193,12 +204,14 @@ def run_scenario(scn: Scenario, *, capacities_mib: Optional[Sequence[int]],
                                      sharing=scn.sharing, fanout=scn.sharing)
             sim = simulate_prefix_traffic(cfg, reqs, num_slots=scn.num_slots,
                                           page_size=scn.page_size,
-                                          max_len=scn.max_len, seed=scn.seed)
+                                          max_len=scn.max_len, seed=scn.seed,
+                                          kv_dtype_bytes=scn.kv_dtype_bytes)
         else:
             reqs = generate(scn.arrival, scn.rate, scn.horizon_s,
                             seed=scn.seed, lengths=lengths)
             sim = simulate_traffic(cfg, reqs, num_slots=scn.num_slots,
-                                   max_len=scn.max_len, fidelity=fidelity)
+                                   max_len=scn.max_len, fidelity=fidelity,
+                                   kv_dtype_bytes=scn.kv_dtype_bytes)
     trace = sim.trace
     if resample_dt:
         trace = trace.resampled(resample_dt, sim.total_time)
@@ -271,6 +284,7 @@ def run_campaign(archs: Sequence[str], *, arrivals: Sequence[str] = ("poisson",)
                  prefix_len: int = 512,
                  sharing: int = 8,
                  page_size: int = 16,
+                 kv_dtype: str = "bf16",
                  telemetry=None) -> CampaignReport:
     """The full grid. Identical (arrival, rate, seed) cells share one request
     stream across architectures, so MHA-vs-GQA rows are directly comparable."""
@@ -284,7 +298,8 @@ def run_campaign(archs: Sequence[str], *, arrivals: Sequence[str] = ("poisson",)
                                    seed=seed, horizon_s=horizon_s,
                                    num_slots=num_slots, max_len=max_len,
                                    workload=workload, prefix_len=prefix_len,
-                                   sharing=sharing, page_size=page_size)
+                                   sharing=sharing, page_size=page_size,
+                                   kv_dtype=kv_dtype)
                     sim, rows, fast = run_scenario(
                         scn, capacities_mib=capacities_mib, banks=banks,
                         ctrl=ctrl, lengths=lengths, resample_dt=resample_dt,

@@ -98,7 +98,7 @@ PREFIX_CASES = {
 }
 
 
-def prefix_case_payload(name: str) -> dict:
+def prefix_case_payload(name: str, kv_dtype_bytes: int = 2) -> dict:
     from repro.traffic.generators import LengthModel, generate_workload
     from repro.traffic.occupancy import simulate_prefix_traffic
 
@@ -113,6 +113,7 @@ def prefix_case_payload(name: str) -> dict:
     sim = simulate_prefix_traffic(cfg, reqs, num_slots=spec["num_slots"],
                                   page_size=spec["page_size"],
                                   max_len=spec["max_len"],
+                                  kv_dtype_bytes=kv_dtype_bytes,
                                   seed=spec["seed"])
     st = sim.stats
     mems = {}
@@ -155,6 +156,45 @@ def prefix_case_payload(name: str) -> dict:
 
 def build_prefix_golden() -> dict:
     return {name: prefix_case_payload(name) for name in sorted(PREFIX_CASES)}
+
+
+# ---------------------------------------------------------------------------
+# Quantized-ledger golden: the SAME prefix scenarios re-priced at 1
+# payload byte/element (int8 / fp8-E4M3 pools). The request streams, page
+# counts and event times are dtype-independent — only the byte scale of
+# the occupancy changes — so these fixtures lock the kv_dtype_bytes
+# plumbing through ledger, traces and access stats, and every `needed`
+# level must be exactly half its bf16 counterpart.
+# ---------------------------------------------------------------------------
+
+QUANT_GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                                 "quant_golden.json")
+
+# name -> (PREFIX_CASES base scenario, payload bytes/element). Scale
+# overhead of int8 pools is deliberately excluded by the model-free
+# simulators (see traffic.campaign.Scenario.kv_dtype_bytes), so int8 and
+# fp8 share the 1-byte geometry.
+QUANT_CASES = {
+    "dsr1d-chat-sysprompt-int8": ("dsr1d-chat-sysprompt", 1),
+    "gpt2-agentic-fanout-fp8": ("gpt2-agentic-fanout", 1),
+}
+
+
+def quant_case_payload(name: str) -> dict:
+    base, nbytes = QUANT_CASES[name]
+    payload = prefix_case_payload(base, kv_dtype_bytes=nbytes)
+    payload["base_case"] = base
+    payload["kv_dtype_bytes"] = nbytes
+    return payload
+
+
+def build_quant_golden() -> dict:
+    return {name: quant_case_payload(name) for name in sorted(QUANT_CASES)}
+
+
+def load_quant_golden() -> dict:
+    with open(QUANT_GOLDEN_PATH) as f:
+        return json.load(f)
 
 
 def load_prefix_golden() -> dict:

@@ -133,6 +133,67 @@ def test_prefix_golden_invariants(case, prefix_golden):
     assert all(v >= 0 for v in phys["obsolete"])
 
 
+# ---------------------------------------------------------------------------
+# Quantized-ledger golden: the same prefix scenarios priced at 1 payload
+# byte/element (int8 / fp8 pools); locks the kv_dtype_bytes plumbing
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def quant_golden():
+    assert os.path.exists(golden_util.QUANT_GOLDEN_PATH), \
+        "missing fixtures: run PYTHONPATH=src python scripts/regen_golden.py"
+    data = golden_util.load_quant_golden()
+    assert sorted(data) == sorted(golden_util.QUANT_CASES)
+    return data
+
+
+@pytest.mark.parametrize("case", sorted(golden_util.QUANT_CASES))
+def test_quant_occupancy_matches_golden(case, quant_golden):
+    got = golden_util.quant_case_payload(case)
+    want = quant_golden[case]
+    errs = []
+    for key in ("n_requests", "stats", "access_reads", "access_writes",
+                "kv_dtype_bytes"):
+        if got[key] != want[key]:
+            errs.append(f"{key}: {got[key]!r} != {want[key]!r}")
+    if got["total_time"] != want["total_time"]:
+        errs.append(f"total_time: {got['total_time']!r} != "
+                    f"{want['total_time']!r}")
+    for m, w in want["mems"].items():
+        g = got["mems"][m]
+        for key in ("n_events", "peak_needed", "peak_total", "final_needed",
+                    "final_obsolete", "needed", "obsolete", "durations"):
+            if g[key] != w[key]:
+                errs.append(f"{m}.{key} mismatch")
+    assert not errs, "\n".join(
+        [f"{case} drifted from quant golden — if intentional, regenerate "
+         f"with scripts/regen_golden.py:"] + errs)
+
+
+@pytest.mark.parametrize("case", sorted(golden_util.QUANT_CASES))
+def test_quant_golden_is_exact_byte_rescale_of_prefix(case, quant_golden,
+                                                      prefix_golden):
+    """The quantized fixture must be the bf16 prefix fixture with every
+    occupancy level scaled by the byte ratio — same events, same times,
+    same page counts. Any other difference means kv_dtype leaked into the
+    host scheduling, which it never may."""
+    want = quant_golden[case]
+    base = prefix_golden[want["base_case"]]
+    ratio = 2 // want["kv_dtype_bytes"]          # bf16 -> 1-byte pools
+    assert ratio == 2
+    assert want["total_time"] == base["total_time"]
+    assert want["stats"] == base["stats"]
+    for m in ("kv", "kv_logical"):
+        w, b = want["mems"][m], base["mems"][m]
+        assert w["n_events"] == b["n_events"]
+        assert w["durations"] == b["durations"]
+        for key in ("peak_needed", "peak_total", "final_needed",
+                    "final_obsolete"):
+            assert w[key] * ratio == b[key], (m, key)
+        assert [v * ratio for v in w["needed"]] == b["needed"]
+        assert [v * ratio for v in w["obsolete"]] == b["obsolete"]
+
+
 def test_fixture_case_coverage(golden):
     """Both paper workloads appear in both phases, and fixtures are sane."""
     phases = {(CASES[n]["arch"], CASES[n]["phase"]) for n in golden}

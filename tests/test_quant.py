@@ -1,0 +1,261 @@
+"""Shared quantization helpers + quantized paged KV cache.
+
+Covers the `kernels.quant` module (round-trip error bounds, requantization
+idempotency, fp8 saturating casts and the uint8 code table), the quantized
+paged-GQA decode kernel against its mirrored jnp reference, and the serving
+regression that matters end to end: an int8 / fp8 `PagedContinuousBatcher`
+must reproduce the fp32 batcher's greedy tokens on the reduced configs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.kernels import quant
+from repro.models import build_model
+from repro.serve import PagedContinuousBatcher, Request
+from repro.serve.paged import page_bytes
+
+
+# ---------------------------------------------------------------------------
+# Property tests (hypothesis)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    from hypothesis.extra import numpy as hnp
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    rows_st = hnp.arrays(
+        np.float32,
+        st.tuples(st.integers(1, 5), st.integers(1, 8), st.integers(1, 16)),
+        elements=st.floats(-1e4, 1e4, width=32, allow_nan=False))
+
+    @given(rows_st)
+    @settings(max_examples=60, deadline=None)
+    def test_roundtrip_error_half_scale(x):
+        """Symmetric rounding: |dequant(quant(x)) - x| <= s/2 per element."""
+        q, s = quant.quantize_page_rows(jnp.asarray(x))
+        err = np.abs(np.asarray(quant.dequantize_page_rows(q, s)) - x)
+        assert (err <= np.asarray(s)[..., None] / 2 + 1e-12).all()
+        assert q.shape == x.shape and q.dtype == jnp.int8
+        assert s.shape == x.shape[:-1] and s.dtype == jnp.float32
+
+    @given(rows_st)
+    @settings(max_examples=60, deadline=None)
+    def test_scale_floor_and_code_range(x):
+        q, s = quant.quantize_page_rows(jnp.asarray(x))
+        assert (np.asarray(s) >= quant.SCALE_EPS / quant.INT8_QMAX).all()
+        assert np.abs(np.asarray(q, np.int32)).max(initial=0) <= 127
+
+    @given(rows_st)
+    @settings(max_examples=60, deadline=None)
+    def test_requantization_idempotent(x):
+        """The COW rewrite path requantizes rows dequantized from a donor
+        page; codes and scales must be bit-stable across that round trip."""
+        q1, s1 = quant.quantize_page_rows(jnp.asarray(x))
+        q2, s2 = quant.quantize_page_rows(quant.dequantize_page_rows(q1, s1))
+        np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+        np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+    @given(hnp.arrays(np.float32, st.tuples(st.integers(1, 4),
+                                            st.integers(1, 32)),
+                      elements=st.floats(-1e4, 1e4, width=32,
+                                         allow_nan=False)))
+    @settings(max_examples=60, deadline=None)
+    def test_fp8_roundtrip_monotone_bounded(x):
+        """E4M3 round trip: saturating (never NaN), error <= 1/8 relative
+        within the finite range (2^-3 mantissa step), codes == values."""
+        y = np.asarray(quant.from_fp8(quant.to_fp8_codes(jnp.asarray(x))))
+        assert np.isfinite(y).all()
+        cl = np.clip(x, -quant.FP8_MAX, quant.FP8_MAX)
+        assert (np.abs(y - cl) <= np.abs(cl) / 8 + 2**-10).all()
+
+
+# ---------------------------------------------------------------------------
+# fp8 code table + saturation
+# ---------------------------------------------------------------------------
+
+def test_fp8_saturates_instead_of_nan():
+    for v in (1000.0, -1000.0, 448.0, -448.0):
+        out = float(quant.from_fp8(quant.to_fp8(jnp.float32(v))))
+        assert out == np.clip(v, -quant.FP8_MAX, quant.FP8_MAX)
+
+
+def test_from_fp8_table_matches_astype_all_256_codes():
+    """The uint8->f32 lookup table must be bit-identical to the ml_dtypes
+    widening convert for every code, NaN patterns included."""
+    codes = jnp.arange(256, dtype=jnp.uint8)
+    via_table = np.asarray(quant.from_fp8(codes))
+    via_astype = np.asarray(
+        jax.lax.bitcast_convert_type(codes, quant.FP8_DTYPE).astype(
+            jnp.float32))
+    np.testing.assert_array_equal(via_table.view(np.uint32),
+                                  via_astype.view(np.uint32))
+
+
+def test_fp8_codes_roundtrip_through_storage_dtype():
+    x = jnp.asarray(np.linspace(-500, 500, 97), jnp.float32)
+    codes = quant.to_fp8_codes(x)
+    assert codes.dtype == quant.FP8_STORAGE_DTYPE
+    np.testing.assert_array_equal(
+        np.asarray(quant.from_fp8(codes)),
+        np.asarray(quant.from_fp8(quant.to_fp8(x))))
+
+
+# ---------------------------------------------------------------------------
+# kv_dtype specs + page accounting
+# ---------------------------------------------------------------------------
+
+def test_kv_dtype_specs():
+    s = quant.kv_dtype_spec("int8")
+    assert (s.itemsize, s.scale_bytes_per_row, s.quantized) == (1, 4, True)
+    s = quant.kv_dtype_spec("fp8")
+    assert (s.itemsize, s.scale_bytes_per_row) == (1, 0)
+    assert s.pool_dtype == quant.FP8_STORAGE_DTYPE
+    assert quant.kv_dtype_spec("native", jnp.bfloat16).itemsize == 2
+    with pytest.raises(ValueError):
+        quant.kv_dtype_spec("int4")
+    with pytest.raises(ValueError):
+        quant.kv_dtype_spec("native")          # needs the model dtype
+
+
+def test_page_bytes_ratios():
+    cfg = reduced(get_arch("tinyllama-1.1b"), layers=2)
+    fp32 = page_bytes(cfg, 16, 4, 0)
+    int8 = page_bytes(cfg, 16, 1, 4)
+    fp8 = page_bytes(cfg, 16, 1, 0)
+    assert fp32 == 4 * fp8                     # fp8 is scale-free: exact 4x
+    assert fp32 / int8 >= 2.0                  # scales cost < half the win
+    assert int8 > fp8                          # the f32 scales are counted
+
+
+def test_int8_matmul_backcompat_reexports():
+    """`kernels.int8_matmul` keeps exporting the quantizers it now shares
+    with the KV pools, and they are literally the same functions."""
+    from repro.kernels.int8_matmul import quantize_cols, quantize_rows
+    assert quantize_rows is quant.quantize_rows
+    assert quantize_cols is quant.quantize_cols
+
+
+# ---------------------------------------------------------------------------
+# Quantized paged kernel vs references
+# ---------------------------------------------------------------------------
+
+def _ragged_case(rng, B=4, H=8, K=2, d=32, ps=8, P=3, N=12):
+    q = jnp.asarray(rng.normal(size=(B, H, d)), jnp.float32)
+    pk = jnp.asarray(rng.normal(size=(N, K, ps, d)), jnp.float32)
+    pv = jnp.asarray(rng.normal(size=(N, K, ps, d)), jnp.float32)
+    lengths = np.array([1, 8, 13, 24], np.int32)[:B]
+    pt = np.zeros((B, P), np.int64)
+    ids = list(range(1, N))
+    rng.shuffle(ids)
+    for b in range(B):
+        for j in range(-(-int(lengths[b]) // ps)):
+            pt[b, j] = ids.pop()
+    return q, pk, pv, jnp.asarray(pt, jnp.int32), jnp.asarray(lengths)
+
+
+def test_quant_kernel_matches_mirror_ref_and_fp32_bound():
+    from repro.kernels.paged_gqa_decode import (
+        paged_gqa_decode, paged_gqa_decode_quant,
+        paged_gqa_decode_quant_mirror_ref, paged_gqa_decode_quant_ref)
+    rng = np.random.default_rng(0)
+    q, pk, pv, pt, lengths = _ragged_case(rng)
+    qk, ks = quant.quantize_page_rows(pk)
+    qv, vs = quant.quantize_page_rows(pv)
+    out = paged_gqa_decode_quant(q, qk, qv, ks, vs, pt, lengths,
+                                 backend="interpret")
+    mirror = paged_gqa_decode_quant_mirror_ref(q, qk, qv, ks, vs, pt, lengths)
+    fast = paged_gqa_decode_quant_ref(q, qk, qv, ks, vs, pt, lengths)
+    fp32 = paged_gqa_decode(q, pk, pv, pt, lengths, backend="interpret")
+    assert float(jnp.abs(out - mirror).max()) < 1e-6
+    assert float(jnp.abs(out - fast).max()) < 1e-5
+    assert float(jnp.abs(out - fp32).max()) < 0.05    # pinned quant error
+
+
+def test_fp32_kernel_accepts_fp8_code_pools():
+    """`paged_gqa_decode` on uint8 E4M3 code pools == the same pools
+    decoded to f32 first (ref backend decodes via the lookup table)."""
+    from repro.kernels.paged_gqa_decode import paged_gqa_decode
+    rng = np.random.default_rng(1)
+    q, pk, pv, pt, lengths = _ragged_case(rng)
+    ck, cv = quant.to_fp8_codes(pk), quant.to_fp8_codes(pv)
+    out = paged_gqa_decode(q, ck, cv, pt, lengths, backend="ref")
+    dec = paged_gqa_decode(q, quant.from_fp8(ck), quant.from_fp8(cv), pt,
+                           lengths, backend="ref")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dec), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Mixed-dtype serving regression
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = reduced(get_arch("tinyllama-1.1b"), layers=2)
+    m = build_model(cfg, compute_dtype=jnp.float32, remat="none")
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _run_tokens(m, params, prompts, kv_dtype, **kw):
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("num_pages", 64)
+    kw.setdefault("max_pages_per_slot", 8)
+    kw.setdefault("chunk_steps", 4)
+    kw.setdefault("attn_backend", "ref")
+    cb = PagedContinuousBatcher(m, params, kv_dtype=kv_dtype, **kw)
+    for i, p in enumerate(prompts):
+        cb.submit(Request(rid=i, tokens=p, max_new_tokens=8))
+    return cb, {r.rid: list(map(int, r.tokens)) for r in cb.run()}
+
+
+def test_quantized_serving_matches_fp32_greedy(small):
+    """The regression that matters: int8 and fp8 batchers reproduce the
+    fp32 batcher's greedy tokens exactly on the reduced config (ragged
+    lengths, slot reuse across admissions)."""
+    cfg, m, params = small
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (5, 17, 9, 26)]
+    _, ref = _run_tokens(m, params, prompts, "fp32")
+    for dt in ("int8", "fp8"):
+        cb, got = _run_tokens(m, params, prompts, dt)
+        assert got == ref, f"{dt} greedy tokens diverged from fp32"
+        assert cb.ledger.allocator.n_allocated == 0
+
+
+def test_quantized_prefix_sharing_matches_fp32(small):
+    """Shared pages stay quantized through radix reuse + COW splits."""
+    cfg, m, params = small
+    rng = np.random.default_rng(8)
+    base = rng.integers(0, cfg.vocab_size, 24).astype(np.int32)
+    prompts = [np.concatenate([base, rng.integers(0, cfg.vocab_size, j)
+                               .astype(np.int32)]) for j in (3, 7, 11)]
+    _, ref = _run_tokens(m, params, prompts, "fp32")
+    for dt in ("int8", "fp8"):
+        cb, got = _run_tokens(m, params, prompts, dt, prefix_cache=True,
+                              max_pages_per_slot=12)
+        assert got == ref, f"{dt} prefix-sharing tokens diverged from fp32"
+        assert cb.stats.prefix_hits > 0
+
+
+def test_quantized_serving_telemetry(small):
+    from repro.obs.telemetry import Telemetry
+    cfg, m, params = small
+    tel = Telemetry(enabled=True)
+    cb, _ = _run_tokens(m, params,
+                        [np.arange(12, dtype=np.int32) % cfg.vocab_size],
+                        "int8", telemetry=tel)
+    assert tel.counter("quant.dequant_pages").value > 0
+    phys = tel.gauge("serve.paged.kv_bytes_physical")
+    logi = tel.gauge("serve.paged.kv_bytes_logical")
+    assert phys.max_value > 0
+    assert phys.max_value % cb.page_bytes == 0
+    assert logi.max_value >= phys.max_value
