@@ -1,0 +1,178 @@
+"""SLA benchmark: chunked-prefill tail latency + forecast pre-wake gating.
+
+Two guarded measurements, written to `BENCH_sla.json`:
+
+  * serving leg — a long-prompt interleave workload (short streaming
+    requests sharing the batcher with 256-token prompts) through the
+    `PagedContinuousBatcher` twice: monolithic prefill vs
+    `prefill_chunk_tokens`. Both runs must emit bit-identical greedy
+    tokens; the chunked run's p99 time-between-tokens (on the logical sim
+    clock, the SLO percentiles' time base) must be <= 0.5x the monolithic
+    run's — a long admission no longer freezes every active stream for the
+    whole prompt.
+  * gating leg — the diurnal traffic scenario through the analytic
+    occupancy simulator, comparing the reactive timeout controller against
+    the PSS-forecast pre-wake controller at the same (C, B): the forecast
+    leg must cut wake violations while staying within +2% energy of the
+    offline oracle.
+
+Run:  PYTHONPATH=src python -m benchmarks.sla_bench [out.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.models import build_model
+from repro.obs import Telemetry
+from repro.serve import PagedContinuousBatcher, Request
+
+DEFAULT_OUT = "BENCH_sla.json"
+TBT_RATIO_BAR = 0.5                  # chunked p99 TBT vs monolithic
+FORECAST_VS_ORACLE_BAR_PCT = 2.0     # forecast energy overhead vs oracle
+
+# long-prompt interleave workload: streaming shorts + fat prompts
+SHORTS = 6
+LONGS = 4
+SHORT_LEN, SHORT_NEW = 8, 64
+LONG_LEN, LONG_NEW = 256, 48
+PAGE_SIZE = 16
+CHUNK_TOKENS = 32
+
+
+def _requests(cfg):
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(SHORTS):
+        reqs.append(Request(rid=i, tokens=rng.integers(
+            0, cfg.vocab_size, SHORT_LEN), max_new_tokens=SHORT_NEW))
+    for i in range(LONGS):
+        reqs.append(Request(rid=SHORTS + i, tokens=rng.integers(
+            0, cfg.vocab_size, LONG_LEN), max_new_tokens=LONG_NEW))
+    return reqs
+
+
+def _serve_leg(model, params, chunk_tokens):
+    worst = -(-(LONG_LEN + LONG_NEW) // PAGE_SIZE) + 1
+    cb = PagedContinuousBatcher(
+        model, params, num_slots=4, page_size=PAGE_SIZE,
+        num_pages=4 * worst + 8, max_pages_per_slot=worst,
+        chunk_steps=8, attn_backend="ref",
+        prefill_chunk_tokens=chunk_tokens,
+        telemetry=Telemetry(enabled=True))
+    for r in _requests(model.cfg):
+        cb.submit(r)
+    t0 = time.perf_counter()
+    done = cb.run()
+    wall = time.perf_counter() - t0
+    assert len(done) == SHORTS + LONGS
+    s = cb.slo_summary()
+    toks = {r.rid: list(r.output) for r in done}
+    return s, toks, cb, wall
+
+
+def _gating_leg():
+    from repro.traffic import ControllerConfig, LengthModel, generate, \
+        simulate_traffic
+    from repro.traffic.controller import ForecastConfig, compare
+    cfg = get_arch("tinyllama-1.1b")
+    reqs = generate("diurnal", 6.0, 30.0, seed=0,
+                    lengths=LengthModel(max_len=2048))
+    sim = simulate_traffic(cfg, reqs, num_slots=8, max_len=2048)
+    dur, occ = sim.trace.occupancy_series(sim.total_time, use="needed")
+    c = compare(dur, occ, capacity=32 * 2**20, banks=8,
+                n_reads=sim.bundle.access.n_reads("kv"),
+                n_writes=sim.bundle.access.n_writes("kv"),
+                cfg=ControllerConfig(), fcfg=ForecastConfig(), backend="ref")
+    return c
+
+
+def bench_sla(out_path: str = DEFAULT_OUT):
+    cfg = reduced(get_arch("tinyllama-1.1b"), layers=2)
+    model = build_model(cfg, compute_dtype=jnp.float32, remat="none")
+    params = model.init(jax.random.PRNGKey(0))
+
+    mono, mono_toks, mono_cb, mono_wall = _serve_leg(model, params, None)
+    chnk, chnk_toks, chnk_cb, chnk_wall = _serve_leg(model, params,
+                                                     CHUNK_TOKENS)
+    assert mono_toks == chnk_toks, \
+        "chunked prefill changed the greedy tokens"
+    ratio = chnk.tbt_p99_s / mono.tbt_p99_s
+
+    c = _gating_leg()
+    f, o = c.forecast, c.online
+
+    report = {
+        "config": f"{cfg.name} ({cfg.num_layers} layers)",
+        "workload": (f"{SHORTS}x({SHORT_LEN} tok prompt, {SHORT_NEW} new) + "
+                     f"{LONGS}x({LONG_LEN} tok prompt, {LONG_NEW} new), "
+                     f"4 slots"),
+        "prefill_chunk_tokens": CHUNK_TOKENS,
+        "mono_tbt_p99_s": mono.tbt_p99_s,
+        "chunked_tbt_p99_s": chnk.tbt_p99_s,
+        "tbt_p99_ratio": ratio,
+        "mono_tbt_p50_s": mono.tbt_p50_s,
+        "chunked_tbt_p50_s": chnk.tbt_p50_s,
+        "chunked_ttft_p99_s": chnk.ttft_p99_s,
+        "mono_ttft_p99_s": mono.ttft_p99_s,
+        "prefill_slices": chnk_cb.stats.prefill_slices,
+        "tokens_bit_identical": True,
+        "forecast_scenario": ("tinyllama-1.1b diurnal@6/s 30s seed=0 "
+                              "slots=8 max_len=2048 C=32MiB B=8"),
+        "reactive_wake_violations": o.wake_violations,
+        "forecast_wake_violations": f.wake_violations,
+        "forecast_pre_wakes": f.pre_wakes,
+        "forecast_early_wake_s": f.early_wake_s,
+        "forecast_vs_oracle_pct": c.forecast_vs_oracle_pct,
+        "online_vs_oracle_pct": c.online_vs_oracle_pct,
+        "e_oracle_j": c.oracle.e_total,
+        "e_reactive_j": o.e_total,
+        "e_forecast_j": f.e_total,
+        "note": ("TBT percentiles are on the batcher's logical sim clock "
+                 "(prefill_tok_s per prompt token, step_time_s per decode "
+                 "step), so the guard is deterministic across hosts"),
+    }
+    assert ratio <= TBT_RATIO_BAR, (
+        f"chunked p99 TBT is {ratio:.2f}x monolithic, bar is "
+        f"{TBT_RATIO_BAR}x")
+    assert f.wake_violations < o.wake_violations, (
+        f"forecast controller did not cut wake violations "
+        f"({f.wake_violations} vs {o.wake_violations})")
+    assert c.forecast_vs_oracle_pct <= FORECAST_VS_ORACLE_BAR_PCT, (
+        f"forecast energy {c.forecast_vs_oracle_pct:+.2f}% vs oracle, bar "
+        f"is +{FORECAST_VS_ORACLE_BAR_PCT}%")
+    with open(out_path, "w") as fh:
+        json.dump(report, fh, indent=1)
+    return report
+
+
+def bench_serve_sla():
+    """benchmarks.run adapter: (p99-TBT us chunked, derived)."""
+    r = bench_sla()
+    return r["chunked_tbt_p99_s"] * 1e6, (
+        f"p99 TBT {r['tbt_p99_ratio']:.2f}x mono (bar {TBT_RATIO_BAR}) "
+        f"wakes {r['forecast_wake_violations']}<"
+        f"{r['reactive_wake_violations']} "
+        f"fcast {r['forecast_vs_oracle_pct']:+.1f}% vs oracle")
+
+
+def main() -> None:
+    out = sys.argv[1] if len(sys.argv) > 1 else DEFAULT_OUT
+    r = bench_sla(out)
+    print(json.dumps(r, indent=1))
+    print(f"wrote {out}: chunked p99 TBT {r['chunked_tbt_p99_s']*1e3:.2f}ms "
+          f"= {r['tbt_p99_ratio']:.2f}x monolithic "
+          f"({r['mono_tbt_p99_s']*1e3:.2f}ms); forecast wakes "
+          f"{r['forecast_wake_violations']} vs reactive "
+          f"{r['reactive_wake_violations']} at "
+          f"{r['forecast_vs_oracle_pct']:+.1f}% vs oracle")
+
+
+if __name__ == "__main__":
+    main()

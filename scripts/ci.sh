@@ -116,4 +116,27 @@ grep -q "exact" /tmp/quant_smoke.out
 # >=0.9x decode-throughput parity are all asserted inside
 PYTHONPATH=src timeout 600 python -m benchmarks.quant_bench \
     /tmp/BENCH_quant.json | tail -1
+
+# SLA smoke: chunked prefill + priority preemption + forecast pre-wake in
+# one walkthrough (tokens-bit-identical assertion runs inside)
+PYTHONPATH=src timeout 300 python examples/sla_serving.py \
+    --new-tokens 16 > /tmp/sla_smoke.out
+grep -q "bit-identical to monolithic: True" /tmp/sla_smoke.out
+grep -q "preemption" /tmp/sla_smoke.out
+grep -q "forecast" /tmp/sla_smoke.out
+
+# forecast-controller campaign through the traffic CLI: the fourth leg's
+# columns must land in the report next to reactive/oracle/none
+PYTHONPATH=src timeout 120 python -m repro.launch.traffic \
+    --model tinyllama-1.1b --arrival diurnal --rate 4 --horizon 8 \
+    --slots 4 --max-len 512 --banks 8 --fast-backend ref --no-mha-ref \
+    --controller forecast > /tmp/forecast_smoke.out
+grep -q "reactive+forecast" /tmp/forecast_smoke.out
+grep -q "E_fcast" /tmp/forecast_smoke.out
+
+# SLA benchmark: chunked p99-TBT <= 0.5x monolithic (bit-identical greedy
+# tokens) and forecast-vs-reactive wake-violation/energy bars are asserted
+# inside; BENCH_sla.json records both legs
+PYTHONPATH=src timeout 600 python -m benchmarks.sla_bench \
+    /tmp/BENCH_sla.json | tail -1
 echo "ci: OK"

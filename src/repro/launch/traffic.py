@@ -20,7 +20,7 @@ import json
 from repro.configs import resolve_arch
 from repro.core.explorer import MIB, min_capacity_mib, sweep
 from repro.traffic.campaign import DEFAULT_BANKS, CampaignReport, run_campaign
-from repro.traffic.controller import ControllerConfig
+from repro.traffic.controller import ControllerConfig, ForecastConfig
 from repro.traffic.generators import LengthModel
 
 MHA_REFERENCE = "gpt2-xl"
@@ -32,7 +32,7 @@ def build_report_dict(report: CampaignReport) -> dict:
     rows = []
     for r in report.rows:
         c = r.comparison
-        rows.append({
+        row = {
             "arch": r.scenario.arch, "arrival": r.scenario.arrival,
             "rate": r.scenario.rate, "seed": r.scenario.seed,
             "kv_dtype": r.scenario.kv_dtype,
@@ -45,7 +45,17 @@ def build_report_dict(report: CampaignReport) -> dict:
             "wake_violations": c.online.wake_violations,
             "stall_s": c.online.stall_s,
             "p95_latency_s": r.p95_latency_s,
-        })
+        }
+        if c.forecast is not None:
+            row.update({
+                "e_forecast_j": c.forecast.e_total,
+                "forecast_vs_oracle_pct": c.forecast_vs_oracle_pct,
+                "forecast_wake_violations": c.forecast.wake_violations,
+                "forecast_stall_s": c.forecast.stall_s,
+                "forecast_pre_wakes": c.forecast.pre_wakes,
+                "forecast_early_wake_s": c.forecast.early_wake_s,
+            })
+        rows.append(row)
     return {"rows": rows}
 
 
@@ -89,6 +99,16 @@ def main() -> None:
     ap.add_argument("--alpha", type=float, default=0.9)
     ap.add_argument("--hysteresis", type=float, default=2.0,
                     help="online gate-off threshold, x break-even time")
+    ap.add_argument("--controller", default="reactive",
+                    choices=["reactive", "forecast"],
+                    help="'forecast' adds the PSS-forecast pre-wake "
+                         "controller as a fourth leg next to "
+                         "reactive/oracle/none")
+    ap.add_argument("--forecast-window", type=float, default=2.0,
+                    help="trailing affine-fit window [s] for the forecast "
+                         "controller")
+    ap.add_argument("--forecast-lead", type=float, default=None,
+                    help="pre-wake lead horizon [s]; default window/20")
     ap.add_argument("--resample-dt", type=float, default=None,
                     help="coarsen traces to this grid [s] before evaluation")
     ap.add_argument("--no-mha-ref", action="store_true",
@@ -125,6 +145,9 @@ def main() -> None:
           f"slots={args.slots} max_len={args.max_len} "
           f"kv_dtype={kv_dtypes}")
 
+    fcfg = (ForecastConfig(window_s=args.forecast_window,
+                           lead_s=args.forecast_lead)
+            if args.controller == "forecast" else None)
     reports = {}
     for dt in kv_dtypes:
         reports[dt] = run_campaign(
@@ -134,6 +157,7 @@ def main() -> None:
             capacities_mib=args.capacity, banks=args.banks,
             ctrl=ControllerConfig(alpha=args.alpha,
                                   hysteresis_multiple=args.hysteresis),
+            fcfg=fcfg,
             lengths=LengthModel(max_len=args.max_len),
             resample_dt=args.resample_dt, fast_backend=args.fast_backend,
             backend=args.backend, prune=args.prune, fidelity=args.fidelity,
@@ -156,7 +180,9 @@ def main() -> None:
                   f"{st.prefix_tokens_reused} tok reused, "
                   f"{st.cow_splits} COW, {st.evicted_pages} pages evicted")
 
-    print("\n# online controller vs offline oracle vs no gating")
+    legs = ("online reactive+forecast controllers"
+            if fcfg is not None else "online controller")
+    print(f"\n# {legs} vs offline oracle vs no gating")
     print(report.format())
     if not report.rows:
         print("  (no rows: every requested --capacity sits below the traffic "

@@ -33,6 +33,18 @@ class RequestTimeline:
     first_token_t: float = math.nan    # prefill's argmax emitted token #1
     finish_t: float = math.nan
     token_ts: List[float] = field(default_factory=list)
+    # times this request was preempted and requeued; the admit/token stamps
+    # above always describe the final (completed) admission
+    preemptions: int = 0
+
+    def reset_admission(self) -> None:
+        """Roll the timeline back to the queued state after a preemption:
+        submit_t survives (TTFT/e2e keep charging the requeue wait), the
+        admission-scoped stamps are cleared for the re-prefill."""
+        self.preemptions += 1
+        self.admit_t = math.nan
+        self.first_token_t = math.nan
+        self.token_ts.clear()
 
     @property
     def ttft_s(self) -> float:

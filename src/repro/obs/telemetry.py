@@ -275,6 +275,30 @@ class Telemetry:
         self._counters: Dict[str, Counter] = {}
         self._gauges: Dict[str, Gauge] = {}
         self._histograms: Dict[str, Histogram] = {}
+        self._clock_owner: Optional[object] = None
+
+    # ----------------------------------------------------------------- clock
+    def bind_clock(self, clock: Callable[[], float], owner: object) -> None:
+        """Point `self.clock` at an engine's logical time base, recording
+        `owner` as the binding engine. A second engine binding the same
+        registry raises instead of silently re-pointing the clock — the old
+        failure mode corrupted the first engine's spans and SLO timelines
+        mid-flight. To reuse a registry sequentially, call
+        :meth:`release_clock` after the first engine drains."""
+        if self._clock_owner is not None and self._clock_owner is not owner:
+            raise RuntimeError(
+                "telemetry clock is already bound by another engine; one "
+                "registry records one timeline — use a separate Telemetry "
+                "per engine (merge() them afterwards) or release_clock() "
+                "when the first engine is done")
+        self._clock_owner = owner
+        self.clock = clock
+
+    def release_clock(self) -> None:
+        """Detach the bound engine and restore the wall clock, allowing a
+        new engine to bind this registry."""
+        self._clock_owner = None
+        self.clock = time.perf_counter
 
     # ---------------------------------------------------------- instruments
     def counter(self, name: str) -> Counter:

@@ -4,4 +4,5 @@ from repro.serve.paged import (OutOfPages, PageAllocator,  # noqa: F401
                                page_bytes, pages_for)
 from repro.serve.prefix import (PrefixMatch, RadixPrefixIndex,  # noqa: F401
                                 SharedKVLedger, SharedPageAllocator)
-from repro.serve.scheduler import ContinuousBatcher, Request, kv_slot_budget  # noqa: F401
+from repro.serve.scheduler import (AdmissionQueue, ContinuousBatcher,  # noqa: F401
+                                   Request, kv_slot_budget)

@@ -87,8 +87,12 @@ class BatchedServer:
         self.params = params
         self.cfg = cfg
         self.collect_logits = collect_logits
-        # wall-clock spans (this engine has no logical sim clock)
+        # wall-clock spans (this engine has no logical sim clock); claim
+        # the registry's clock anyway so mixing this engine and a batcher
+        # on one registry fails loudly instead of mixing time bases
         self.tel = telemetry if telemetry is not None else noop_registry()
+        if telemetry is not None:
+            telemetry.bind_clock(time.perf_counter, owner=self)
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, cache_len=cfg.max_len))
         # static `steps`, donated cache: one compile per generation length,

@@ -11,8 +11,9 @@ become first-class time-resolved signals. Three pieces:
   * :class:`PagedKVLedger` — page accounting + page-granular
     `OccupancyTrace` emission (alloc/free events integrate to zero at
     drain; occupancy is always ``pages x page_bytes``);
-  * :class:`PagedContinuousBatcher` — FCFS continuous batching where the
-    decode hot path is device-resident: one jitted ``lax.scan`` advances
+  * :class:`PagedContinuousBatcher` — priority continuous batching (FIFO
+    within a class; strictly-higher-priority arrivals may preempt) where
+    the decode hot path is device-resident: one jitted ``lax.scan`` advances
     every slot ``chunk_steps`` tokens per host round-trip (donated cache
     buffers, no per-token sync), admission *maps the prompt's pages into
     the slot's table* instead of re-prefilling, and per-slot positions are
@@ -20,7 +21,6 @@ become first-class time-resolved signals. Three pieces:
 """
 from __future__ import annotations
 
-import collections
 import functools
 import time
 from dataclasses import dataclass
@@ -35,7 +35,7 @@ from repro.models.transformer import (init_paged_cache, prefix_tail_rows,
                                       write_prefill_to_pages)
 from repro.obs.slo import RequestTimeline, SLOSummary, SLOTracker
 from repro.obs.telemetry import default_registry, noop_registry
-from repro.serve.scheduler import Request, SchedulerStats
+from repro.serve.scheduler import AdmissionQueue, Request, SchedulerStats
 from repro.sim.trace import AccessStats, OccupancyTrace, TraceBundle
 
 
@@ -199,10 +199,31 @@ class PagedStats(SchedulerStats):
     # prefix-sharing counters (stay zero without prefix_cache)
     cow_splits: int = 0
     evicted_pages: int = 0
+    # chunked-prefill slices executed (zero without prefill_chunk_tokens)
+    prefill_slices: int = 0
 
 
 class PagedContinuousBatcher:
-    """FCFS continuous batching over a paged KV cache.
+    """Priority continuous batching over a paged KV cache.
+
+    Admission pops the highest-priority queued request (FIFO within a
+    class). When the head would otherwise wait — no free slot, or the pool
+    cannot cover its worst-case pages — it may *preempt* strictly-lower-
+    priority active slots: the victim's pages free through the retire path,
+    its partial output is discarded, and the request requeues behind its
+    own class for a from-scratch re-prefill (greedy restart keeps its
+    tokens bit-identical to an uncontended run). Equal priorities never
+    preempt each other, so the default ``priority=0`` workload behaves
+    exactly like the old FCFS batcher.
+
+    Chunked prefill (``prefill_chunk_tokens``, pure full-attention stacks,
+    exclusive with ``prefix_cache``): prompts longer than the chunk admit
+    in page-aligned slices with one decode chunk for the other slots
+    interleaved between slices, so a long prompt stops stalling every
+    active stream's time-between-tokens. Slices chain through the shared-
+    prefix machinery (gather resident pages → suffix-only prefill at fixed
+    attention width), which keeps the emitted tokens bit-identical to one
+    monolithic prefill.
 
     Admission prefills the prompt once (batch=1), then scatters its KV rows
     into freshly allocated pages of the global pool — older slots are never
@@ -243,9 +264,26 @@ class PagedContinuousBatcher:
                  chunk_steps: int = 16, attn_backend: str = "auto",
                  step_time_s: float = 1e-3, prefill_tok_s: float = 5e-5,
                  prefix_cache: bool = False, collect_logits: bool = False,
-                 kv_dtype: str = "native", telemetry=None):
+                 kv_dtype: str = "native",
+                 prefill_chunk_tokens: Optional[int] = None,
+                 on_long_prompt: str = "reject", telemetry=None):
         if not hasattr(model, "decode_step_paged"):
             raise TypeError("model lacks a paged decode path")
+        if on_long_prompt not in ("reject", "truncate"):
+            raise ValueError("on_long_prompt must be 'reject' or 'truncate'")
+        if prefill_chunk_tokens is not None:
+            if prefix_cache:
+                raise ValueError(
+                    "prefill_chunk_tokens is incompatible with prefix_cache "
+                    "(both paths own the shared-prefill machinery; chunk "
+                    "the suffix-only prefill is future work)")
+            if prefill_chunk_tokens < page_size or \
+                    prefill_chunk_tokens % page_size:
+                raise ValueError(
+                    "prefill_chunk_tokens must be a positive multiple of "
+                    f"page_size={page_size} so every slice boundary is "
+                    "page-aligned (the chained slice prefill gathers whole "
+                    f"pages); got {prefill_chunk_tokens}")
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -259,14 +297,18 @@ class PagedContinuousBatcher:
         self.prefill_tok_s = prefill_tok_s
         self.prefix_cache = prefix_cache
         self.collect_logits = collect_logits
+        self.prefill_chunk_tokens = prefill_chunk_tokens
+        self.on_long_prompt = on_long_prompt
 
         # spans and SLOs record on the batcher's logical sim clock — the
         # time base the ledger's occupancy trace uses — so a passed-in
-        # registry has its clock re-pointed here: the Perfetto export then
-        # shows request spans and the KV counter track on one timeline
+        # registry has its clock bound here: the Perfetto export then shows
+        # request spans and the KV counter track on one timeline. bind_clock
+        # raises if another engine already owns the registry's clock (a
+        # second batcher would silently corrupt the first one's timelines).
         self.tel = telemetry if telemetry is not None else noop_registry()
         if telemetry is not None:
-            telemetry.clock = lambda: self._sim_t
+            telemetry.bind_clock(lambda: self._sim_t, owner=self)
         tel = self.tel
         self._slo = (SLOTracker(tel, "serve.paged") if tel.enabled else None)
         self._c_admitted = tel.counter("serve.paged.admitted")
@@ -282,6 +324,8 @@ class PagedContinuousBatcher:
         self._c_miss = tel.counter("serve.paged.prefix_misses")
         self._c_reused = tel.counter("serve.paged.prefix_tokens_reused")
         self._c_wait = tel.counter("serve.paged.backpressure_waits")
+        self._c_preempt = tel.counter("serve.paged.preemptions")
+        self._c_slices = tel.counter("serve.paged.prefill_slices")
         self._c_dequant = tel.counter("quant.dequant_pages")
         self._g_pages = tel.gauge("serve.paged.pages_in_use")
         self._g_kv_phys = tel.gauge("serve.paged.kv_bytes_physical")
@@ -305,7 +349,7 @@ class PagedContinuousBatcher:
         self.access = AccessStats()
         self.stats = PagedStats()
 
-        self.queue: "collections.deque[Request]" = collections.deque()
+        self.queue = AdmissionQueue()
         self.slots: List[Optional[Request]] = [None] * num_slots
         self._reserved = [0] * num_slots        # worst-case pages not yet held
         self._ctx = np.zeros(num_slots, np.int64)
@@ -327,18 +371,20 @@ class PagedContinuousBatcher:
             functools.partial(_decode_loop, model, chunk_steps, attn_backend,
                               collect_logits),
             donate_argnums=(1,))
-        if prefix_cache:
+        if prefix_cache or prefill_chunk_tokens is not None:
             from repro.models.transformer import (_require_pure_full,
-                                                  copy_pages,
                                                   gather_prefix_pages,
                                                   write_shared_prefill_to_pages)
-            _require_pure_full(model.cfg, "prefix_cache")
+            _require_pure_full(model.cfg, "prefix_cache" if prefix_cache
+                               else "prefill_chunk_tokens")
             self._gather = jax.jit(
                 functools.partial(gather_prefix_pages, self.cfg),
                 static_argnums=(2,))
             # fixed attention width = slot capacity: makes the suffix
             # prefill's reduction tree independent of who computed the
-            # prefix (donor-exact KV, see _apply_block_shared_prefill)
+            # prefix (donor-exact KV, see _apply_block_shared_prefill) —
+            # the same property makes chained chunked-prefill slices
+            # bit-exact vs one monolithic prefill
             pad_to = self.max_pages_per_slot * page_size
             self._prefill_shared = jax.jit(
                 lambda p, t, pfx: model.prefill_shared(
@@ -346,12 +392,23 @@ class PagedContinuousBatcher:
             self._write_shared = jax.jit(
                 functools.partial(write_shared_prefill_to_pages, self.cfg),
                 donate_argnums=(0,))
+        if prefix_cache:
+            from repro.models.transformer import copy_pages
             self._copy = jax.jit(functools.partial(copy_pages, self.cfg),
                                  donate_argnums=(0,))
 
     # ------------------------------------------------------------ client API
     def submit(self, req: Request) -> None:
         S = int(len(req.tokens))
+        cap = self.max_pages_per_slot * self.page_size
+        if S + max(req.max_new_tokens - 1, 0) > cap \
+                and self.on_long_prompt == "truncate":
+            # keep the decode budget, give the prompt whatever table
+            # capacity remains (mirrors the dense batcher's max_len cut)
+            keep = cap - max(req.max_new_tokens - 1, 0)
+            if keep >= 1:
+                req.tokens = np.asarray(req.tokens)[:keep]
+                S = keep
         worst = pages_for(S + max(req.max_new_tokens - 1, 0), self.page_size)
         # prefix mode reserves one extra pool page for the deferred COW
         # split of a mid-page prompt boundary; it never occupies a table
@@ -364,10 +421,11 @@ class PagedContinuousBatcher:
                 f"request {req.rid} needs {worst} table / {pool_worst} pool "
                 f"pages; slot tables hold {self.max_pages_per_slot}, pool "
                 f"holds {self.num_pages - 1}")
-        req.submitted_s = time.perf_counter()
+        req.submitted_wall_s = time.perf_counter()
+        req.submitted_s = self._sim_t
         if self.tel.enabled:
             req.timeline = RequestTimeline(rid=req.rid, submit_t=self._sim_t)
-        self.queue.append(req)
+        self.queue.push(req)
 
     def run(self, max_chunks: int = 10_000) -> List[Request]:
         done: List[Request] = []
@@ -432,7 +490,8 @@ class PagedContinuousBatcher:
 
     def _retire(self, i: int, req: Request, done: List[Request],
                 t: float) -> None:
-        req.finished_s = time.perf_counter()
+        req.finished_wall_s = time.perf_counter()
+        req.finished_s = t
         done.append(req)
         self.slots[i] = None
         n = self.ledger.retire(i, t)
@@ -455,22 +514,89 @@ class PagedContinuousBatcher:
                 self.tel.add_span("decode", tl.first_token_t, t, slot=i,
                                   rid=req.rid)
 
+    def _preempt_victim(self, priority: int) -> Optional[int]:
+        """Pick the slot to evict for a `priority`-class admission: the
+        lowest-priority active slot strictly below the admitting class
+        (equal classes never preempt each other — no livelock), least
+        decode progress first within a class (least work discarded)."""
+        best = None
+        best_key = None
+        for i, r in enumerate(self.slots):
+            if r is None or r.priority >= priority:
+                continue
+            key = (r.priority, len(r.output))
+            if best is None or key < best_key:
+                best, best_key = i, key
+        return best
+
+    def _preempt(self, i: int, t: float) -> None:
+        """Evict slot `i` and requeue its request. Pages return through the
+        ordinary retire path (the occupancy trace stays conservative); the
+        partial output is discarded and the prompt re-prefills from scratch
+        on re-admission — resuming mid-decode would not be bit-exact (the
+        prefill reduction tree differs from the decode kernel's), while a
+        greedy restart reproduces the uncontended tokens exactly."""
+        req = self.slots[i]
+        req.output.clear()
+        req.logits.clear()
+        req.preemptions += 1
+        self.slots[i] = None
+        n = self.ledger.retire(i, t)
+        self.stats.pages_freed += n
+        self.stats.retired_kv_bytes += n * self.page_bytes
+        self.stats.preemptions += 1
+        self._reserved[i] = 0
+        self._ctx[i] = 0
+        self._table[i, :] = 0
+        self._c_preempt.inc()
+        self._c_freed.inc(n)
+        self._set_page_gauges()
+        if req.timeline is not None:
+            req.timeline.reset_admission()
+        if self.tel.enabled:
+            self.tel.add_span("preempt", t, t, slot=i, rid=req.rid)
+        self.queue.push(req)     # fresh seq: re-enters behind its own class
+
+    def _preempt_for(self, priority: int, worst: int) -> bool:
+        """Free pages for a `priority`-class admission by preempting
+        strictly-lower-priority slots, lowest class / least progress first.
+        Returns False when eligible victims run out before `worst` pages
+        are coverable (the head then backpressure-waits as before)."""
+        while worst > self._available_pages():
+            v = self._preempt_victim(priority)
+            if v is None:
+                return False
+            self._preempt(v, self._sim_t)
+        return True
+
     def _admit(self, done: List[Request]) -> None:
-        for i in range(self.num_slots):
-            if self.slots[i] is not None or not self.queue:
+        while self.queue:
+            i = next((k for k, s in enumerate(self.slots) if s is None), None)
+            if i is None:
+                # every slot is busy: a strictly-higher-priority head may
+                # evict the lowest-priority slot instead of queueing
+                v = self._preempt_victim(self.queue.peek().priority)
+                if v is None:
+                    break
+                self._preempt(v, self._sim_t)
                 continue
             if self.prefix_cache:
                 if not self._admit_prefix(i, done):
-                    break                  # FCFS: wait for pages to free up
+                    break                  # wait for pages to free up
                 continue
-            req = self.queue[0]
+            req = self.queue.peek()
             prompt_len = int(len(req.tokens))
             worst = pages_for(prompt_len + max(req.max_new_tokens - 1, 0),
                               self.page_size)
-            if worst > self._available_pages():
+            if worst > self._available_pages() \
+                    and not self._preempt_for(req.priority, worst):
                 self._c_wait.inc()
-                break                      # FCFS: wait for pages to free up
-            self.queue.popleft()
+                break                      # wait for pages to free up
+            self.queue.pop()
+            if (self.prefill_chunk_tokens is not None
+                    and prompt_len > self.prefill_chunk_tokens):
+                self._admit_chunked(i, req, done, worst)
+                continue
             npg = pages_for(prompt_len, self.page_size)
             t_pre = self._sim_t
 
@@ -493,6 +619,79 @@ class PagedContinuousBatcher:
                                       jnp.asarray(pages, jnp.int32))
             self._commit_admission(i, req, done, tok, logits, prompt_len,
                                    pages, t_pre)
+
+    def _admit_chunked(self, i: int, req: Request, done: List[Request],
+                       worst: int) -> None:
+        """Chunked prefill: admit `req` into slot `i` in page-aligned
+        slices of `prefill_chunk_tokens`, running one decode chunk for the
+        other active slots between consecutive slices so a long prompt no
+        longer stalls their token cadence. Slice 0 is a plain prefill;
+        every later slice gathers the slot's own pages as a prefix and runs
+        the suffix-only shared prefill at fixed attention width — the
+        donor-exact property from prefix sharing, so the emitted tokens are
+        bit-identical to one monolithic prefill. The slot stays invisible
+        to the decode loop (host `active` mask) until the last slice
+        commits; the page reservation made up-front keeps interleaved
+        chunks from stealing this slot's worst-case pages.
+
+        Tracing: each distinct (resident rows, slice length) pair traces
+        once — every slice but the last is exactly `prefill_chunk_tokens`
+        long, so long prompts bucket naturally."""
+        prompt = np.asarray(req.tokens)
+        S = int(len(prompt))
+        ps = self.page_size
+        C = self.prefill_chunk_tokens
+        t_pre = self._sim_t
+        pos = 0
+        logits = None
+        while pos < S:
+            take = min(C, S - pos)
+            sl = jnp.asarray(prompt[None, pos:pos + take], jnp.int32)
+            t0 = self._sim_t
+            if pos == 0:
+                new_n = pages_for(take, ps)
+                logits, dense = self._prefill(self.params, {"tokens": sl},
+                                              new_n * ps)
+                self._sim_t += take * self.prefill_tok_s
+                pages = self.ledger.admit(i, new_n, self._sim_t)
+                self._reserved[i] = worst - new_n
+                self._cache = self._write(self._cache, dense, i,
+                                          jnp.asarray(pages, jnp.int32))
+            else:
+                held = list(self.ledger.slot_pages[i])
+                prefix = self._gather(self._cache,
+                                      jnp.asarray(held, jnp.int32), pos)
+                if self.kv_quantized:
+                    self._c_dequant.inc(len(held))
+                head = prefix_tail_rows(prefix, 0)   # pos is page-aligned
+                logits, suffix = self._prefill_shared(self.params, sl, prefix)
+                self._sim_t += take * self.prefill_tok_s
+                fresh = self.ledger.grow(i, pages_for(pos + take, ps),
+                                         self._sim_t)
+                self._reserved[i] -= len(fresh)
+                new_n = len(fresh)
+                self._cache = self._write_shared(
+                    self._cache, suffix, head, jnp.int32(i),
+                    jnp.asarray(held, jnp.int32),
+                    jnp.asarray(fresh, jnp.int32))
+            self.stats.pages_allocated += new_n
+            self.stats.admitted_kv_bytes += new_n * self.page_bytes
+            self.stats.peak_pages = max(self.stats.peak_pages,
+                                        self.ledger.allocator.n_allocated)
+            self.stats.prefill_slices += 1
+            self.access.add_write("kv", take * self.row_bytes)
+            self._c_alloc.inc(new_n)
+            self._c_slices.inc()
+            if self.tel.enabled:
+                self.tel.add_span("prefill_slice", t0, self._sim_t, slot=i,
+                                  rid=req.rid, tokens=take)
+            pos += take
+            if pos < S:
+                # let the active slots stream tokens before the next slice
+                self._decode_chunk(done)
+        tok = int(jnp.argmax(logits[0, -1]))
+        self._commit_admission(i, req, done, tok, logits, S,
+                               self.ledger.slot_pages[i], t_pre)
 
     def _commit_admission(self, i: int, req: Request, done: List[Request],
                           tok: int, logits, ctx: int,
@@ -532,12 +731,12 @@ class PagedContinuousBatcher:
     def _admit_prefix(self, i: int, done: List[Request]) -> bool:
         """Prefix-cache admission of the queue head into slot `i`.
 
-        Returns False when the pool (after LRU-evicting cached prefixes)
-        still cannot cover the request's worst-case *fresh* page demand —
-        FCFS then waits. The worst case reserves the pages the match did
-        not cover, plus one page for the deferred COW split of a
-        mid-page prompt boundary."""
-        req = self.queue[0]
+        Returns False when the pool (after LRU-evicting cached prefixes and
+        preempting strictly-lower-priority slots) still cannot cover the
+        request's worst-case *fresh* page demand — the head then waits. The
+        worst case reserves the pages the match did not cover, plus one
+        page for the deferred COW split of a mid-page prompt boundary."""
+        req = self.queue.peek()
         prompt = np.asarray(req.tokens)
         S = int(len(prompt))
         ps = self.page_size
@@ -551,15 +750,21 @@ class PagedContinuousBatcher:
         short = demand(match) - self._available_pages()
         while short > 0:
             freed = self.ledger.evict_for(short, self._sim_t)
-            if not freed:
-                self._c_wait.inc()
-                return False
-            self.stats.evicted_pages += freed
-            self._c_evicted.inc(freed)
-            # eviction may have dropped part of the matched path: re-probe
+            if freed:
+                self.stats.evicted_pages += freed
+                self._c_evicted.inc(freed)
+            else:
+                # nothing cached left to drop: preempt a lower-priority
+                # slot before giving up (pages free via the retire path)
+                v = self._preempt_victim(req.priority)
+                if v is None:
+                    self._c_wait.inc()
+                    return False
+                self._preempt(v, self._sim_t)
+            # eviction/preemption may have changed the matched path: re-probe
             match = self.ledger.index.probe(prompt, limit=S - 1)
             short = demand(match) - self._available_pages()
-        self.queue.popleft()
+        self.queue.pop()
 
         n_full, j = len(match.pages), match.tail_tokens
         m = n_full * ps + j

@@ -16,14 +16,17 @@ Implementation notes:
     old max-slot-length decode mask is gone: every slot embeds, ropes and
     attends at exactly its own context length) and runs multi-token chunks
     as a single donated `lax.scan` on device;
-  * simple FCFS admission; slots freed on EOS or max_new_tokens.
+  * priority admission (FIFO within a class) via `AdmissionQueue`; slots
+    freed on EOS or max_new_tokens. Preemption lives only on the paged
+    batcher, where freeing a slot actually returns pages.
 """
 from __future__ import annotations
 
-import collections
+import heapq
+import itertools
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -83,20 +86,66 @@ class Request:
     tokens: np.ndarray                 # (prompt_len,)
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
+    # admission class: higher admits first; on the paged batcher a queued
+    # higher-priority request may preempt a lower-priority active slot
+    # instead of backpressure-waiting (ties decode FCFS)
+    priority: int = 0
     # filled by the scheduler
     output: List[int] = field(default_factory=list)
     # per-token last-position logits, filled only by engines running with
     # collect_logits=True (the bit-identity regressions compare these)
     logits: List[np.ndarray] = field(default_factory=list)
+    # lifecycle stamps on BOTH clocks: `submitted_s`/`finished_s` are on the
+    # engine's *logical sim clock* — the time base of the occupancy trace
+    # and the SLO percentiles, so `latency_s` agrees with the reported e2e
+    # distribution; `*_wall_s` are time.perf_counter stamps for host-side
+    # profiling (jit/compile/dispatch overhead included)
     submitted_s: float = 0.0
     finished_s: float = 0.0
+    submitted_wall_s: float = 0.0
+    finished_wall_s: float = 0.0
+    # times this request was preempted-and-requeued (paged batcher only)
+    preemptions: int = 0
     # lifecycle on the engine's logical clock, stamped when the engine runs
     # with an enabled Telemetry registry (None otherwise)
     timeline: Optional[RequestTimeline] = None
 
     @property
     def latency_s(self) -> float:
+        """Submit-to-finish on the engine's logical sim clock (matches the
+        e2e SLO percentiles; wall time is `wall_latency_s`)."""
         return self.finished_s - self.submitted_s
+
+    @property
+    def wall_latency_s(self) -> float:
+        return self.finished_wall_s - self.submitted_wall_s
+
+
+class AdmissionQueue:
+    """Priority admission queue shared by both batchers.
+
+    Orders by descending `Request.priority`, FIFO within a class; a request
+    requeued after preemption re-enters at the *back* of its class (a fresh
+    sequence number), so a preempt/re-admit cycle cannot starve its peers."""
+
+    def __init__(self):
+        self._heap: List = []
+        self._seq = itertools.count()
+
+    def push(self, req: Request) -> None:
+        heapq.heappush(self._heap, (-req.priority, next(self._seq), req))
+
+    def pop(self) -> Request:
+        return heapq.heappop(self._heap)[2]
+
+    def peek(self) -> Request:
+        return self._heap[0][2]
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __iter__(self) -> Iterator[Request]:
+        return (item[2] for item in sorted(self._heap))
 
 
 @dataclass
@@ -105,6 +154,7 @@ class SchedulerStats:
     finished: int = 0
     decode_steps: int = 0
     prefills: int = 0
+    preemptions: int = 0
     peak_active_slots: int = 0
     admitted_kv_bytes: int = 0
     retired_kv_bytes: int = 0
@@ -122,7 +172,8 @@ class SchedulerStats:
 
 
 class ContinuousBatcher:
-    """FCFS continuous batching over `num_slots` decode slots.
+    """Priority continuous batching (FIFO within a class) over `num_slots`
+    dense decode slots.
 
     When the model carries an `ArchConfig` (`model.cfg`), the batcher also
     emits a time-resolved slot-occupancy trace: every admission, decoded
@@ -135,20 +186,24 @@ class ContinuousBatcher:
     def __init__(self, model, params, *, num_slots: int = 4,
                  max_len: int = 128, kv_dtype_bytes: int = 2,
                  step_time_s: float = 1e-3, prefill_tok_s: float = 5e-5,
-                 telemetry=None):
+                 on_long_prompt: str = "reject", telemetry=None):
+        if on_long_prompt not in ("reject", "truncate"):
+            raise ValueError("on_long_prompt must be 'reject' or 'truncate'")
         self.model = model
         self.params = params
         self.num_slots = num_slots
         self.max_len = max_len
+        self.on_long_prompt = on_long_prompt
         # spans/SLOs record on the batcher's logical sim clock — the same
         # time base the occupancy trace uses — so a passed-in registry has
-        # its clock re-pointed here (one shared Perfetto timeline)
+        # its clock bound here (one shared Perfetto timeline); bind_clock
+        # raises if another engine already owns the registry's clock
         self.tel = telemetry if telemetry is not None else noop_registry()
         if telemetry is not None:
-            telemetry.clock = lambda: self._sim_t
+            telemetry.bind_clock(lambda: self._sim_t, owner=self)
         self._slo = (SLOTracker(self.tel, "serve.dense")
                      if self.tel.enabled else None)
-        self.queue: "collections.deque[Request]" = collections.deque()
+        self.queue = AdmissionQueue()
         self.slots: List[Optional[Request]] = [None] * num_slots
         self.slot_pos: np.ndarray = np.zeros(num_slots, np.int64)
         self.stats = SchedulerStats()
@@ -180,10 +235,20 @@ class ContinuousBatcher:
 
     # ------------------------------------------------------------ client API
     def submit(self, req: Request) -> None:
-        req.submitted_s = time.perf_counter()
+        S = int(len(req.tokens))
+        if S > self.max_len:
+            if self.on_long_prompt == "truncate":
+                req.tokens = np.asarray(req.tokens)[: self.max_len]
+            else:
+                raise ValueError(
+                    f"prompt of {S} tokens exceeds max_len={self.max_len}; "
+                    "truncate it or construct the batcher with "
+                    "on_long_prompt='truncate'")
+        req.submitted_wall_s = time.perf_counter()
+        req.submitted_s = self._sim_t
         if self.tel.enabled:
             req.timeline = RequestTimeline(rid=req.rid, submit_t=self._sim_t)
-        self.queue.append(req)
+        self.queue.push(req)
 
     def slo_summary(self) -> SLOSummary:
         """TTFT / time-between-tokens / e2e percentiles of retired requests
@@ -219,7 +284,8 @@ class ContinuousBatcher:
 
     # ------------------------------------------------------------- internals
     def _retire(self, i: int, req: Request, done: List[Request]) -> None:
-        req.finished_s = time.perf_counter()
+        req.finished_wall_s = time.perf_counter()
+        req.finished_s = self._sim_t
         done.append(req)
         self.slots[i] = None
         self._caches[i] = None
@@ -243,7 +309,7 @@ class ContinuousBatcher:
         for i in range(self.num_slots):
             if self.slots[i] is not None or not self.queue:
                 continue
-            req = self.queue.popleft()
+            req = self.queue.pop()
             t_pre = self._sim_t
             batch = {"tokens": jnp.asarray(req.tokens[None, :], jnp.int32)}
             logits, cache = self._prefill(self.params, batch)
@@ -258,8 +324,9 @@ class ContinuousBatcher:
                 self.stats.peak_active_slots,
                 sum(s is not None for s in self.slots))
             # trace: the prefill writes the whole prompt's KV into the slot
-            # (clamped to the jitted cache bound, like the cache itself)
-            ctx = min(int(len(req.tokens)), self.max_len)
+            # (submit() guarantees len(tokens) <= max_len, so the trace and
+            # the jitted compute see the same context)
+            ctx = int(len(req.tokens))
             self._sim_t += ctx * self.prefill_tok_s
             if self.cfg is not None:
                 b = (kv_bytes_at(self.cfg, ctx, self.kv_dtype_bytes)

@@ -564,3 +564,89 @@ def _synthesize(accel: AcceleratorConfig, name: str, start_ctx: int,
         dram_traffic_bytes=totals["dram_traffic_bytes"],
         replayed_layers=sum(p.result.replayed_layers for p in runs),
         _step_rel=step_rel, _step_counts=step_counts)
+
+
+# ---------------------------------------------------------------------------
+# Causal affine extrapolation (the forecast leg of the online controller)
+# ---------------------------------------------------------------------------
+
+class AffineForecaster:
+    """Causal trailing-window affine extrapolator over an irregular series.
+
+    The PSS machinery above exploits that Stage-I decode is affine in
+    context length; this is the same trick pointed at *time*: inside a
+    traffic ramp the occupancy series is locally affine, so a least-squares
+    line over the trailing `window_s` of samples extrapolates the demand a
+    gating controller is about to see. All window sums come from prefix
+    sums, so a query costs O(log n) (two searchsorted calls); the fit is
+    re-centered on the window's first sample to keep the normal equations
+    well-conditioned at large absolute times.
+
+    Strictly causal: a query at time `t` only sees samples with
+    ``time <= t``.
+    """
+
+    def __init__(self, times: np.ndarray, values: np.ndarray,
+                 window_s: float):
+        t = np.asarray(times, np.float64)
+        y = np.asarray(values, np.float64)
+        if t.ndim != 1 or t.shape != y.shape:
+            raise ValueError("times/values must be equal-length 1-D arrays")
+        if len(t) > 1 and np.any(np.diff(t) < 0):
+            raise ValueError("times must be non-decreasing")
+        if window_s <= 0:
+            raise ValueError("window_s must be positive")
+        self.window_s = float(window_s)
+        self._t = t
+        self._y = y
+        z = np.zeros(1)
+        self._ct = np.concatenate([z, np.cumsum(t)])
+        self._cy = np.concatenate([z, np.cumsum(y)])
+        self._ctt = np.concatenate([z, np.cumsum(t * t)])
+        self._cty = np.concatenate([z, np.cumsum(t * y)])
+
+    def _window(self, now_s: float) -> Tuple[int, int]:
+        hi = int(np.searchsorted(self._t, now_s, side="right"))
+        lo = int(np.searchsorted(self._t, now_s - self.window_s,
+                                 side="left"))
+        return lo, hi
+
+    def fit(self, now_s: float) -> Tuple[float, float]:
+        """(intercept-at-now, slope) of the trailing-window least-squares
+        line. Empty window → (0, 0); degenerate (single sample or zero
+        time spread) → (window mean, 0)."""
+        lo, hi = self._window(now_s)
+        n = hi - lo
+        if n == 0:
+            # nothing in the window: hold the last value seen before it
+            return (float(self._y[hi - 1]), 0.0) if hi else (0.0, 0.0)
+        sy = self._cy[hi] - self._cy[lo]
+        if n == 1:
+            return float(sy), 0.0
+        c = float(self._t[lo])            # re-center for conditioning
+        st = self._ct[hi] - self._ct[lo] - n * c
+        stt = (self._ctt[hi] - self._ctt[lo]
+               - 2.0 * c * (self._ct[hi] - self._ct[lo]) + n * c * c)
+        sty = self._cty[hi] - self._cty[lo] - c * sy
+        det = n * stt - st * st
+        if det <= 0 or not np.isfinite(det):
+            return float(sy / n), 0.0
+        b = (n * sty - st * sy) / det
+        a = (sy - b * st) / n             # intercept at t = c
+        return float(a + b * (now_s - c)), float(b)
+
+    def slope(self, now_s: float) -> float:
+        return self.fit(now_s)[1]
+
+    def forecast(self, now_s: float, horizon_s: float) -> float:
+        """Extrapolated value at ``now_s + horizon_s`` (clamped at 0 —
+        occupancies cannot go negative)."""
+        v, b = self.fit(now_s)
+        return max(0.0, v + b * horizon_s)
+
+
+def affine_forecast(times: np.ndarray, values: np.ndarray, now_s: float,
+                    horizon_s: float, window_s: float) -> float:
+    """One-shot convenience wrapper over :class:`AffineForecaster`."""
+    return AffineForecaster(times, values, window_s).forecast(
+        now_s, horizon_s)

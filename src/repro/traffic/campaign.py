@@ -28,7 +28,7 @@ from repro.configs import resolve_arch
 from repro.core.candidates import lower_bound_energies, make_grid
 from repro.core.explorer import DEFAULT_BANKS, MIB, min_capacity_mib  # noqa: F401 (re-exported)
 from repro.traffic.controller import ControllerComparison, ControllerConfig, \
-    compare, compare_grid
+    ForecastConfig, compare, compare_grid
 from repro.traffic.generators import LengthModel, generate, generate_workload
 from repro.traffic.occupancy import TrafficSim, simulate_prefix_traffic, \
     simulate_traffic, utilization_summary
@@ -101,6 +101,31 @@ class CampaignRow:
     def e_none(self) -> float:
         return self.comparison.none.e_total
 
+    # first-class controller SLO columns: wake-latency violations and the
+    # stall seconds they expose, reactive vs forecast leg
+    @property
+    def wakes_reactive(self) -> int:
+        return self.comparison.online.wake_violations
+
+    @property
+    def stall_reactive_s(self) -> float:
+        return self.comparison.online.stall_s
+
+    @property
+    def e_forecast(self) -> float:
+        f = self.comparison.forecast
+        return float("nan") if f is None else f.e_total
+
+    @property
+    def wakes_forecast(self) -> Optional[int]:
+        f = self.comparison.forecast
+        return None if f is None else f.wake_violations
+
+    @property
+    def stall_forecast_s(self) -> float:
+        f = self.comparison.forecast
+        return float("nan") if f is None else f.stall_s
+
 
 @dataclass
 class CampaignReport:
@@ -124,21 +149,37 @@ class CampaignReport:
                 for r in self.rows]
 
     def format(self) -> str:
-        lines = [f"{'arch':>20} {'arrival':>8} {'rate':>5} {'C':>5} {'B':>3} "
-                 f"{'peak':>7} {'E_none':>8} {'E_oracle':>9} {'E_online':>9} "
-                 f"{'dNone%':>7} {'dOrcl%':>7} {'wakes':>6} {'p95[s]':>7} "
-                 f"{'ttft50':>7} {'ttft99':>7} {'tbt50':>8} {'tbt99':>8}"]
+        has_fc = any(r.comparison.forecast is not None for r in self.rows)
+        head = (f"{'arch':>20} {'arrival':>8} {'rate':>5} {'C':>5} {'B':>3} "
+                f"{'peak':>7} {'E_none':>8} {'E_oracle':>9} {'E_online':>9} "
+                f"{'dNone%':>7} {'dOrcl%':>7} {'wakes':>6} {'stall_us':>8}")
+        if has_fc:
+            head += f" {'E_fcast':>9} {'dFOrcl%':>8} {'fwakes':>6} " \
+                    f"{'fstall_us':>9}"
+        head += (f" {'p95[s]':>7} {'ttft50':>7} {'ttft99':>7} "
+                 f"{'tbt50':>8} {'tbt99':>8}")
+        lines = [head]
         for r in self.rows:
             c = r.comparison
-            lines.append(
+            line = (
                 f"{r.scenario.arch:>20} {r.scenario.arrival:>8} "
                 f"{r.scenario.rate:>5.1f} {r.capacity_mib:>5} {r.banks:>3} "
                 f"{r.peak_mib:>6.1f}M {r.e_none*1e3:>8.1f} "
                 f"{r.e_oracle*1e3:>9.1f} {r.e_online*1e3:>9.1f} "
                 f"{c.online_vs_none_pct:>+7.1f} {c.online_vs_oracle_pct:>+7.1f} "
-                f"{c.online.wake_violations:>6} {r.p95_latency_s:>7.2f} "
-                f"{r.ttft_p50_s:>7.3f} {r.ttft_p99_s:>7.3f} "
-                f"{r.tbt_p50_s:>8.4f} {r.tbt_p99_s:>8.4f}")
+                f"{r.wakes_reactive:>6} {r.stall_reactive_s*1e6:>8.1f}")
+            if has_fc:
+                if c.forecast is not None:
+                    line += (f" {r.e_forecast*1e3:>9.1f} "
+                             f"{c.forecast_vs_oracle_pct:>+8.1f} "
+                             f"{r.wakes_forecast:>6} "
+                             f"{r.stall_forecast_s*1e6:>9.1f}")
+                else:
+                    line += f" {'-':>9} {'-':>8} {'-':>6} {'-':>9}"
+            line += (f" {r.p95_latency_s:>7.2f} "
+                     f"{r.ttft_p50_s:>7.3f} {r.ttft_p99_s:>7.3f} "
+                     f"{r.tbt_p50_s:>8.4f} {r.tbt_p99_s:>8.4f}")
+            lines.append(line)
         return "\n".join(lines)
 
 
@@ -176,6 +217,7 @@ def fast_candidate_energies(durations: np.ndarray, occupancy: np.ndarray, *,
 
 def run_scenario(scn: Scenario, *, capacities_mib: Optional[Sequence[int]],
                  banks: Sequence[int], ctrl: ControllerConfig,
+                 fcfg: Optional[ForecastConfig] = None,
                  lengths: Optional[LengthModel] = None,
                  resample_dt: Optional[float] = None,
                  fast_backend: str = "auto",
@@ -241,7 +283,8 @@ def run_scenario(scn: Scenario, *, capacities_mib: Optional[Sequence[int]],
                   (c, b) for c in capacities_mib for b in banks)}
         best = min(points, key=lambda p: lb[p])
         inc = compare(dur, occ, capacity=best[0], banks=best[1],
-                      n_reads=n_r, n_writes=n_w, cfg=ctrl, backend=backend)
+                      n_reads=n_r, n_writes=n_w, cfg=ctrl, fcfg=fcfg,
+                      backend=backend)
         precomputed[best] = inc        # incumbent is already fully evaluated
         cutoff = inc.online.e_total * (1.0 + prune_margin)
         points = [p for p in points if lb[p] <= cutoff or p == best]
@@ -250,7 +293,7 @@ def run_scenario(scn: Scenario, *, capacities_mib: Optional[Sequence[int]],
                   n_points=len(points)):
         comparisons = compare_grid(
             dur, occ, points=[p for p in points if p not in precomputed],
-            n_reads=n_r, n_writes=n_w, cfg=ctrl, backend=backend)
+            n_reads=n_r, n_writes=n_w, cfg=ctrl, fcfg=fcfg, backend=backend)
     comparisons.update(precomputed)
     util = utilization_summary(sim)
     rows = [CampaignRow(scn, cap // MIB, b, comparisons[(cap, b)],
@@ -274,6 +317,7 @@ def run_campaign(archs: Sequence[str], *, arrivals: Sequence[str] = ("poisson",)
                  capacities_mib: Optional[Sequence[int]] = None,
                  banks: Sequence[int] = DEFAULT_BANKS,
                  ctrl: Optional[ControllerConfig] = None,
+                 fcfg: Optional[ForecastConfig] = None,
                  lengths: Optional[LengthModel] = None,
                  resample_dt: Optional[float] = None,
                  fast_backend: str = "auto",
@@ -302,7 +346,8 @@ def run_campaign(archs: Sequence[str], *, arrivals: Sequence[str] = ("poisson",)
                                    kv_dtype=kv_dtype)
                     sim, rows, fast = run_scenario(
                         scn, capacities_mib=capacities_mib, banks=banks,
-                        ctrl=ctrl, lengths=lengths, resample_dt=resample_dt,
+                        ctrl=ctrl, fcfg=fcfg, lengths=lengths,
+                        resample_dt=resample_dt,
                         fast_backend=fast_backend, backend=backend,
                         prune=prune, fidelity=fidelity, telemetry=telemetry)
                     key = (arch, scn.traffic_key)

@@ -28,6 +28,7 @@ from repro.core.cacti import WAKEUP_LATENCY_NS, SramCharacterization, \
     characterize
 from repro.core.candidates import Candidate, evaluate_candidates
 from repro.core.gating import GatingResult, Policy
+from repro.sim.pss import AffineForecaster
 
 
 @dataclass(frozen=True)
@@ -37,6 +38,22 @@ class ControllerConfig:
     wake_latency_s: float = WAKEUP_LATENCY_NS * 1e-9
 
 
+@dataclass(frozen=True)
+class ForecastConfig:
+    """Knobs of the forecast leg (`simulate_online_forecast`).
+
+    `window_s` trades noise immunity against reaction time of the fitted
+    trend; `lead_s` is the pre-wake horizon — it bounds how early a bank
+    may wake, so it also bounds the leakage one avoided violation costs
+    (roughly ``lead_s x leak_w_per_bank``)."""
+    window_s: float = 2.0                # trailing least-squares fit window
+    lead_s: Optional[float] = None       # pre-wake horizon; None → window/20
+
+    @property
+    def lead(self) -> float:
+        return self.lead_s if self.lead_s is not None else self.window_s / 20
+
+
 @dataclass
 class OnlineResult:
     """GatingResult + the online-only observables."""
@@ -44,6 +61,9 @@ class OnlineResult:
     wake_violations: int                 # wakes on the critical path
     stall_s: float                       # total wake-up latency exposed
     hysteresis_s: float
+    # forecast-leg observables (zero for the reactive controller)
+    pre_wakes: int = 0                   # forecast-triggered early wakes
+    early_wake_s: float = 0.0            # leakage seconds those wakes cost
 
     @property
     def e_total(self) -> float:
@@ -102,12 +122,130 @@ def simulate_online(durations: np.ndarray, occupancy: np.ndarray, *,
     return OnlineResult(g, violations, stall, h)
 
 
+def simulate_online_forecast(durations: np.ndarray, occupancy: np.ndarray, *,
+                             capacity: int, banks: int,
+                             cfg: Optional[ControllerConfig] = None,
+                             fcfg: Optional[ForecastConfig] = None,
+                             n_reads: int = 0, n_writes: int = 0,
+                             char: Optional[SramCharacterization] = None
+                             ) -> OnlineResult:
+    """The timeout policy plus PSS-style affine pre-wake.
+
+    Which idle runs get gated is identical to `simulate_online` (same
+    hysteresis timer); the forecast only adds *speculative wakes inside
+    gated runs*. While a bank sits gated, the controller fits the trailing
+    occupancy trend with a causal affine least-squares extrapolator
+    (:class:`repro.sim.pss.AffineForecaster` — the PSS affinity trick
+    pointed at time) and anchors the forecast at the *currently observed*
+    occupancy: demand is imminent at a boundary when the trend is rising
+    and ``occ_now + slope x lead`` crosses the bank's demand threshold
+    (``occ > b * alpha * capacity / banks``, exactly `bank_activity`'s
+    cut). The bank is held awake exactly while that signal holds and
+    re-gates the moment it drops — a false pre-wake therefore leaks only
+    for the segments it persisted, not for the rest of the run. A run
+    whose final approach the bank spent awake (woken at least
+    `wake_latency_s` before demand returned) turns its on-demand wake
+    violation into `early_wake_s` leakage: the forecast trades bounded
+    early leakage (~``lead x leak_w_per_bank`` per avoided violation)
+    against critical-path stalls.
+
+    Energy ordering: oracle <= online <= forecast on leakage-only terms is
+    NOT guaranteed (a bad forecast can speculatively wake for nothing),
+    but the extra leakage is bounded by the signal-active seconds and every
+    speculative wake costs one extra transition pair — both reported."""
+    cfg = cfg or ControllerConfig()
+    fcfg = fcfg or ForecastConfig()
+    ch = char or characterize(capacity, banks)
+    d = np.asarray(durations, np.float64)
+    occ = np.asarray(occupancy, np.float64)
+    total_time = float(d.sum())
+    h = cfg.hysteresis_multiple * ch.break_even_s
+    lead = fcfg.lead
+
+    e_dyn = n_reads * ch.e_read_j + n_writes * ch.e_write_j
+
+    act = bank_activity(occ, cfg.alpha, capacity, banks)
+    on = bank_on_matrix(act, banks)
+    cum = np.concatenate([[0.0], np.cumsum(d)])
+    usable = cfg.alpha * capacity / banks
+
+    # the fit inputs are bank-independent: evaluate the trend slope at
+    # every segment boundary once, then per-bank wake tests are just
+    # threshold compares against that bank's demand cut. The forecast is
+    # anchored at the observed occupancy (not the fitted intercept, which
+    # lags it right after a drop): occ_now + slope x lead.
+    fc = AffineForecaster(cum[:-1], occ, fcfg.window_s)
+    slopes = np.array([fc.slope(float(t)) for t in cum[:-1]])
+    fvals = occ + np.maximum(slopes, 0.0) * lead
+
+    on_seconds = 0.0
+    gated_seconds = 0.0
+    n_sw = 0
+    violations = 0
+    pre_wakes = 0
+    early_s = 0.0
+    for b in range(banks):
+        col = on[:, b]
+        on_seconds += float(d[col].sum())            # busy segments
+        run_d, starts, ends = idle_runs(d, col)
+        thresh = b * usable
+        for r, s, e in zip(run_d, starts, ends):
+            if r <= h:
+                on_seconds += r       # timer never expires: leak it out
+                continue
+            t_s, t_e = float(cum[s]), float(cum[e])
+            # speculative-wake decision points: boundaries in the gated
+            # region; the bank is awake through segment k iff the signal
+            # held at boundary k, and re-gates when it drops
+            k0 = int(np.searchsorted(cum[: len(d)], t_s + h, side="left"))
+            ks = np.arange(k0, e)
+            sig = (slopes[ks] > 0) & (fvals[ks] > thresh) if len(ks) \
+                else np.zeros(0, bool)
+            awake_s = float(d[ks[sig]].sum()) if sig.any() else 0.0
+            wakes = int(np.count_nonzero(sig[1:] & ~sig[:-1])
+                        + (1 if len(sig) and sig[0] else 0))
+            on_seconds += h + awake_s
+            gated_seconds += (r - h) - awake_s
+            early_s += awake_s
+            pre_wakes += wakes
+            # transition pairs: the initial gate-off/wake-on pair plus one
+            # per extra speculative wake (an on-demand wake is saved when
+            # the bank is already awake at the run's end)
+            n_sw += max(wakes + (0 if len(sig) and sig[-1] else 1), 1)
+            if e < len(d):
+                # the violation is avoided only if the bank spent the final
+                # approach awake, woken >= wake_latency_s before demand
+                if len(sig) and sig[-1]:
+                    j = len(sig) - 1
+                    while j > 0 and sig[j - 1]:
+                        j -= 1
+                    if t_e - float(cum[ks[j]]) < cfg.wake_latency_s:
+                        violations += 1
+                else:
+                    violations += 1
+
+    stall = violations * cfg.wake_latency_s
+    e_leak = ch.leak_w_per_bank * on_seconds
+    e_sw = n_sw * ch.e_switch_j
+    g = GatingResult(policy=(f"forecast(h={cfg.hysteresis_multiple:g}xBE,"
+                             f"w={fcfg.window_s:g}s)"),
+                     alpha=cfg.alpha, capacity=capacity, banks=banks,
+                     e_dyn=e_dyn, e_leak=e_leak, e_sw=e_sw,
+                     n_transitions=n_sw, gated_bank_seconds=gated_seconds,
+                     total_bank_seconds=banks * total_time,
+                     area_mm2=ch.area_mm2)
+    return OnlineResult(g, violations, stall, h,
+                        pre_wakes=pre_wakes, early_wake_s=early_s)
+
+
 @dataclass
 class ControllerComparison:
-    """online vs offline-oracle vs no-gating on the same trace/(C,B)."""
+    """online (reactive) vs offline-oracle vs no-gating on the same
+    trace/(C,B); optionally also the forecast controller leg."""
     online: OnlineResult
     oracle: GatingResult
     none: GatingResult
+    forecast: Optional[OnlineResult] = None
 
     @property
     def online_vs_none_pct(self) -> float:
@@ -117,14 +255,34 @@ class ControllerComparison:
     def online_vs_oracle_pct(self) -> float:
         return 100.0 * (self.online.e_total / self.oracle.e_total - 1.0)
 
+    @property
+    def forecast_vs_oracle_pct(self) -> float:
+        if self.forecast is None:
+            return float("nan")
+        return 100.0 * (self.forecast.e_total / self.oracle.e_total - 1.0)
+
+    @property
+    def forecast_vs_none_pct(self) -> float:
+        if self.forecast is None:
+            return float("nan")
+        return 100.0 * (self.forecast.e_total / self.none.e_total - 1.0)
+
     def format(self) -> str:
         o, g, n = self.online, self.oracle, self.none
-        return (f"E[mJ] none={n.e_total*1e3:.1f} "
-                f"oracle={g.e_total*1e3:.1f} "
-                f"online={o.e_total*1e3:.1f} "
-                f"({self.online_vs_none_pct:+.1f}% vs none, "
-                f"{self.online_vs_oracle_pct:+.1f}% vs oracle)  "
-                f"wakes={o.wake_violations} stall={o.stall_s*1e6:.1f}us")
+        out = (f"E[mJ] none={n.e_total*1e3:.1f} "
+               f"oracle={g.e_total*1e3:.1f} "
+               f"online={o.e_total*1e3:.1f} "
+               f"({self.online_vs_none_pct:+.1f}% vs none, "
+               f"{self.online_vs_oracle_pct:+.1f}% vs oracle)  "
+               f"wakes={o.wake_violations} stall={o.stall_s*1e6:.1f}us")
+        if self.forecast is not None:
+            f = self.forecast
+            out += (f"\n  forecast={f.e_total*1e3:.1f}mJ "
+                    f"({self.forecast_vs_oracle_pct:+.1f}% vs oracle)  "
+                    f"wakes={f.wake_violations} stall={f.stall_s*1e6:.1f}us "
+                    f"pre_wakes={f.pre_wakes} "
+                    f"early={f.early_wake_s*1e3:.2f}ms")
+        return out
 
 
 def _offline_candidates(capacity: int, banks: int, cfg: ControllerConfig,
@@ -144,6 +302,7 @@ def _offline_candidates(capacity: int, banks: int, cfg: ControllerConfig,
 def compare(durations: np.ndarray, occupancy: np.ndarray, *,
             capacity: int, banks: int, n_reads: int, n_writes: int,
             cfg: Optional[ControllerConfig] = None,
+            fcfg: Optional[ForecastConfig] = None,
             oracle_policy: Optional[Policy] = None,
             backend: str = "auto") -> ControllerComparison:
     """The paper-style three-way comparison at one (C, B) point.
@@ -158,17 +317,23 @@ def compare(durations: np.ndarray, occupancy: np.ndarray, *,
     online = simulate_online(durations, occupancy, capacity=capacity,
                              banks=banks, n_reads=n_reads, n_writes=n_writes,
                              cfg=cfg, char=ch)
+    fore = None
+    if fcfg is not None:
+        fore = simulate_online_forecast(
+            durations, occupancy, capacity=capacity, banks=banks,
+            n_reads=n_reads, n_writes=n_writes, cfg=cfg, fcfg=fcfg, char=ch)
     res = evaluate_candidates(
         durations, occupancy,
         _offline_candidates(capacity, banks, cfg, oracle_policy),
         n_reads=n_reads, n_writes=n_writes, backend=backend)
     return ControllerComparison(online, res.gating_result(0),
-                                res.gating_result(1))
+                                res.gating_result(1), forecast=fore)
 
 
 def compare_grid(durations: np.ndarray, occupancy: np.ndarray, *,
                  points: Sequence[Tuple[int, int]], n_reads: int,
                  n_writes: int, cfg: Optional[ControllerConfig] = None,
+                 fcfg: Optional[ForecastConfig] = None,
                  backend: str = "auto"
                  ) -> Dict[Tuple[int, int], ControllerComparison]:
     """Three-way comparisons for every (capacity, banks) point at once.
@@ -186,6 +351,12 @@ def compare_grid(durations: np.ndarray, occupancy: np.ndarray, *,
     for i, (cap, b) in enumerate(points):
         online = simulate_online(durations, occupancy, capacity=cap, banks=b,
                                  n_reads=n_reads, n_writes=n_writes, cfg=cfg)
+        fore = None
+        if fcfg is not None:
+            fore = simulate_online_forecast(
+                durations, occupancy, capacity=cap, banks=b,
+                n_reads=n_reads, n_writes=n_writes, cfg=cfg, fcfg=fcfg)
         out[(cap, b)] = ControllerComparison(
-            online, res.gating_result(2 * i), res.gating_result(2 * i + 1))
+            online, res.gating_result(2 * i), res.gating_result(2 * i + 1),
+            forecast=fore)
     return out

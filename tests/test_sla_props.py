@@ -1,0 +1,124 @@
+"""Hypothesis property tests for preemptive priority scheduling: random
+priority/arrival interleavings through the paged batcher never leak or
+double-free pages, and every preempted-and-requeued request still emits the
+exact tokens of an uncontended run."""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serve import PagedContinuousBatcher, Request  # noqa: E402
+from repro.serve.scheduler import AdmissionQueue  # noqa: E402
+
+# ---------------------------------------------------------------------------
+# AdmissionQueue vs a sorted shadow (host-only, cheap)
+# ---------------------------------------------------------------------------
+
+entry_st = st.lists(st.integers(0, 3), min_size=1, max_size=40)
+
+
+@given(entry_st)
+@settings(max_examples=80, deadline=None)
+def test_admission_queue_matches_stable_sort(priorities):
+    """Pop order == stable sort by descending priority (FIFO in a class)."""
+    q = AdmissionQueue()
+    reqs = [Request(rid=i, tokens=np.arange(2), priority=p)
+            for i, p in enumerate(priorities)]
+    for r in reqs:
+        q.push(r)
+    expect = [r.rid for r in sorted(reqs, key=lambda r: -r.priority)]
+    assert [q.pop().rid for _ in range(len(reqs))] == expect
+
+
+# ---------------------------------------------------------------------------
+# Full-batcher preemption safety (model-backed, kept deliberately small:
+# three prompt lengths x two budgets bound the prefill trace count)
+# ---------------------------------------------------------------------------
+
+_LENS = (6, 10, 14)
+_NEWS = (3, 5)
+_MODEL = None
+_REFS = {}
+
+
+def _model():
+    global _MODEL
+    if _MODEL is None:
+        import jax
+        import jax.numpy as jnp
+        from repro.configs import get_arch, reduced
+        from repro.models import build_model
+        cfg = reduced(get_arch("tinyllama-1.1b"), layers=2)
+        m = build_model(cfg, compute_dtype=jnp.float32, remat="none")
+        _MODEL = (cfg, m, m.init(jax.random.PRNGKey(0)))
+    return _MODEL
+
+
+def _prompt(cfg, L):
+    return (np.arange(L) * 7 + 3) % cfg.vocab_size
+
+
+def _batcher(m, params, num_pages):
+    return PagedContinuousBatcher(
+        m, params, num_slots=2, page_size=8, num_pages=num_pages,
+        max_pages_per_slot=8, chunk_steps=2, attn_backend="ref")
+
+
+def _reference(L, n):
+    """Uncontended greedy tokens for the (prompt length, budget) pair."""
+    if (L, n) not in _REFS:
+        cfg, m, params = _model()
+        cb = _batcher(m, params, num_pages=32)
+        cb.submit(Request(rid=0, tokens=_prompt(cfg, L), max_new_tokens=n))
+        (r,) = cb.run()
+        _REFS[(L, n)] = list(r.output)
+    return _REFS[(L, n)]
+
+
+req_st = st.lists(
+    st.tuples(st.integers(0, len(_LENS) - 1),    # prompt length pick
+              st.integers(0, len(_NEWS) - 1),    # decode budget pick
+              st.integers(0, 2)),                # priority class
+    min_size=1, max_size=5)
+sched_st = st.lists(st.integers(0, 3), max_size=10)
+
+
+@given(req_st, sched_st)
+@settings(max_examples=10, deadline=None)
+def test_preemption_never_leaks_and_outputs_stay_exact(picks, schedule):
+    """Drive submissions and decode chunks in a random interleaving over a
+    pool too small for two worst-case requests (so priority arrivals
+    preempt). Invariants: every request finishes, the allocator drains to
+    zero (a double free would raise inside PageAllocator), the occupancy
+    trace integrates to zero, and each request's tokens — preempted or not
+    — are bit-identical to its uncontended run."""
+    cfg, m, params = _model()
+    reqs = [Request(rid=i, tokens=_prompt(cfg, _LENS[li]),
+                    max_new_tokens=_NEWS[ni], priority=p)
+            for i, (li, ni, p) in enumerate(picks)]
+    expect = {r.rid: _reference(_LENS[li], _NEWS[ni])
+              for r, (li, ni, _) in zip(reqs, picks)}
+
+    cb = _batcher(m, params, num_pages=6)        # 5 usable pages: contended
+    pending = list(reqs)
+    done = []
+    for op in schedule:
+        if op and pending:
+            cb.submit(pending.pop(0))
+        elif cb.queue or any(s is not None for s in cb.slots):
+            cb._admit(done)
+            cb._decode_chunk(done)
+    for r in pending:
+        cb.submit(r)
+    done += cb.run()
+
+    assert len(done) == len(reqs)
+    assert cb.ledger.allocator.n_allocated == 0
+    assert cb.ledger.allocator.n_free == cb.num_pages - 1
+    assert sum(cb.ledger.trace.ev_dneeded) == 0
+    assert cb.stats.pages_allocated == cb.stats.pages_freed
+    for r in done:
+        assert list(r.output) == expect[r.rid], \
+            f"rid={r.rid} preemptions={r.preemptions}"

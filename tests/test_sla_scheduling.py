@@ -1,0 +1,403 @@
+"""SLA-aware scheduling: chunked prefill, preemptive priority admission,
+and the PSS-forecast pre-wake gating controller (plus the satellites:
+long-prompt validation, clock ownership, dual-clock latency stamps)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.models import build_model
+from repro.obs.telemetry import Telemetry
+from repro.serve import (AdmissionQueue, BatchedServer,
+                         PagedContinuousBatcher, Request, ServeConfig)
+from repro.serve.scheduler import ContinuousBatcher
+from repro.sim.pss import AffineForecaster
+from repro.traffic import ControllerConfig, LengthModel, generate, \
+    simulate_online, simulate_traffic
+from repro.traffic.controller import ForecastConfig, compare, \
+    simulate_online_forecast
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = reduced(get_arch("tinyllama-1.1b"), layers=2)
+    m = build_model(cfg, compute_dtype=jnp.float32, remat="none")
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _batcher(m, params, **kw):
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("num_pages", 32)
+    kw.setdefault("max_pages_per_slot", 8)
+    kw.setdefault("chunk_steps", 4)
+    kw.setdefault("attn_backend", "ref")
+    return PagedContinuousBatcher(m, params, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole 1: chunked prefill — bit-exact vs monolithic, TBT relief
+# ---------------------------------------------------------------------------
+
+def test_chunked_prefill_tokens_bit_identical_to_monolithic(small):
+    """Slicing the prompt must not change a single emitted token. Greedy
+    tokens are compared against the plain monolithic prefill; logits are
+    compared bit-for-bit against the *fixed-width* monolithic reference (a
+    prefix batcher with an empty index), which shares the chunked path's
+    padded attention width — the plain prefill computes at its own width,
+    so its logits can differ in the last ulp without any token moving."""
+    cfg, m, params = small
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, n) for n in (40, 17, 33)]
+    new = [6, 5, 7]
+
+    mono = _batcher(m, params, num_slots=1)
+    for i, (p, n) in enumerate(zip(prompts, new)):
+        mono.submit(Request(rid=i, tokens=p, max_new_tokens=n))
+    tok_refs = {r.rid: list(r.output) for r in mono.run()}
+
+    fixed = {}
+    for i, (p, n) in enumerate(zip(prompts, new)):
+        b = _batcher(m, params, num_slots=1, prefix_cache=True,
+                     collect_logits=True)
+        b.submit(Request(rid=i, tokens=p, max_new_tokens=n))
+        (r,) = b.run()
+        assert b.stats.prefix_hits == 0
+        fixed[i] = [np.asarray(x) for x in r.logits]
+
+    cb = _batcher(m, params, num_slots=1, prefill_chunk_tokens=16,
+                  collect_logits=True)
+    for i, (p, n) in enumerate(zip(prompts, new)):
+        cb.submit(Request(rid=i, tokens=p, max_new_tokens=n))
+    done = cb.run()
+    assert cb.stats.prefill_slices >= 3 + 3      # 40 -> 3 slices, 33 -> 3
+    for r in done:
+        assert list(r.output) == tok_refs[r.rid]
+        np.testing.assert_array_equal(np.stack(r.logits),
+                                      np.stack(fixed[r.rid]))
+
+
+def test_chunked_prefill_interleaves_decode_between_slices(small):
+    """While a long prompt admits slice-by-slice, already-active slots must
+    keep streaming tokens (the whole point of chunking) — and still emit
+    exactly the tokens an isolated run would."""
+    cfg, m, params = small
+    rng = np.random.default_rng(12)
+    short = rng.integers(0, cfg.vocab_size, 9)
+    long = rng.integers(0, cfg.vocab_size, 48)
+    srv = BatchedServer(m, params, ServeConfig(max_len=64))
+    ref_short = np.asarray(srv.generate(
+        {"tokens": jnp.asarray(short[None, :], jnp.int32)},
+        max_new_tokens=12)["tokens"][0])
+    ref_long = np.asarray(srv.generate(
+        {"tokens": jnp.asarray(long[None, :], jnp.int32)},
+        max_new_tokens=5)["tokens"][0])
+
+    cb = _batcher(m, params, num_slots=2, num_pages=32,
+                  prefill_chunk_tokens=16)
+    cb.submit(Request(rid=0, tokens=short, max_new_tokens=12))
+    cb.submit(Request(rid=1, tokens=long, max_new_tokens=5))
+    done = cb.run()
+    assert len(done) == 2
+    by = {r.rid: r for r in done}
+    np.testing.assert_array_equal(np.asarray(by[0].output), ref_short)
+    np.testing.assert_array_equal(np.asarray(by[1].output), ref_long)
+    # the long admission ran >= 3 slices with decode chunks between them
+    assert cb.stats.prefill_slices >= 3
+    assert cb.stats.peak_active_slots == 2
+    assert cb.ledger.allocator.n_allocated == 0
+
+
+def test_chunked_prefill_validation(small):
+    cfg, m, params = small
+    with pytest.raises(ValueError, match="multiple of"):
+        _batcher(m, params, prefill_chunk_tokens=12)    # not a page multiple
+    with pytest.raises(ValueError, match="multiple of"):
+        _batcher(m, params, prefill_chunk_tokens=0)
+    with pytest.raises(ValueError, match="prefix_cache"):
+        _batcher(m, params, prefill_chunk_tokens=16, prefix_cache=True)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole 2: priority admission + preemption-and-requeue
+# ---------------------------------------------------------------------------
+
+def test_priority_queue_orders_classes_fifo_within():
+    q = AdmissionQueue()
+    reqs = [Request(rid=i, tokens=np.arange(4), priority=p)
+            for i, p in enumerate([0, 2, 1, 2, 0])]
+    for r in reqs:
+        q.push(r)
+    assert [q.pop().rid for _ in range(len(reqs))] == [1, 3, 2, 0, 4]
+    assert len(q) == 0
+
+
+def test_preemption_frees_slot_for_high_priority(small):
+    """A high-priority arrival with every slot busy evicts the lowest-
+    priority slot; the victim requeues, re-prefills from scratch, and its
+    final tokens are bit-identical to an uncontended run."""
+    cfg, m, params = small
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, cfg.vocab_size, n) for n in (10, 14, 12)]
+    refs = []
+    srv = BatchedServer(m, params, ServeConfig(max_len=64))
+    for p in prompts:
+        refs.append(np.asarray(srv.generate(
+            {"tokens": jnp.asarray(p[None, :], jnp.int32)},
+            max_new_tokens=20)["tokens"][0]))
+
+    cb = _batcher(m, params, num_slots=1, num_pages=32, chunk_steps=2)
+    cb.submit(Request(rid=0, tokens=prompts[0], max_new_tokens=20,
+                      priority=0))
+    # admit rid=0, decode one chunk, then a priority-1 arrival preempts it
+    cb._admit([])
+    done = []
+    cb._decode_chunk(done)
+    assert cb.slots[0] is not None and cb.slots[0].rid == 0
+    cb.submit(Request(rid=1, tokens=prompts[1], max_new_tokens=20,
+                      priority=1))
+    cb.submit(Request(rid=2, tokens=prompts[2], max_new_tokens=20,
+                      priority=0))
+    done += cb.run()
+    assert len(done) == 3
+    by = {r.rid: r for r in done}
+    # the victim restarted: preemption counted, tokens still exact
+    assert by[0].preemptions >= 1
+    assert cb.stats.preemptions >= 1
+    for i in range(3):
+        np.testing.assert_array_equal(np.asarray(by[i].output), refs[i])
+    # high priority finished before the preempted low-priority request
+    assert by[1].finished_s < by[0].finished_s
+    assert cb.ledger.allocator.n_allocated == 0
+
+
+def test_equal_priority_never_preempts(small):
+    cfg, m, params = small
+    rng = np.random.default_rng(14)
+    cb = _batcher(m, params, num_slots=1, chunk_steps=2)
+    for i in range(3):
+        cb.submit(Request(rid=i, tokens=rng.integers(0, cfg.vocab_size, 8),
+                          max_new_tokens=6, priority=5))
+    done = cb.run()
+    assert len(done) == 3
+    assert cb.stats.preemptions == 0
+    assert all(r.preemptions == 0 for r in done)
+    # FCFS within the class: retirement order == submission order
+    assert [r.rid for r in done] == [0, 1, 2]
+
+
+def test_preemption_on_page_pressure_not_just_slots(small):
+    """Backpressure path: slots are free but the pool is not — a high-
+    priority head may still evict a lower-priority page holder."""
+    cfg, m, params = small
+    cb = _batcher(m, params, num_slots=2, num_pages=7, max_pages_per_slot=6,
+                  page_size=8, chunk_steps=2)
+    # 33-token prompt + 8 new -> worst 5 pages; two never fit (6 free pages)
+    cb.submit(Request(rid=0, tokens=np.arange(33) % cfg.vocab_size,
+                      max_new_tokens=8, priority=0))
+    cb._admit([])
+    assert cb.slots[0] is not None
+    cb.submit(Request(rid=1, tokens=(np.arange(33) * 5) % cfg.vocab_size,
+                      max_new_tokens=8, priority=3))
+    done = cb.run()
+    assert len(done) == 2
+    assert cb.stats.preemptions >= 1
+    by = {r.rid: r for r in done}
+    assert by[1].finished_s < by[0].finished_s
+    assert cb.ledger.allocator.n_allocated == 0
+
+
+# ---------------------------------------------------------------------------
+# S1: long-prompt validation at submit() on both batchers
+# ---------------------------------------------------------------------------
+
+def test_long_prompt_rejected_dense(small):
+    cfg, m, params = small
+    cb = ContinuousBatcher(m, params, num_slots=1, max_len=32)
+    with pytest.raises(ValueError, match="max_len"):
+        cb.submit(Request(rid=0, tokens=np.arange(40) % cfg.vocab_size,
+                          max_new_tokens=4))
+    # nothing half-submitted: the queue stayed empty and a valid request
+    # still runs through cleanly
+    assert len(cb.queue) == 0
+    cb.submit(Request(rid=1, tokens=np.arange(8) % cfg.vocab_size,
+                      max_new_tokens=4))
+    assert len(cb.run()) == 1
+
+
+def test_long_prompt_truncated_dense(small):
+    """Truncation must be consistent between compute and trace: the trace
+    never exceeds the declared capacity and admitted == retired bytes."""
+    cfg, m, params = small
+    cb = ContinuousBatcher(m, params, num_slots=1, max_len=32,
+                           on_long_prompt="truncate")
+    cb.submit(Request(rid=0, tokens=np.arange(50) % cfg.vocab_size,
+                      max_new_tokens=4))
+    done = cb.run()
+    assert len(done) == 1 and len(done[0].output) == 4
+    assert len(done[0].tokens) == 32
+    assert cb.trace.peak_needed() <= cb.trace.capacity
+    assert cb.stats.admitted_kv_bytes == cb.stats.retired_kv_bytes
+
+
+def test_long_prompt_rejected_paged(small):
+    cfg, m, params = small
+    from repro.serve import OutOfPages
+    cb = _batcher(m, params)          # 8 pages x 8 tokens = 64-token slots
+    with pytest.raises(OutOfPages):
+        cb.submit(Request(rid=0, tokens=np.arange(70) % cfg.vocab_size,
+                          max_new_tokens=4))
+    assert len(cb.queue) == 0
+
+
+def test_long_prompt_truncated_paged(small):
+    cfg, m, params = small
+    cb = _batcher(m, params, on_long_prompt="truncate")
+    cb.submit(Request(rid=0, tokens=np.arange(70) % cfg.vocab_size,
+                      max_new_tokens=5))
+    done = cb.run()
+    assert len(done) == 1 and len(done[0].output) == 5
+    # decode budget kept; prompt cut to what the slot table can hold
+    assert len(done[0].tokens) == 8 * 8 - 4
+    assert cb.ledger.allocator.n_allocated == 0
+    assert cb.ledger.trace.peak_needed() <= cb.ledger.trace.capacity
+
+
+# ---------------------------------------------------------------------------
+# S2: telemetry clock ownership — two engines, one registry
+# ---------------------------------------------------------------------------
+
+def test_second_batcher_on_same_registry_raises(small):
+    cfg, m, params = small
+    tel = Telemetry(enabled=True)
+    cb1 = _batcher(m, params, telemetry=tel)
+    with pytest.raises(RuntimeError, match="clock"):
+        _batcher(m, params, telemetry=tel)
+    with pytest.raises(RuntimeError, match="clock"):
+        BatchedServer(m, params, ServeConfig(max_len=32), telemetry=tel)
+    # releasing the clock makes the registry reusable
+    tel.release_clock()
+    cb2 = _batcher(m, params, telemetry=tel)
+    assert cb2 is not None
+    del cb1
+
+
+def test_dense_and_engine_also_claim_clock(small):
+    cfg, m, params = small
+    tel = Telemetry(enabled=True)
+    ContinuousBatcher(m, params, num_slots=1, max_len=32, telemetry=tel)
+    with pytest.raises(RuntimeError, match="clock"):
+        ContinuousBatcher(m, params, num_slots=1, max_len=32, telemetry=tel)
+
+
+# ---------------------------------------------------------------------------
+# S3: dual-clock request stamps
+# ---------------------------------------------------------------------------
+
+def test_latency_on_sim_clock_matches_slo_time_base(small):
+    cfg, m, params = small
+    tel = Telemetry(enabled=True)
+    cb = _batcher(m, params, telemetry=tel)
+    cb.submit(Request(rid=0, tokens=np.arange(9) % cfg.vocab_size,
+                      max_new_tokens=6))
+    done = cb.run()
+    r = done[0]
+    # sim-clock latency: bounded by the batcher's logical end time and
+    # consistent with the request's own timeline stamps
+    assert 0 < r.latency_s <= cb._sim_t
+    assert r.latency_s == pytest.approx(r.finished_s - r.submitted_s)
+    assert r.timeline is not None
+    assert r.finished_s == pytest.approx(r.timeline.finish_t)
+    # e2e percentile of the single request == its sim latency
+    s = cb.slo_summary()
+    assert s.e2e_p99_s == pytest.approx(r.latency_s)
+    # wall stamps exist and are on a different (host) time base
+    assert r.finished_wall_s > r.submitted_wall_s > 0
+    assert r.wall_latency_s > 0
+
+
+# ---------------------------------------------------------------------------
+# Tentpole 3: forecast-driven pre-wake gating
+# ---------------------------------------------------------------------------
+
+def test_affine_forecaster_exact_and_causal():
+    t = np.linspace(0.0, 10.0, 101)
+    y = 3.0 + 2.0 * t
+    fc = AffineForecaster(t, y, window_s=1.0)
+    v, b = fc.fit(5.0)
+    assert v == pytest.approx(13.0)
+    assert b == pytest.approx(2.0)
+    assert fc.forecast(5.0, 0.5) == pytest.approx(14.0)
+    # strictly causal: a step at t=5 is invisible to queries at t<5
+    y2 = np.where(t < 5.0, 1.0, 100.0)
+    fc2 = AffineForecaster(t, y2, window_s=1.0)
+    assert fc2.fit(4.9)[0] == pytest.approx(1.0)
+    assert fc2.slope(4.9) == pytest.approx(0.0)
+    # conditioning: re-centering keeps the fit usable at large absolute
+    # times (without it the normal equations lose every significant digit)
+    fc3 = AffineForecaster(t + 1e6, y, window_s=1.0)
+    assert fc3.slope(1e6 + 5.0) == pytest.approx(2.0, rel=1e-2)
+    with pytest.raises(ValueError):
+        AffineForecaster(t[::-1], y, 1.0)
+    with pytest.raises(ValueError):
+        AffineForecaster(t, y, 0.0)
+
+
+@pytest.fixture(scope="module")
+def diurnal_trace():
+    cfg = get_arch("tinyllama-1.1b")
+    reqs = generate("diurnal", 6.0, 30.0, seed=0,
+                    lengths=LengthModel(max_len=2048))
+    sim = simulate_traffic(cfg, reqs, num_slots=8, max_len=2048)
+    dur, occ = sim.trace.occupancy_series(sim.total_time, use="needed")
+    return sim, dur, occ
+
+
+def test_forecast_reduces_violations_within_energy_bound(diurnal_trace):
+    """The acceptance criterion: on diurnal traffic the forecast controller
+    must cut wake violations vs the reactive policy while staying within
+    +2% energy of the offline oracle."""
+    sim, dur, occ = diurnal_trace
+    cap = 32 * 2**20
+    kw = dict(capacity=cap, banks=8,
+              n_reads=sim.bundle.access.n_reads("kv"),
+              n_writes=sim.bundle.access.n_writes("kv"))
+    c = compare(dur, occ, cfg=ControllerConfig(), fcfg=ForecastConfig(),
+                backend="ref", **kw)
+    assert c.forecast is not None
+    assert c.forecast.wake_violations < c.online.wake_violations
+    assert c.forecast.pre_wakes > 0
+    assert c.forecast.early_wake_s > 0
+    assert c.forecast_vs_oracle_pct <= 2.0
+    # stall accounting mirrors the reactive controller's
+    assert c.forecast.stall_s == pytest.approx(
+        c.forecast.wake_violations * ControllerConfig().wake_latency_s)
+
+
+def test_forecast_with_zero_lead_gates_like_reactive(diurnal_trace):
+    """lead=0 never crosses a threshold early, so gated/leak seconds match
+    the reactive policy bank-for-bank."""
+    sim, dur, occ = diurnal_trace
+    kw = dict(capacity=32 * 2**20, banks=8)
+    re = simulate_online(dur, occ, **kw)
+    fc = simulate_online_forecast(dur, occ, fcfg=ForecastConfig(lead_s=0.0),
+                                  **kw)
+    assert fc.gating.gated_bank_seconds == pytest.approx(
+        re.gating.gated_bank_seconds)
+    assert fc.wake_violations == re.wake_violations
+    assert fc.early_wake_s == pytest.approx(0.0)
+
+
+def test_forecast_flat_trace_never_pre_wakes():
+    """No rising trend -> no speculative wakes; identical to reactive."""
+    d = np.array([1.0, 1.0] * 8)
+    occ = np.array([100 * 2**20, 1 * 2**20] * 8, np.int64)
+    kw = dict(capacity=128 * 2**20, banks=8)
+    re = simulate_online(d, occ, **kw)
+    fc = simulate_online_forecast(d, occ, **kw)
+    # square-wave idle runs have flat-or-falling interiors: zero early leak
+    assert fc.pre_wakes == 0
+    assert fc.e_total == pytest.approx(re.e_total)
+    assert fc.wake_violations == re.wake_violations
