@@ -5,8 +5,8 @@ import sys
 import traceback
 
 from benchmarks import kernels_bench, paper_figs, prefix_bench, \
-    quant_bench, serve_bench, sla_bench, stage1_bench, stage2_bench, \
-    traffic_bench
+    quant_bench, serve_bench, sla_bench, spec_bench, stage1_bench, \
+    stage2_bench, traffic_bench
 
 BENCHES = [
     ("fig1_mha_vs_gqa", paper_figs.fig1_mha_vs_gqa),
@@ -27,6 +27,7 @@ BENCHES = [
     ("serve_prefix", prefix_bench.bench_serve_prefix),
     ("serve_quant", quant_bench.bench_serve_quant),
     ("serve_sla", sla_bench.bench_serve_sla),
+    ("serve_spec", spec_bench.bench_serve_spec),
     ("kern_flash_attention", kernels_bench.bench_flash_attention),
     ("kern_gqa_decode", kernels_bench.bench_gqa_decode),
     ("kern_int8_matmul", kernels_bench.bench_int8_matmul),

@@ -1,0 +1,211 @@
+"""Speculative-decoding benchmark: accepted-tokens/s on the paged path.
+
+Two guarded measurements on an 8-layer reduced config, written to
+`BENCH_spec.json`:
+
+  * identity leg — the speculative batcher (self-speculation draft = 1 of
+    8 layers, k=3) must emit greedy tokens **bit-identical** to the
+    non-speculative paged loop on the same requests;
+  * throughput leg — decode accepted-tokens/s, speculative vs
+    non-speculative, both through warm jitted chunk loops (prefills
+    untimed, same `chunk_steps` envelope): one batched `paged_gqa_verify`
+    round (k+1 candidate rows through all 8 layers) plus k+1 single-layer
+    draft steps replaces up to k+1 sequential full decode steps. The bar
+    is >= 1.5x.
+
+The draft here agrees with the target by construction: the benchmark
+damps every block's residual branches (attn `wo`, FFN `w_down`) so all
+blocks are near-identity and the 1-layer draft tracks the 8-layer
+target's argmax. That makes the *acceptance rate* an engineered property
+of the weights — it is still measured and reported, never assumed — while
+the *speedup at that acceptance* is the real measured quantity: verify
+cost, draft cost, rollback cost and host scheduling all run for real.
+Random untrained weights have no meaningful agreement to measure.
+
+Also checks the batched verification kernel (interpret mode) against the
+jnp reference on a ragged page-table batch.
+
+Run:  PYTHONPATH=src python -m benchmarks.spec_bench [out.json]
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.models import build_model
+from repro.models.transformer import self_spec_draft
+from repro.serve import PagedContinuousBatcher, Request
+
+DEFAULT_OUT = "BENCH_spec.json"
+SPEEDUP_BAR = 1.5
+
+LAYERS = 8
+SPEC_K = 3
+DAMP = 1e-3
+B, PROMPT_LEN, N_NEW = 2, 16, 97
+PAGE_SIZE, CHUNK_STEPS = 8, 32
+
+
+def _build():
+    cfg = dataclasses.replace(
+        reduced(get_arch("tinyllama-1.1b"), layers=LAYERS),
+        d_model=256, d_ff=1024, num_heads=4, num_kv_heads=2, head_dim=64,
+        vocab_size=512)
+    model = build_model(cfg, compute_dtype=jnp.float32, remat="none")
+    params = model.init(jax.random.PRNGKey(0))
+    # near-identity blocks: the 1-layer draft tracks the 8-layer target
+    blocks = []
+    for blk in params["blocks"]:
+        blk = dict(blk)
+        blk["attn"] = dict(blk["attn"], wo=blk["attn"]["wo"] * DAMP)
+        blk["ffn"] = dict(blk["ffn"], w_down=blk["ffn"]["w_down"] * DAMP)
+        blocks.append(blk)
+    params = dict(params, blocks=blocks)
+    draft, dparams = self_spec_draft(model, params, skip=LAYERS)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, PROMPT_LEN) for _ in range(B)]
+    return cfg, model, params, draft, dparams, prompts
+
+
+def _batcher(model, params, **kw):
+    return PagedContinuousBatcher(
+        model, params, num_slots=B, page_size=PAGE_SIZE, num_pages=96,
+        max_pages_per_slot=20, chunk_steps=CHUNK_STEPS, attn_backend="ref",
+        **kw)
+
+
+def _run_fn(model, params, prompts, **kw):
+    """(timed-run closure, batcher): reuses ONE batcher so its jitted
+    chunk loops stay warm across repetitions; prefills are untimed."""
+    cb = _batcher(model, params, **kw)
+
+    def run():
+        for i, p in enumerate(prompts):
+            cb.submit(Request(rid=i, tokens=p, max_new_tokens=N_NEW))
+        done: list = []
+        cb._admit(done)
+        t0 = time.perf_counter()
+        while any(s is not None for s in cb.slots):
+            cb._decode_chunk(done)
+        dt = time.perf_counter() - t0
+        assert len(done) == B
+        return dt
+
+    return run, cb
+
+
+def _verify_kernel_exactness() -> float:
+    """Max abs error, interpret-mode verify kernel vs jnp reference."""
+    from repro.kernels.paged_gqa_verify import (paged_gqa_verify,
+                                               paged_gqa_verify_ref)
+    rng = np.random.default_rng(0)
+    Bk, H, K, d, ps, P, N, V = 4, 12, 2, 64, 16, 6, 24, 4
+    q = jnp.asarray(rng.normal(size=(Bk, V, H, d)), jnp.float32)
+    pk = jnp.asarray(rng.normal(size=(N, K, ps, d)), jnp.float32)
+    pv = jnp.asarray(rng.normal(size=(N, K, ps, d)), jnp.float32)
+    lengths = np.array([1, 16, 37, 64], np.int32)
+    pt = np.zeros((Bk, P), np.int64)
+    ids = list(range(1, N))
+    rng.shuffle(ids)
+    for b in range(Bk):
+        for j in range(-(-(int(lengths[b]) + V) // ps)):
+            pt[b, j] = ids.pop()
+    pt, lengths = jnp.asarray(pt, jnp.int32), jnp.asarray(lengths)
+    out = paged_gqa_verify(q, pk, pv, pt, lengths, backend="interpret")
+    ref = paged_gqa_verify_ref(q, pk, pv, pt, lengths)
+    return float(jnp.abs(out - ref).max())
+
+
+def bench_spec(out_path: str = DEFAULT_OUT):
+    cfg, model, params, draft, dparams, prompts = _build()
+
+    err = _verify_kernel_exactness()
+    assert err < 2e-5, f"verify kernel vs reference: max abs err {err:.2e}"
+
+    # ---- identity leg: full runs, fresh batchers ------------------------
+    def full_run(**kw):
+        cb = _batcher(model, params, **kw)
+        for i, p in enumerate(prompts):
+            cb.submit(Request(rid=i, tokens=p, max_new_tokens=N_NEW))
+        return {r.rid: list(r.output) for r in cb.run()}, cb
+
+    ref, _ = full_run()
+    got, cb_id = full_run(speculate_k=SPEC_K, draft_model=draft,
+                          draft_params=dparams)
+    assert got == ref, "speculative output diverged from greedy baseline"
+
+    # ---- throughput leg: warm chunk loops, prefills untimed -------------
+    run_base, _ = _run_fn(model, params, prompts)
+    run_spec, cb_spec = _run_fn(model, params, prompts, speculate_k=SPEC_K,
+                                draft_model=draft, draft_params=dparams)
+    run_base(), run_spec()                       # warm compile
+    dt_base = min(run_base() for _ in range(3))
+    dt_spec = min(run_spec() for _ in range(3))
+    tok = B * (N_NEW - 1)
+    base_tok_s = tok / dt_base
+    spec_tok_s = tok / dt_spec
+    speedup = spec_tok_s / base_tok_s
+
+    st = cb_spec.stats
+    accepted_per_round = st.accepted_tokens / max(st.spec_rounds, 1)
+    report = {
+        "config": (f"{cfg.name} ({LAYERS} layers, d_model={cfg.d_model}), "
+                   f"draft=1 layer self-spec, k={SPEC_K}"),
+        "slots": B,
+        "prompt_len": PROMPT_LEN,
+        "new_tokens": N_NEW,
+        "chunk_steps": CHUNK_STEPS,
+        "page_size": PAGE_SIZE,
+        "residual_damp": DAMP,
+        "verify_kernel_max_abs_err": err,
+        "bit_identical": got == ref,
+        "base_tok_s": base_tok_s,
+        "accepted_tok_s": spec_tok_s,
+        "speedup": speedup,
+        "accepted_per_round": accepted_per_round,
+        "acceptance_rate_measured": (
+            (st.accepted_tokens - st.spec_rounds)
+            / max(st.drafted_tokens, 1)),
+        "spec_rounds": st.spec_rounds,
+        "rolled_back_pages": cb_id.stats.rolled_back_pages,
+        "note": ("acceptance is engineered via near-identity blocks (see "
+                 "module docstring) and measured, never assumed; speedup "
+                 "compares warm jitted decode chunk loops, prefills "
+                 "untimed, greedy tokens bit-identical"),
+    }
+    assert speedup >= SPEEDUP_BAR, (
+        f"speculative decode {speedup:.2f}x accepted-tok/s vs "
+        f"non-speculative, bar is {SPEEDUP_BAR}x")
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    return report
+
+
+def bench_serve_spec():
+    """benchmarks.run adapter: (us per accepted token, derived)."""
+    r = bench_spec()
+    return 1e6 / r["accepted_tok_s"], (
+        f"{r['speedup']:.2f}x accepted-tok/s (bar {SPEEDUP_BAR}x) "
+        f"{r['accepted_per_round']:.2f}/{SPEC_K + 1} tok/round "
+        f"bit-identical={r['bit_identical']}")
+
+
+def main() -> None:
+    out = sys.argv[1] if len(sys.argv) > 1 else DEFAULT_OUT
+    r = bench_spec(out)
+    print(json.dumps(r, indent=1))
+    print(f"wrote {out}: {r['accepted_tok_s']:.1f} accepted tok/s = "
+          f"{r['speedup']:.2f}x non-speculative ({r['base_tok_s']:.1f}), "
+          f"{r['accepted_per_round']:.2f}/{SPEC_K + 1} tok/round, "
+          f"{r['rolled_back_pages']} pages rolled back")
+
+
+if __name__ == "__main__":
+    main()

@@ -139,4 +139,25 @@ grep -q "E_fcast" /tmp/forecast_smoke.out
 # inside; BENCH_sla.json records both legs
 PYTHONPATH=src timeout 600 python -m benchmarks.sla_bench \
     /tmp/BENCH_sla.json | tail -1
+
+# speculative-decoding smoke: draft/target on one page pool, batched
+# verification, rollback-by-truncation (bit-identity assertion runs inside)
+PYTHONPATH=src timeout 300 python examples/spec_serving.py \
+    --new-tokens 10 > /tmp/spec_smoke.out
+grep -q "bit-identical to non-speculative loop: True" /tmp/spec_smoke.out
+grep -q "rolled back" /tmp/spec_smoke.out
+
+# spec occupancy channel through the traffic CLI: burst/rollback sawtooth
+# report next to the controller legs
+PYTHONPATH=src timeout 120 python -m repro.launch.traffic \
+    --model tinyllama-1.1b --rate 2 --horizon 6 --slots 4 --max-len 512 \
+    --banks 8 --fast-backend ref --no-mha-ref --speculate 4 \
+    > /tmp/spec_campaign.out
+grep -q "speculative decoding" /tmp/spec_campaign.out
+grep -q "rolled back" /tmp/spec_campaign.out
+
+# speculative benchmark: verify-kernel exactness, bit-identity and the
+# >=1.5x accepted-tokens/s bar are asserted inside
+PYTHONPATH=src timeout 600 python -m benchmarks.spec_bench \
+    /tmp/BENCH_spec.json | tail -1
 echo "ci: OK"

@@ -61,6 +61,22 @@ def main() -> None:
               f"(base {case['base_case']})")
     print(f"wrote {qout}")
 
+    # speculative-decoding fixtures: burst/rollback occupancy, both KV lanes
+    sout = golden_util.SPEC_GOLDEN_PATH if len(sys.argv) <= 1 else \
+        os.path.join(os.path.dirname(out), "spec_golden.json")
+    spayload = golden_util.build_spec_golden()
+    with open(sout, "w") as f:
+        json.dump(spayload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    for name, case in spayload.items():
+        st = case["stats"]
+        print(f"{name}: {case['n_requests']} reqs, "
+              f"rounds={st['spec_rounds']}, "
+              f"accepted={st['accepted_tokens']}/{st['drafted_tokens']} "
+              f"drafted, rolled_back={st['rolled_back_pages']} pages, "
+              f"peak={case['mems']['kv']['peak_needed']} B")
+    print(f"wrote {sout}")
+
 
 if __name__ == "__main__":
     main()

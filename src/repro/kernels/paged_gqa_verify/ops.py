@@ -1,0 +1,34 @@
+"""Jit'd public wrapper for paged GQA speculative verification."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import quant
+from repro.kernels.paged_gqa_verify.kernel import paged_gqa_verify_kernel
+from repro.kernels.paged_gqa_verify.ref import paged_gqa_verify_ref
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def paged_gqa_verify(q, k_pages, v_pages, page_table, base_lens, *,
+                     backend: str = "auto"):
+    """backend: auto | pallas | interpret | ref.
+
+    q: (B, V, H, d) — V = spec_k + 1 query rows per slot, row v at absolute
+    position base_lens + v; k_pages, v_pages: (N, K, page_size, d);
+    page_table: (B, P) int32 page ids; base_lens: (B,) int32 context
+    lengths before the speculative window. -> (B, V, H, d)."""
+    if backend == "auto":
+        backend = ("pallas" if jax.default_backend() == "tpu" else "ref")
+    if backend == "ref":
+        return paged_gqa_verify_ref(q, k_pages, v_pages, page_table,
+                                    base_lens)
+    if k_pages.dtype == quant.FP8_STORAGE_DTYPE:
+        # fp8 pools travel as uint8 bit codes (see quant.FP8_STORAGE_DTYPE);
+        # the kernel wants the float8 view
+        k_pages = jax.lax.bitcast_convert_type(k_pages, quant.FP8_DTYPE)
+        v_pages = jax.lax.bitcast_convert_type(v_pages, quant.FP8_DTYPE)
+    return paged_gqa_verify_kernel(q, k_pages, v_pages, page_table,
+                                   base_lens,
+                                   interpret=(backend == "interpret"))

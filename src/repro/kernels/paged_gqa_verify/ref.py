@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for paged GQA speculative verification.
+
+Row v of the speculative window is scored by the *decode* oracle at length
+`base_lens + v + 1`: the reference is literally a stack of
+`paged_gqa_decode_ref` calls, one per window row. That makes the serving
+`ref` backend's verify logits bit-identical per row to stepping the
+non-speculative decode path token by token — the foundation of the
+accepted-tokens bit-identity guarantee pinned in tests — while the Pallas
+kernel is checked against this stack to ~1e-6 (split-K online softmax vs
+single-shot softmax).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_gqa_decode.ref import paged_gqa_decode_ref
+
+
+def paged_gqa_verify_ref(q: jax.Array, k_pages: jax.Array,
+                         v_pages: jax.Array, page_table: jax.Array,
+                         base_lens: jax.Array) -> jax.Array:
+    """q: (B, V, H, d); k_pages, v_pages: (N, K, ps, d); page_table: (B, P)
+    int32; base_lens: (B,) int32 context lengths before the speculative
+    window. Returns (B, V, H, d)."""
+    V = q.shape[1]
+    rows = [paged_gqa_decode_ref(q[:, v], k_pages, v_pages, page_table,
+                                 base_lens + (v + 1)) for v in range(V)]
+    return jnp.stack(rows, axis=1)

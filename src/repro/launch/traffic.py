@@ -46,6 +46,12 @@ def build_report_dict(report: CampaignReport) -> dict:
             "stall_s": c.online.stall_s,
             "p95_latency_s": r.p95_latency_s,
         }
+        if r.scenario.speculate_k is not None:
+            row.update({
+                "speculate_k": r.scenario.speculate_k,
+                "spec_acceptance": r.scenario.spec_acceptance,
+                "draft_kv_frac": r.scenario.draft_kv_frac,
+            })
         if c.forecast is not None:
             row.update({
                 "e_forecast_j": c.forecast.e_total,
@@ -79,6 +85,19 @@ def main() -> None:
                          "fan-out width for agentic_fanout)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="KV page size [tokens] for shared workloads")
+    ap.add_argument("--speculate", type=int, default=None, metavar="K",
+                    help="draft K tokens per round through the model-free "
+                         "speculative-decoding simulator (page-granular "
+                         "burst/rollback occupancy, both KV lanes); "
+                         "plain workload only")
+    ap.add_argument("--spec-acceptance", type=float, default=0.7,
+                    help="per-draft-token acceptance probability for "
+                         "--speculate")
+    ap.add_argument("--draft", "--draft-kv-frac", dest="draft_kv_frac",
+                    type=float, default=0.5,
+                    help="draft lane cost as a fraction of the target "
+                         "(KV bytes per page and compute per step; 0.5 = "
+                         "half-depth self-speculation)")
     ap.add_argument("--kv-dtype", nargs="+", default=["bf16"],
                     choices=KV_DTYPES,
                     help="KV-cache dtype(s); more than one runs the "
@@ -162,7 +181,9 @@ def main() -> None:
             resample_dt=args.resample_dt, fast_backend=args.fast_backend,
             backend=args.backend, prune=args.prune, fidelity=args.fidelity,
             workload=args.workload, prefix_len=args.prefix_len,
-            sharing=args.sharing, page_size=args.page_size, kv_dtype=dt)
+            sharing=args.sharing, page_size=args.page_size, kv_dtype=dt,
+            speculate_k=args.speculate, spec_acceptance=args.spec_acceptance,
+            draft_kv_frac=args.draft_kv_frac)
     report = reports[kv_dtypes[0]]
 
     if args.workload != "plain":
@@ -179,6 +200,22 @@ def main() -> None:
                   f"{st.prefix_hits}/{st.admitted}, "
                   f"{st.prefix_tokens_reused} tok reused, "
                   f"{st.cow_splits} COW, {st.evicted_pages} pages evicted")
+
+    if args.speculate is not None:
+        print(f"\n# speculative decoding (k={args.speculate}, "
+              f"acceptance={args.spec_acceptance:g}, "
+              f"draft={args.draft_kv_frac:g}x): burst/rollback occupancy")
+        for (arch, tkey), sim in sorted(report.sims.items()):
+            st = sim.stats
+            V = args.speculate + 1
+            toks_per_round = (st.accepted_tokens / st.spec_rounds
+                              if st.spec_rounds else 0.0)
+            print(f"  {arch:>20} {tkey[0]}@{tkey[1]:g}/s seed={tkey[2]}: "
+                  f"{st.spec_rounds} rounds, "
+                  f"{toks_per_round:.2f}/{V} tok/round accepted "
+                  f"(rate {st.acceptance_rate:.2f}), "
+                  f"{st.rolled_back_pages} pages rolled back, "
+                  f"peak {sim.trace.peak_needed() / MIB:.1f} MiB")
 
     legs = ("online reactive+forecast controllers"
             if fcfg is not None else "online controller")

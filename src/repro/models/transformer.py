@@ -13,6 +13,7 @@ is applied unstacked.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
@@ -654,6 +655,52 @@ def apply_block_decode_paged(cfg, kind: str, p: dict, x: jax.Array,
     return apply_block_decode(cfg, kind, p, x, cache, pos)
 
 
+def apply_block_verify_paged(cfg, p: dict, x: jax.Array, cache: dict,
+                             pos: jax.Array, page_table: jax.Array,
+                             attn_backend: str = "auto"):
+    """Speculative-verification block. x: (B, V, D) — the V = spec_k + 1
+    window rows per slot; pos: (B,) true per-slot context lengths *before*
+    the window; page_table: (B, P). Returns (x_out, new_cache).
+
+    Writes all V K/V rows through the page table at positions
+    pos .. pos + V - 1 (inactive slots resolve to the null page), then
+    scores every window row in one `paged_gqa_verify` call — one pass over
+    the resident pages instead of V sequential decode calls. Rows past the
+    eventually-accepted count are garbage the next round overwrites before
+    reading; `pos` itself is owned by the caller."""
+    from repro.kernels.paged_gqa_verify import paged_gqa_verify
+    if "ks" in cache:
+        raise NotImplementedError(
+            "speculative verification does not support int8 KV pages: "
+            "per-row scales of rolled-back rows would need requant-stable "
+            "rewrites; use native/fp16/bf16/fp8 kv_dtype")
+    B, V = x.shape[:2]
+    y = apply_norm(cfg, p["norm1"], x)
+    q, k, v = attn.project_qkv(cfg, p["attn"], y, y)
+    positions = pos[:, None] + jnp.arange(V, dtype=jnp.int32)[None, :]
+    if cfg.pos_emb == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    kp, vp = cache["kp"], cache["vp"]
+    ps = kp.shape[-2]
+    P = page_table.shape[1]
+    pidx = page_table[jnp.arange(B)[:, None],
+                      jnp.clip(positions // ps, 0, P - 1)]      # (B, V)
+    off = positions % ps
+    kp = kp.at[pidx, :, off].set(_pool_cast(k, kp.dtype))
+    vp = vp.at[pidx, :, off].set(_pool_cast(v, vp.dtype))
+    o = paged_gqa_verify(q, kp, vp, page_table, pos, backend=attn_backend)
+    o = o.reshape(B, V, cfg.q_dim) @ p["attn"]["wo"].astype(x.dtype)
+    x = x + o
+    y2 = apply_norm(cfg, p["norm2"], x)
+    if cfg.moe is not None:
+        f, _ = moe_mod.apply_moe(cfg, p["ffn"], y2)
+    else:
+        f = ffn_mod.apply_ffn(cfg, p["ffn"], y2)
+    x = x + f
+    return x, {"kp": kp, "vp": vp}
+
+
 def _apply_block_shared_prefill(cfg, p: dict, x: jax.Array,
                                 positions: jax.Array, pk: jax.Array,
                                 pv: jax.Array, kv_block: int,
@@ -1031,6 +1078,88 @@ class DecoderLM:
         x = apply_norm(cfg, params["final_norm"], x)
         logits = lm_logits(cfg, params["embed"], x)
         return logits, new_cache
+
+    # --------------------------------------------- speculative verify step
+    def verify_step_paged(self, params: dict, cache: dict, tokens: jax.Array,
+                          attn_backend: str = "auto"):
+        """tokens: (num_slots, V) — the pending token followed by the
+        k = V - 1 drafted candidates — against an `init_paged_cache` state.
+
+        Writes all V K/V rows at positions pos .. pos + V - 1 through the
+        page table and scores the whole window in one batched
+        `paged_gqa_verify` call; logits[:, v] conditions on tokens[:, :v+1],
+        so argmax(logits[:, v]) is the target's greedy continuation after
+        consuming candidate v. `pos` is NOT advanced — the speculative
+        decode loop owns accept/rollback and moves `pos` by the accepted
+        count, which is what makes a rejected suffix roll back for free
+        (its rows become garbage past `pos` that the next round overwrites
+        before reading). Pure full-attention stacks only: recurrent state
+        cannot un-consume a rejected token."""
+        cfg = self.cfg
+        _require_pure_full(cfg, "verify_step_paged")
+        pos = cache["pos"]
+        page_table = cache["page_table"]
+        B, V = tokens.shape
+        positions = pos[:, None] + jnp.arange(V, dtype=jnp.int32)[None, :]
+        x = embed_tokens(cfg, params["embed"], tokens, positions,
+                         self.compute_dtype)
+        pat = cfg.block_pattern
+        n_rep = cfg.num_layers // len(pat)
+
+        def body(x, xs):
+            slot_params, slot_caches = xs
+            new_caches = []
+            for i in range(len(pat)):
+                x, nc = apply_block_verify_paged(
+                    cfg, slot_params[i], x, slot_caches[i], pos, page_table,
+                    attn_backend)
+                new_caches.append(nc)
+            return x, tuple(new_caches)
+
+        new_cache = dict(cache)
+        if n_rep > 0:
+            x, new_slots = jax.lax.scan(
+                body, x, (tuple(params["blocks"]), tuple(cache["slots"])),
+                unroll=n_rep if self.unroll else 1)
+            new_cache["slots"] = list(new_slots)
+        new_tail = []
+        for tp, tc in zip(params["tail"], cache["tail"]):
+            x, nc = apply_block_verify_paged(cfg, tp, x, tc, pos, page_table,
+                                             attn_backend)
+            new_tail.append(nc)
+        new_cache["tail"] = new_tail
+
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = lm_logits(cfg, params["embed"], x)
+        return logits, new_cache
+
+
+def self_spec_draft(model: "DecoderLM", params: dict,
+                    skip: int = 2) -> Tuple["DecoderLM", dict]:
+    """Self-speculation draft: the target restricted to every `skip`-th
+    layer, sharing the target's weights (the stacked block params of the
+    single pattern slot are sliced along the repetition axis; embedding,
+    final norm and LM head are reused as-is). `skip=1` returns a model
+    whose greedy drafts always match the target — a 100%-acceptance oracle
+    the bit-identity tests lean on. Single-group block patterns only."""
+    cfg = model.cfg
+    if len(cfg.block_pattern) != 1:
+        raise NotImplementedError(
+            "self-speculation slices the stacked params of one pattern "
+            f"slot; {cfg.name} has pattern {cfg.block_pattern}")
+    if skip < 1:
+        raise ValueError(f"skip must be >= 1, got {skip}")
+    keep = list(range(0, cfg.num_layers, skip))
+    dcfg = dataclasses.replace(cfg, num_layers=len(keep),
+                               name=f"{cfg.name}-selfspec{skip}")
+    idx = jnp.asarray(keep)
+    dparams = dict(params)
+    dparams["blocks"] = [jax.tree.map(lambda a: a[idx], params["blocks"][0])]
+    dparams["tail"] = []
+    draft = DecoderLM(dcfg, compute_dtype=model.compute_dtype,
+                      remat=model.remat, kv_block=model.kv_block,
+                      unroll=model.unroll)
+    return draft, dparams
 
 
 # ---------------------------------------------------------------------------

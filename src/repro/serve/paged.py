@@ -24,7 +24,7 @@ from __future__ import annotations
 import functools
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +32,7 @@ import numpy as np
 
 from repro.kernels.quant import kv_dtype_spec
 from repro.models.transformer import (init_paged_cache, prefix_tail_rows,
-                                      write_prefill_to_pages)
+                                      self_spec_draft, write_prefill_to_pages)
 from repro.obs.slo import RequestTimeline, SLOSummary, SLOTracker
 from repro.obs.telemetry import default_registry, noop_registry
 from repro.serve.scheduler import AdmissionQueue, Request, SchedulerStats
@@ -108,14 +108,24 @@ class PagedKVLedger:
     negative delta — so the integrated trace equals the allocator's
     outstanding pages at all times, and drains to zero."""
 
-    def __init__(self, num_pages: int, page_bytes_: int):
+    def __init__(self, num_pages: int, page_bytes_: int,
+                 page_size: Optional[int] = None):
         self.allocator = PageAllocator(num_pages)
         self.page_bytes = page_bytes_
+        self.page_size = page_size
         self.trace = OccupancyTrace("kv", (num_pages - 1) * page_bytes_)
         self.slot_pages: Dict[int, List[int]] = {}
+        # Speculative-decoding draft lane: per-slot private pages drawn from
+        # the same allocator/page-id space as the target lane, accounted at
+        # the draft model's (smaller) per-page byte width.
+        self.draft_pages: Dict[int, List[int]] = {}
+        self.draft_page_bytes: Optional[int] = None
 
     def occupancy_bytes(self) -> int:
-        return self.allocator.n_allocated * self.page_bytes
+        nd = sum(len(p) for p in self.draft_pages.values())
+        db = (self.draft_page_bytes if self.draft_page_bytes is not None
+              else self.page_bytes)
+        return (self.allocator.n_allocated - nd) * self.page_bytes + nd * db
 
     def logical_bytes(self) -> int:
         """Without sharing, logical (per-slot demand) == physical bytes."""
@@ -144,7 +154,69 @@ class PagedKVLedger:
         self.allocator.free(pages)
         if pages:
             self.trace.event(t, -len(pages) * self.page_bytes, 0)
-        return len(pages)
+        dpages = self.draft_pages.pop(slot, [])
+        if dpages:
+            self.allocator.free(dpages)
+            db = (self.draft_page_bytes if self.draft_page_bytes is not None
+                  else self.page_bytes)
+            self.trace.event(t, -len(dpages) * db, 0)
+        return len(pages) + len(dpages)
+
+    # ------------------------------------------------- speculative draft lane
+    def enable_draft_lane(self, draft_page_bytes: int) -> None:
+        """Declare the byte width of draft-lane pages (the draft model's
+        per-page KV footprint)."""
+        self.draft_page_bytes = int(draft_page_bytes)
+
+    def admit_draft(self, slot: int, n_pages: int, t: float) -> List[int]:
+        assert slot not in self.draft_pages, \
+            f"slot {slot} already has a draft lane"
+        pages = self.allocator.alloc(n_pages)
+        self.draft_pages[slot] = list(pages)
+        db = (self.draft_page_bytes if self.draft_page_bytes is not None
+              else self.page_bytes)
+        if n_pages:
+            self.trace.event(t, n_pages * db, 0)
+        return pages
+
+    def grow_draft(self, slot: int, total_pages: int, t: float) -> List[int]:
+        have = self.draft_pages[slot]
+        extra = total_pages - len(have)
+        if extra <= 0:
+            return []
+        pages = self.allocator.alloc(extra)
+        have.extend(pages)
+        db = (self.draft_page_bytes if self.draft_page_bytes is not None
+              else self.page_bytes)
+        self.trace.event(t, extra * db, 0)
+        return pages
+
+    def truncate_rows(self, slot: int, n_rows: int, t: float
+                      ) -> "Tuple[List[int], List[int]]":
+        """Rollback-by-page-truncation: free every page past
+        `pages_for(n_rows)` in both lanes (target + draft). The negative
+        mid-stream trace deltas this emits are the speculative-rollback
+        occupancy signature. Returns the (target, draft) pages freed."""
+        if self.page_size is None:
+            raise ValueError("truncate_rows needs a ledger page_size")
+        keep = pages_for(n_rows, self.page_size)
+        freed_t: List[int] = []
+        have = self.slot_pages[slot]
+        if keep < len(have):
+            freed_t = have[keep:]
+            del have[keep:]
+            self.allocator.free(freed_t)
+            self.trace.event(t, -len(freed_t) * self.page_bytes, 0)
+        freed_d: List[int] = []
+        dhave = self.draft_pages.get(slot)
+        if dhave is not None and keep < len(dhave):
+            freed_d = dhave[keep:]
+            del dhave[keep:]
+            self.allocator.free(freed_d)
+            db = (self.draft_page_bytes if self.draft_page_bytes is not None
+                  else self.page_bytes)
+            self.trace.event(t, -len(freed_d) * db, 0)
+        return freed_t, freed_d
 
 
 # ---------------------------------------------------------------------------
@@ -186,6 +258,81 @@ def _decode_loop(model, steps: int, attn_backend: str, collect_logits: bool,
     return emitted, cache, tok, remaining
 
 
+def _spec_decode_loop(model, draft_model, rounds, spec_k, attn_backend,
+                      params, draft_params, cache, draft_cache, tok, eos,
+                      remaining):
+    """Speculative greedy decode: `rounds` draft-then-verify rounds in one
+    on-device `lax.scan`. Each round the draft proposes `spec_k` tokens
+    (sequential small-model decode over its own page lane), the target
+    scores the pending token plus all candidates in ONE batched
+    `verify_step_paged` call (V = spec_k + 1 rows), and the longest
+    accepted prefix advances both lanes' positions. Every emitted token is
+    the TARGET's argmax — draft quality moves the acceptance rate, never
+    the output, so the accepted stream is bit-identical to `_decode_loop`.
+    A rejected suffix "rolls back" by pos arithmetic alone: its rows sit
+    past `pos` as garbage the next round overwrites before reading.
+
+    Emits a (rounds, num_slots, V) block of accepted tokens, -1 padded:
+    within a round the accepted prefix is contiguous from column 0, and
+    rounds after a slot retires are all -1, so ravel-and-filter recovers
+    the stream in order."""
+    _COMPILES.inc()
+    V = spec_k + 1
+
+    def round_step(carry, _):
+        cache, dcache, tok, remaining = carry
+        active = cache["active"]
+        pos0 = dcache["pos"]
+
+        def draft_step(dc, _):
+            dcache, dtok = dc
+            dlogits, dcache = draft_model.decode_step_paged(
+                draft_params, dcache, dtok, attn_backend=attn_backend)
+            nxt = jnp.argmax(dlogits[:, -1, :], axis=-1).astype(jnp.int32)
+            dtok = jnp.where(active[:, None], nxt[:, None], dtok)
+            return (dcache, dtok), nxt
+
+        (dcache, dtok), drafted = jax.lax.scan(
+            draft_step, (dcache, tok), None, length=spec_k)
+        # catch-up: write the last candidate's draft KV row so a fully
+        # accepted round leaves no hole in the draft lane (logits discarded)
+        _, dcache = draft_model.decode_step_paged(
+            draft_params, dcache, dtok, attn_backend=attn_backend)
+        drafted = drafted.reshape(spec_k, -1).T            # (B, k)
+        cand = jnp.concatenate([tok, drafted], axis=1)     # (B, V)
+        vlogits, cache = model.verify_step_paged(
+            params, cache, cand, attn_backend=attn_backend)
+        g = jnp.argmax(vlogits, axis=-1).astype(jnp.int32)  # (B, V) target
+        # candidate v+1 survives iff it equals the target's continuation g_v
+        match = (drafted == g[:, :spec_k]).astype(jnp.int32)
+        m_full = 1 + jnp.cumprod(match, axis=1).sum(axis=1)      # in [1, V]
+        eos_hit = (eos[:, None] >= 0) & (g == eos[:, None])
+        first_eos = jnp.where(eos_hit.any(axis=1),
+                              jnp.argmax(eos_hit, axis=1).astype(jnp.int32),
+                              jnp.int32(V))
+        m = jnp.minimum(jnp.minimum(m_full, first_eos + 1), remaining)
+        m = jnp.where(active, m, 0)
+        col = jnp.arange(V, dtype=jnp.int32)[None, :]
+        emit = jnp.where(col < m[:, None], g, -1)
+        new_tok = jnp.take_along_axis(g, jnp.maximum(m - 1, 0)[:, None],
+                                      axis=1)
+        tok = jnp.where(active[:, None], new_tok, tok)
+        remaining = remaining - m
+        eos_fired = eos_hit.any(axis=1) & (first_eos < m)
+        done = active & ((remaining <= 0) | eos_fired)
+        cache = dict(cache)
+        dcache = dict(dcache)
+        cache["pos"] = cache["pos"] + m
+        dcache["pos"] = pos0 + m          # rollback: rejected rows orphaned
+        cache["active"] = active & ~done
+        dcache["active"] = cache["active"]
+        return (cache, dcache, tok, remaining), emit
+
+    (cache, draft_cache, tok, remaining), emitted = jax.lax.scan(
+        round_step, (cache, draft_cache, tok, remaining), None, length=rounds)
+    return emitted, cache, draft_cache, tok, remaining
+
+
 # ---------------------------------------------------------------------------
 # Continuous batcher
 # ---------------------------------------------------------------------------
@@ -201,6 +348,11 @@ class PagedStats(SchedulerStats):
     evicted_pages: int = 0
     # chunked-prefill slices executed (zero without prefill_chunk_tokens)
     prefill_slices: int = 0
+    # speculative-decoding counters (stay zero without speculate_k)
+    spec_rounds: int = 0
+    drafted_tokens: int = 0
+    accepted_tokens: int = 0
+    rolled_back_pages: int = 0
 
 
 class PagedContinuousBatcher:
@@ -216,14 +368,33 @@ class PagedContinuousBatcher:
     preempt each other, so the default ``priority=0`` workload behaves
     exactly like the old FCFS batcher.
 
-    Chunked prefill (``prefill_chunk_tokens``, pure full-attention stacks,
-    exclusive with ``prefix_cache``): prompts longer than the chunk admit
-    in page-aligned slices with one decode chunk for the other slots
-    interleaved between slices, so a long prompt stops stalling every
-    active stream's time-between-tokens. Slices chain through the shared-
-    prefix machinery (gather resident pages → suffix-only prefill at fixed
-    attention width), which keeps the emitted tokens bit-identical to one
-    monolithic prefill.
+    Chunked prefill (``prefill_chunk_tokens``, pure full-attention stacks):
+    prompts longer than the chunk admit in page-aligned slices with one
+    decode chunk for the other slots interleaved between slices, so a long
+    prompt stops stalling every active stream's time-between-tokens. Slices
+    chain through the shared-prefix machinery (gather resident pages →
+    suffix-only prefill at fixed attention width), which keeps the emitted
+    tokens bit-identical to one monolithic prefill. Composes with
+    ``prefix_cache``: on a prefix hit only the *suffix* past the match is
+    chunked — the first slice is sized to re-align the (possibly mid-page)
+    match boundary to a page multiple, every later slice gathers the
+    slot's own resident pages, and the fixed-attention-width property
+    keeps the result bit-identical to the monolithic suffix prefill.
+
+    Speculative decoding (``speculate_k``, pure full-attention stacks,
+    greedy only): a draft model proposes `speculate_k` tokens per round
+    through its own *draft page lane* (same allocator/page-id space,
+    smaller per-page bytes), the target scores the pending token plus all
+    candidates in one batched ``paged_gqa_verify`` kernel call, and the
+    longest target-agreeing prefix is accepted. Every emitted token is the
+    target's argmax, so the accepted stream is bit-identical to the
+    non-speculative loop — the draft only moves the acceptance rate, i.e.
+    accepted-tokens/s. Rejected suffixes roll back by page truncation at
+    chunk boundaries (`ledger.truncate_rows`): both lanes' tail pages past
+    the accepted context free mid-stream, which is the negative-delta
+    occupancy signature Stage I sees. With ``draft_model=None`` the draft
+    is `self_spec_draft(model, params, skip=2)` — the target's own weights
+    at every 2nd layer.
 
     Admission prefills the prompt once (batch=1), then scatters its KV rows
     into freshly allocated pages of the global pool — older slots are never
@@ -266,17 +437,14 @@ class PagedContinuousBatcher:
                  prefix_cache: bool = False, collect_logits: bool = False,
                  kv_dtype: str = "native",
                  prefill_chunk_tokens: Optional[int] = None,
-                 on_long_prompt: str = "reject", telemetry=None):
+                 on_long_prompt: str = "reject",
+                 speculate_k: Optional[int] = None, draft_model=None,
+                 draft_params=None, telemetry=None):
         if not hasattr(model, "decode_step_paged"):
             raise TypeError("model lacks a paged decode path")
         if on_long_prompt not in ("reject", "truncate"):
             raise ValueError("on_long_prompt must be 'reject' or 'truncate'")
         if prefill_chunk_tokens is not None:
-            if prefix_cache:
-                raise ValueError(
-                    "prefill_chunk_tokens is incompatible with prefix_cache "
-                    "(both paths own the shared-prefill machinery; chunk "
-                    "the suffix-only prefill is future work)")
             if prefill_chunk_tokens < page_size or \
                     prefill_chunk_tokens % page_size:
                 raise ValueError(
@@ -284,6 +452,24 @@ class PagedContinuousBatcher:
                     f"page_size={page_size} so every slice boundary is "
                     "page-aligned (the chained slice prefill gathers whole "
                     f"pages); got {prefill_chunk_tokens}")
+        if speculate_k is not None:
+            if speculate_k < 1:
+                raise ValueError(f"speculate_k must be >= 1, got "
+                                 f"{speculate_k}")
+            if collect_logits:
+                raise NotImplementedError(
+                    "collect_logits emits one logits row per decode step; "
+                    "the speculative loop emits V verify rows per round "
+                    "(rejected rows included) — use the non-speculative "
+                    "loop for logits-level debugging")
+            if kv_dtype == "int8":
+                raise NotImplementedError(
+                    "speculative verify scatters V rows per slot; the int8 "
+                    "page pool's per-row requantization under that scatter "
+                    "is not wired up (fp8/native pools are)")
+            if (draft_model is None) != (draft_params is None):
+                raise ValueError("pass draft_model and draft_params "
+                                 "together (or neither for self-spec)")
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -299,6 +485,7 @@ class PagedContinuousBatcher:
         self.collect_logits = collect_logits
         self.prefill_chunk_tokens = prefill_chunk_tokens
         self.on_long_prompt = on_long_prompt
+        self.speculate_k = speculate_k
 
         # spans and SLOs record on the batcher's logical sim clock — the
         # time base the ledger's occupancy trace uses — so a passed-in
@@ -326,6 +513,10 @@ class PagedContinuousBatcher:
         self._c_wait = tel.counter("serve.paged.backpressure_waits")
         self._c_preempt = tel.counter("serve.paged.preemptions")
         self._c_slices = tel.counter("serve.paged.prefill_slices")
+        self._c_spec_rounds = tel.counter("serve.paged.spec_rounds")
+        self._c_drafted = tel.counter("serve.paged.spec_drafted")
+        self._c_accepted = tel.counter("serve.paged.spec_accepted")
+        self._c_rollback = tel.counter("serve.paged.spec_rolled_back_pages")
         self._c_dequant = tel.counter("quant.dequant_pages")
         self._g_pages = tel.gauge("serve.paged.pages_in_use")
         self._g_kv_phys = tel.gauge("serve.paged.kv_bytes_physical")
@@ -345,7 +536,8 @@ class PagedContinuousBatcher:
                 max_pages_per_slot=self.max_pages_per_slot,
                 telemetry=tel)
         else:
-            self.ledger = PagedKVLedger(num_pages, self.page_bytes)
+            self.ledger = PagedKVLedger(num_pages, self.page_bytes,
+                                        page_size)
         self.access = AccessStats()
         self.stats = PagedStats()
 
@@ -396,26 +588,79 @@ class PagedContinuousBatcher:
             from repro.models.transformer import copy_pages
             self._copy = jax.jit(functools.partial(copy_pages, self.cfg),
                                  donate_argnums=(0,))
+        if speculate_k is not None:
+            from repro.models.transformer import _require_pure_full
+            _require_pure_full(model.cfg, "speculate_k")
+            if draft_model is None:
+                draft_model, draft_params = self_spec_draft(model, params,
+                                                            skip=2)
+            self.draft_model = draft_model
+            self.draft_params = draft_params
+            dcfg = draft_model.cfg
+            self.draft_page_bytes = page_bytes(dcfg, page_size,
+                                               kv_spec.itemsize,
+                                               kv_spec.scale_bytes_per_row)
+            self.draft_row_bytes = self.draft_page_bytes // page_size
+            self.ledger.enable_draft_lane(self.draft_page_bytes)
+            self._draft_table = np.zeros(
+                (num_slots, self.max_pages_per_slot), np.int32)
+            # the draft lane's pool arrays are indexed by the SAME page ids
+            # as the target's (one allocator, one id space), so the draft
+            # cache spans the full pool too — at the draft's smaller dims
+            self._draft_cache = init_paged_cache(
+                dcfg, num_slots, num_pages, page_size,
+                self.max_pages_per_slot, dtype=draft_model.compute_dtype,
+                kv_dtype=self.kv_dtype)
+            self.spec_rounds_per_chunk = max(
+                1, chunk_steps // (speculate_k + 1))
+            # sim-clock cost of one draft-then-verify round vs one plain
+            # decode step: the batched verify streams the target weights
+            # once (~= one step), plus k+1 sequential draft steps at the
+            # draft's layer fraction
+            self.draft_cost_frac = (dcfg.num_layers
+                                    / max(1, self.cfg.num_layers))
+            self.spec_round_time_s = step_time_s * (
+                1.0 + (speculate_k + 1) * self.draft_cost_frac)
+            self._draft_prefill = jax.jit(
+                lambda p, b, L: draft_model.prefill(p, b, cache_len=L),
+                static_argnums=(2,))
+            self._draft_write = jax.jit(
+                functools.partial(write_prefill_to_pages, dcfg),
+                donate_argnums=(0,))
+            self._spec_loop = jax.jit(
+                functools.partial(_spec_decode_loop, model, draft_model,
+                                  self.spec_rounds_per_chunk, speculate_k,
+                                  attn_backend),
+                donate_argnums=(2, 3))
 
     # ------------------------------------------------------------ client API
     def submit(self, req: Request) -> None:
         S = int(len(req.tokens))
         cap = self.max_pages_per_slot * self.page_size
-        if S + max(req.max_new_tokens - 1, 0) > cap \
+        # speculation writes up to V - 1 = speculate_k rows past the final
+        # accepted context before the last rollback truncates them
+        spec_extra = (self.speculate_k if self.speculate_k is not None
+                      and req.max_new_tokens > 1 else 0)
+        if S + max(req.max_new_tokens - 1, 0) + spec_extra > cap \
                 and self.on_long_prompt == "truncate":
             # keep the decode budget, give the prompt whatever table
             # capacity remains (mirrors the dense batcher's max_len cut)
-            keep = cap - max(req.max_new_tokens - 1, 0)
+            keep = cap - max(req.max_new_tokens - 1, 0) - spec_extra
             if keep >= 1:
                 req.tokens = np.asarray(req.tokens)[:keep]
                 S = keep
-        worst = pages_for(S + max(req.max_new_tokens - 1, 0), self.page_size)
+        worst = pages_for(S + max(req.max_new_tokens - 1, 0) + spec_extra,
+                          self.page_size)
+        # speculation doubles the lane count: the draft mirrors the target's
+        # page demand row-for-row (same page_size, smaller page_bytes)
+        lanes = 2 if self.speculate_k is not None else 1
         # prefix mode reserves one extra pool page for the deferred COW
         # split of a mid-page prompt boundary; it never occupies a table
         # slot (COW swaps an entry in place), but it must fit the pool or
         # admission could wait forever on a demand no drain can satisfy
-        pool_worst = worst + (1 if self.prefix_cache and S % self.page_size
-                              and req.max_new_tokens > 1 else 0)
+        pool_worst = worst * lanes + (
+            1 if self.prefix_cache and S % self.page_size
+            and req.max_new_tokens > 1 else 0)
         if worst > self.max_pages_per_slot or pool_worst > self.num_pages - 1:
             raise OutOfPages(
                 f"request {req.rid} needs {worst} table / {pool_worst} pool "
@@ -479,6 +724,18 @@ class PagedContinuousBatcher:
     def _available_pages(self) -> int:
         return self.ledger.allocator.n_free - sum(self._reserved)
 
+    def _worst_pages(self, S: int, max_new: int) -> int:
+        """Worst-case page demand of one lane for a prompt of `S` tokens:
+        prompt rows + decode rows + the up-to-`speculate_k` overshoot rows a
+        verify window can write past the final accepted context."""
+        extra = (self.speculate_k if self.speculate_k is not None
+                 and max_new > 1 else 0)
+        return pages_for(S + max(max_new - 1, 0) + extra, self.page_size)
+
+    @property
+    def _lanes(self) -> int:
+        return 2 if self.speculate_k is not None else 1
+
     def _set_page_gauges(self) -> None:
         """Page-count plus bytes-based occupancy gauges: physical = pool
         pages held x page_bytes (quantization shrinks page_bytes), logical =
@@ -501,6 +758,8 @@ class PagedContinuousBatcher:
         self._reserved[i] = 0
         self._ctx[i] = 0
         self._table[i, :] = 0
+        if self.speculate_k is not None:
+            self._draft_table[i, :] = 0
         self._c_retired.inc()
         self._c_freed.inc(n)
         self._set_page_gauges()
@@ -548,6 +807,8 @@ class PagedContinuousBatcher:
         self._reserved[i] = 0
         self._ctx[i] = 0
         self._table[i, :] = 0
+        if self.speculate_k is not None:
+            self._draft_table[i, :] = 0
         self._c_preempt.inc()
         self._c_freed.inc(n)
         self._set_page_gauges()
@@ -586,8 +847,8 @@ class PagedContinuousBatcher:
                 continue
             req = self.queue.peek()
             prompt_len = int(len(req.tokens))
-            worst = pages_for(prompt_len + max(req.max_new_tokens - 1, 0),
-                              self.page_size)
+            worst = self._worst_pages(prompt_len, req.max_new_tokens) \
+                * self._lanes
             if worst > self._available_pages() \
                     and not self._preempt_for(req.priority, worst):
                 self._c_wait.inc()
@@ -727,6 +988,34 @@ class PagedContinuousBatcher:
         if (req.max_new_tokens <= 1
                 or (req.eos_id is not None and tok == req.eos_id)):
             self._retire(i, req, done, self._sim_t)
+        elif self.speculate_k is not None:
+            self._admit_draft_lane(i, req)
+
+    def _admit_draft_lane(self, i: int, req: Request) -> None:
+        """Prefill the draft model over the full prompt into the slot's
+        draft page lane. The draft never shares pages (no radix entry, no
+        COW) — a prefix-cache hit only accelerates the target lane; the
+        draft re-prefills its own (much smaller) KV from scratch."""
+        prompt = np.asarray(req.tokens)
+        S = int(len(prompt))
+        dn = pages_for(S, self.page_size)
+        self._sim_t += S * self.prefill_tok_s * self.draft_cost_frac
+        dpages = self.ledger.admit_draft(i, dn, self._sim_t)
+        self._reserved[i] -= dn
+        self._draft_table[i, :] = 0
+        self._draft_table[i, :dn] = dpages
+        batch = {"tokens": jnp.asarray(prompt[None, :], jnp.int32)}
+        _, ddense = self._draft_prefill(self.draft_params, batch,
+                                        dn * self.page_size)
+        self._draft_cache = self._draft_write(
+            self._draft_cache, ddense, i, jnp.asarray(dpages, jnp.int32))
+        self.stats.pages_allocated += dn
+        self.stats.peak_pages = max(self.stats.peak_pages,
+                                    self.ledger.allocator.n_allocated)
+        self.stats.admitted_kv_bytes += dn * self.draft_page_bytes
+        self.access.add_write("kv", S * self.draft_row_bytes)
+        self._c_alloc.inc(dn)
+        self._set_page_gauges()
 
     def _admit_prefix(self, i: int, done: List[Request]) -> bool:
         """Prefix-cache admission of the queue head into slot `i`.
@@ -740,11 +1029,15 @@ class PagedContinuousBatcher:
         prompt = np.asarray(req.tokens)
         S = int(len(prompt))
         ps = self.page_size
-        worst_total = pages_for(S + max(req.max_new_tokens - 1, 0), ps)
+        worst_total = self._worst_pages(S, req.max_new_tokens)
         cow_extra = 1 if (S % ps and req.max_new_tokens > 1) else 0
+        # the draft lane never shares: a hit only accelerates the target
+        # lane, the draft's full worst case is fresh demand
+        draft_extra = worst_total if self.speculate_k is not None else 0
 
         def demand(match):
-            return worst_total - len(match.pages) + cow_extra
+            return (worst_total - len(match.pages) + cow_extra
+                    + draft_extra)
 
         match = self.ledger.index.probe(prompt, limit=S - 1)
         short = demand(match) - self._available_pages()
@@ -768,31 +1061,80 @@ class PagedContinuousBatcher:
 
         n_full, j = len(match.pages), match.tail_tokens
         m = n_full * ps + j
-        npg_total = pages_for(S, ps)
-        fresh_n = npg_total - n_full
-
-        gather_ids = list(match.pages) + \
-            ([match.tail_page] if j else [])
-        prefix = self._gather(self._cache,
-                              jnp.asarray(gather_ids, jnp.int32), m)
-        if self.kv_quantized and gather_ids:
-            self._c_dequant.inc(len(gather_ids))
-        head = prefix_tail_rows(prefix, j)
-        logits, suffix = self._prefill_shared(
-            self.params, jnp.asarray(prompt[None, m:], jnp.int32), prefix)
-        tok = int(jnp.argmax(logits[0, -1]))
         t_pre = self._sim_t
-        self._sim_t += (S - m) * self.prefill_tok_s   # prefill skip: suffix only
+        C = self.prefill_chunk_tokens
+        suffix_len = S - m
+        if C is not None and suffix_len > C:
+            # chunk the suffix-only prefill: slice 0 is sized to re-align
+            # the (possibly mid-page) match boundary to a page multiple so
+            # every later slice boundary is page-aligned — the chained
+            # gather → fixed-width shared prefill then keeps the result
+            # bit-identical to one monolithic suffix prefill
+            slices = [min(C - (m % ps), suffix_len)]
+            while sum(slices) < suffix_len:
+                slices.append(min(C, suffix_len - sum(slices)))
+        else:
+            slices = [suffix_len]
 
-        fresh = self.ledger.admit(i, fresh_n, self._sim_t,
-                                  shared=match.pages)
-        self._reserved[i] = demand(match) - fresh_n
-        self.stats.pages_allocated += fresh_n
-        self.stats.peak_pages = max(self.stats.peak_pages,
-                                    self.ledger.allocator.n_allocated)
-        self.stats.admitted_kv_bytes += fresh_n * self.page_bytes
-        self.access.add_write("kv", (S - m) * self.row_bytes)
-        self._c_alloc.inc(fresh_n)
+        pos = m
+        logits = None
+        for si, take in enumerate(slices):
+            sl = jnp.asarray(prompt[None, pos:pos + take], jnp.int32)
+            t0 = self._sim_t
+            if si == 0:
+                gather_ids = list(match.pages) + \
+                    ([match.tail_page] if j else [])
+                prefix = self._gather(self._cache,
+                                      jnp.asarray(gather_ids, jnp.int32), m)
+                if self.kv_quantized and gather_ids:
+                    self._c_dequant.inc(len(gather_ids))
+                head = prefix_tail_rows(prefix, j)
+                logits, suffix = self._prefill_shared(self.params, sl,
+                                                      prefix)
+                self._sim_t += take * self.prefill_tok_s  # suffix only
+                new_n = pages_for(m + take, ps) - n_full
+                fresh = self.ledger.admit(i, new_n, self._sim_t,
+                                          shared=match.pages)
+                self._reserved[i] = demand(match) - new_n
+                self._cache = self._write_shared(
+                    self._cache, suffix, head, jnp.int32(i),
+                    jnp.asarray(match.pages, jnp.int32),
+                    jnp.asarray(fresh, jnp.int32))
+            else:
+                held = list(self.ledger.slot_pages[i])
+                prefix = self._gather(self._cache,
+                                      jnp.asarray(held, jnp.int32), pos)
+                if self.kv_quantized:
+                    self._c_dequant.inc(len(held))
+                head = prefix_tail_rows(prefix, 0)   # pos is page-aligned
+                logits, suffix = self._prefill_shared(self.params, sl,
+                                                      prefix)
+                self._sim_t += take * self.prefill_tok_s
+                fresh = self.ledger.grow(i, pages_for(pos + take, ps),
+                                         self._sim_t)
+                self._reserved[i] -= len(fresh)
+                new_n = len(fresh)
+                self._cache = self._write_shared(
+                    self._cache, suffix, head, jnp.int32(i),
+                    jnp.asarray(held, jnp.int32),
+                    jnp.asarray(fresh, jnp.int32))
+            self.stats.pages_allocated += new_n
+            self.stats.peak_pages = max(self.stats.peak_pages,
+                                        self.ledger.allocator.n_allocated)
+            self.stats.admitted_kv_bytes += new_n * self.page_bytes
+            self.access.add_write("kv", take * self.row_bytes)
+            self._c_alloc.inc(new_n)
+            if len(slices) > 1:
+                self.stats.prefill_slices += 1
+                self._c_slices.inc()
+                if self.tel.enabled:
+                    self.tel.add_span("prefill_slice", t0, self._sim_t,
+                                      slot=i, rid=req.rid, tokens=take)
+            pos += take
+            if pos < S:
+                # let the active slots stream tokens before the next slice
+                self._decode_chunk(done)
+        tok = int(jnp.argmax(logits[0, -1]))
         if m:
             self.stats.prefix_hits += 1
             self.stats.prefix_tokens_reused += m
@@ -800,11 +1142,6 @@ class PagedContinuousBatcher:
             self._c_reused.inc(m)
         else:
             self._c_miss.inc()
-
-        self._cache = self._write_shared(
-            self._cache, suffix, head, jnp.int32(i),
-            jnp.asarray(match.pages, jnp.int32),
-            jnp.asarray(fresh, jnp.int32))
         # cache this run for later requests (index refs its pages)
         self.ledger.insert_run(prompt, self.ledger.slot_pages[i], self._sim_t)
         self._commit_admission(i, req, done, tok, logits, S,
@@ -839,6 +1176,8 @@ class PagedContinuousBatcher:
             self.tel.add_span("cow", t, t, slot=i, page=new)
 
     def _decode_chunk(self, done: List[Request]) -> None:
+        if self.speculate_k is not None:
+            return self._spec_chunk(done)
         live = [i for i, s in enumerate(self.slots) if s is not None]
         if not live:
             return
@@ -916,6 +1255,142 @@ class PagedContinuousBatcher:
             self._ctx[i] += g
             if not still_active[i]:
                 self._retire(i, req, done, t0 + g * self.step_time_s)
+
+    def _spec_chunk(self, done: List[Request]) -> None:
+        """One speculative decode chunk: `spec_rounds_per_chunk` draft-then-
+        verify rounds for every live slot in one donated `lax.scan`, then a
+        host sync that harvests the accepted tokens and *rolls back* both
+        lanes by page truncation — every page past the accepted context
+        frees mid-stream (the negative occupancy deltas Stage I sees as the
+        speculative burst/rollback signature) and returns to the slot's
+        reservation for later re-growth."""
+        live = [i for i, s in enumerate(self.slots) if s is not None]
+        if not live:
+            return
+        t0 = self._sim_t
+        V = self.speculate_k + 1
+        R = self.spec_rounds_per_chunk
+        ps = self.page_size
+        remaining = np.zeros(self.num_slots, np.int32)
+        for i in live:
+            req = self.slots[i]
+            remaining[i] = req.max_new_tokens - len(req.output)
+            # worst rows this chunk can touch: every round writes V rows at
+            # pos..pos+V-1 and advances >= 1, and the last active round
+            # starts with >= 1 token remaining
+            rows = int(self._ctx[i]) + min(R * V, int(remaining[i]) + V - 1)
+            npg = pages_for(rows, ps)
+            new_pages = self.ledger.grow(i, npg, t0)
+            if new_pages:
+                have = len(self.ledger.slot_pages[i])
+                self._table[i, have - len(new_pages):have] = new_pages
+                self._reserved[i] -= len(new_pages)
+                self.stats.pages_allocated += len(new_pages)
+                self.stats.admitted_kv_bytes += \
+                    len(new_pages) * self.page_bytes
+                self._c_alloc.inc(len(new_pages))
+            dnew = self.ledger.grow_draft(i, npg, t0)
+            if dnew:
+                dhave = len(self.ledger.draft_pages[i])
+                self._draft_table[i, dhave - len(dnew):dhave] = dnew
+                self._reserved[i] -= len(dnew)
+                self.stats.pages_allocated += len(dnew)
+                self.stats.admitted_kv_bytes += \
+                    len(dnew) * self.draft_page_bytes
+                self._c_alloc.inc(len(dnew))
+            if self.prefix_cache:
+                # the verify window writes past ctx: COW every shared page
+                # in the full speculative write range, not just chunk_steps
+                self._cow_for_chunk(i, rows - int(self._ctx[i]), t0)
+        self.stats.peak_pages = max(self.stats.peak_pages,
+                                    self.ledger.allocator.n_allocated)
+
+        cache = self._cache
+        dcache = self._draft_cache
+        cache["page_table"] = jnp.asarray(self._table)
+        dcache["page_table"] = jnp.asarray(self._draft_table)
+        # two separate transfers: both caches are donated, so the liveness
+        # masks must be distinct buffers even though their contents match
+        act_np = np.array([s is not None for s in self.slots])
+        cache["active"] = jnp.asarray(act_np)
+        dcache["active"] = jnp.asarray(act_np.copy())
+        emitted, cache, dcache, tok, _ = self._spec_loop(
+            self.params, self.draft_params, cache, dcache,
+            jnp.asarray(self._next_tok[:, None]),
+            jnp.asarray([(self.slots[i].eos_id if self.slots[i] is not None
+                          and self.slots[i].eos_id is not None else -1)
+                         for i in range(self.num_slots)], jnp.int32),
+            jnp.asarray(remaining))
+        self._cache = cache
+        self._draft_cache = dcache
+        self.stats.chunks += 1
+        emitted = np.asarray(emitted)            # (rounds, num_slots, V)
+        self._next_tok = np.array(tok[:, 0])
+        still_active = np.array(cache["active"])
+        self._sim_t = t0 + R * self.spec_round_time_s
+        self._c_chunks.inc()
+        self.tel.add_span("decode_chunk", t0, self._sim_t, slots=len(live))
+
+        for i in live:
+            req = self.slots[i]
+            block = emitted[:, i, :]             # (rounds, V), -1 padded
+            m_r = (block >= 0).sum(axis=1)       # per-round accepted count
+            rounds_used = int((m_r > 0).sum())
+            toks = block.ravel()
+            toks = toks[toks >= 0]
+            g = int(len(toks))
+            req.output.extend(int(t) for t in toks)
+            self.stats.decode_steps += g
+            self.stats.spec_rounds += rounds_used
+            self.stats.drafted_tokens += rounds_used * self.speculate_k
+            self.stats.accepted_tokens += g
+            self._c_spec_rounds.inc(rounds_used)
+            self._c_drafted.inc(rounds_used * self.speculate_k)
+            self._c_accepted.inc(g)
+            # page-granular access accounting, per round: the verify kernel
+            # streams the target's resident pages once; the draft streams
+            # its own lane for each of its k+1 sequential steps
+            ctx = int(self._ctx[i])
+            pos = ctx
+            pages_t = 0
+            pages_d = 0
+            for r in range(rounds_used):
+                per_round = -(-(pos + V) // ps)
+                pages_t += per_round
+                pages_d += (self.speculate_k + 1) * per_round
+                pos += int(m_r[r])
+            self.access.add_read("kv", pages_t * self.page_bytes
+                                 + pages_d * self.draft_page_bytes)
+            self.access.add_write(
+                "kv", rounds_used * (V * self.row_bytes
+                                     + (self.speculate_k + 1)
+                                     * self.draft_row_bytes))
+            if self.kv_quantized and pages_t:
+                self._c_dequant.inc(pages_t + pages_d)
+            self._c_steps.inc(g)
+            if req.timeline is not None and g:
+                ts: List[float] = []
+                for r in range(rounds_used):
+                    ts.extend([t0 + (r + 1) * self.spec_round_time_s]
+                              * int(m_r[r]))
+                req.timeline.token_ts.extend(ts)
+            self._ctx[i] = ctx + g
+            t_end = t0 + rounds_used * self.spec_round_time_s
+            # rollback-by-page-truncation: both lanes drop every page past
+            # the accepted context; freed pages rejoin the reservation
+            ft, fd = self.ledger.truncate_rows(i, int(self._ctx[i]), t_end)
+            nf = len(ft) + len(fd)
+            if nf:
+                keep = pages_for(int(self._ctx[i]), ps)
+                self._table[i, keep:] = 0
+                self._draft_table[i, keep:] = 0
+                self._reserved[i] += nf
+                self.stats.pages_freed += nf
+                self.stats.rolled_back_pages += nf
+                self._c_freed.inc(nf)
+                self._c_rollback.inc(nf)
+            if not still_active[i]:
+                self._retire(i, req, done, t_end)
 
 
 def loop_compile_count() -> int:

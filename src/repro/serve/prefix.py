@@ -342,10 +342,18 @@ class SharedKVLedger:
         self.logical = OccupancyTrace("kv_logical", logical_cap)
         self.slot_pages: Dict[int, List[int]] = {}
         self._last = (0, 0, 0)      # (needed, obsolete, logical) in pages
+        # Speculative-decoding draft lane: per-slot private pages drawn from
+        # the SAME allocator/page-id space but never shared, never indexed.
+        self.draft_pages: Dict[int, List[int]] = {}
+        self.draft_page_bytes: Optional[int] = None
+        self._last_draft = 0
 
     # ------------------------------------------------------------ accounting
     def occupancy_bytes(self) -> int:
-        return self.allocator.n_allocated * self.page_bytes
+        nd = sum(len(p) for p in self.draft_pages.values())
+        db = (self.draft_page_bytes if self.draft_page_bytes is not None
+              else self.page_bytes)
+        return (self.allocator.n_allocated - nd) * self.page_bytes + nd * db
 
     def logical_bytes(self) -> int:
         """Sum over slots of their page footprint — what a non-sharing
@@ -359,18 +367,28 @@ class SharedKVLedger:
             sref.update(pages)
             logical += len(pages)
         needed = len(sref)
-        obsolete = self.allocator.n_allocated - needed
+        ndraft = sum(len(p) for p in self.draft_pages.values())
+        obsolete = self.allocator.n_allocated - needed - ndraft
         return needed, obsolete, logical
 
     def sync(self, t: float) -> None:
         """Emit the delta between the live page counts and the last synced
-        state on both traces. Call after any out-of-band index mutation."""
+        state on both traces. Call after any out-of-band index mutation.
+        Draft-lane pages count as `needed` (they back live slots) at the
+        draft lane's own page bytes; with the lane unused the accounting is
+        bit-identical to the pre-speculation ledger."""
         needed, obsolete, logical = self._counts()
+        ndraft = sum(len(p) for p in self.draft_pages.values())
         pn, po, pl = self._last
+        pd = self._last_draft
         pb = self.page_bytes
-        self.trace.event(t, (needed - pn) * pb, (obsolete - po) * pb)
-        self.logical.event(t, (logical - pl) * pb, 0)
+        db = (self.draft_page_bytes if self.draft_page_bytes is not None
+              else pb)
+        self.trace.event(t, (needed - pn) * pb + (ndraft - pd) * db,
+                         (obsolete - po) * pb)
+        self.logical.event(t, (logical - pl) * pb + (ndraft - pd) * db, 0)
         self._last = (needed, obsolete, logical)
+        self._last_draft = ndraft
         self._g_physical.set(needed)
         self._g_cached.set(obsolete)
         self._g_logical.set(logical)
@@ -419,13 +437,69 @@ class SharedKVLedger:
         return new
 
     def retire(self, slot: int, t: float) -> int:
-        """Release every page the slot references. Pages the index still
-        caches become `obsolete` occupancy (the reuse cache); the rest
-        return to the free list. Returns the pages *actually freed*."""
+        """Release every page the slot references — target lane and (if
+        present) draft lane. Pages the index still caches become `obsolete`
+        occupancy (the reuse cache); the rest return to the free list.
+        Returns the pages *actually freed*."""
         pages = self.slot_pages.pop(slot)
+        pages = list(pages) + self.draft_pages.pop(slot, [])
         freed = self.allocator.release(pages)
         self.sync(t)
         return len(freed)
+
+    # ------------------------------------------------- speculative draft lane
+    def enable_draft_lane(self, draft_page_bytes: int) -> None:
+        """Declare the byte width of draft-lane pages (the draft model's
+        per-page KV footprint). Draft pages come out of the same allocator
+        and page-id space as target pages but are strictly private: never
+        radix-indexed, never shared, never COW'd."""
+        self.draft_page_bytes = int(draft_page_bytes)
+
+    def admit_draft(self, slot: int, n_pages: int, t: float) -> List[int]:
+        assert slot not in self.draft_pages, \
+            f"slot {slot} already has a draft lane"
+        fresh = self.allocator.alloc(n_pages)
+        self.draft_pages[slot] = fresh
+        self.sync(t)
+        return fresh
+
+    def grow_draft(self, slot: int, total_pages: int, t: float) -> List[int]:
+        have = self.draft_pages[slot]
+        extra = total_pages - len(have)
+        if extra <= 0:
+            return []
+        fresh = self.allocator.alloc(extra)
+        have.extend(fresh)
+        self.sync(t)
+        return fresh
+
+    def truncate_rows(self, slot: int, n_rows: int, t: float
+                      ) -> Tuple[List[int], List[int]]:
+        """Rollback-by-page-truncation: drop the slot's references to every
+        page past `pages_for(n_rows)`, in both lanes. Shared prefix pages
+        merely lose one reference (the refcount layer guarantees they are
+        never mutated or reclaimed while the index or another slot holds
+        them); private tail pages return to the free list. Returns the
+        (target, draft) pages actually freed."""
+        keep = pages_for(n_rows, self.page_size)
+        have = self.slot_pages[slot]
+        freed_t: List[int] = []
+        dirty = False
+        if keep < len(have):
+            tail = have[keep:]
+            del have[keep:]
+            freed_t = self.allocator.release(tail)
+            dirty = True
+        freed_d: List[int] = []
+        dhave = self.draft_pages.get(slot)
+        if dhave is not None and keep < len(dhave):
+            dtail = dhave[keep:]
+            del dhave[keep:]
+            freed_d = self.allocator.release(dtail)
+            dirty = True
+        if dirty:
+            self.sync(t)
+        return freed_t, freed_d
 
     def evict_for(self, n_pages: int, t: float) -> int:
         """LRU-evict cached prefixes until `n_pages` are freed (or nothing

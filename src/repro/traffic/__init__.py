@@ -7,8 +7,9 @@ time-resolved occupancy traces (Stage-II compatible via `sim.trace.TraceBundle`)
 """
 from repro.traffic.generators import (LengthModel, RequestSpec, bursty,  # noqa: F401
                                       diurnal, generate, poisson, replay)
-from repro.traffic.occupancy import (TimingModel, TrafficSim,  # noqa: F401
-                                     TrafficStats, simulate_traffic,
+from repro.traffic.occupancy import (SpecTrafficStats, TimingModel,  # noqa: F401
+                                     TrafficSim, TrafficStats,
+                                     simulate_spec_traffic, simulate_traffic,
                                      utilization_summary)
 from repro.traffic.controller import (ControllerComparison,  # noqa: F401
                                       ControllerConfig, OnlineResult, compare,

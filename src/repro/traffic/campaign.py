@@ -31,7 +31,7 @@ from repro.traffic.controller import ControllerComparison, ControllerConfig, \
     ForecastConfig, compare, compare_grid
 from repro.traffic.generators import LengthModel, generate, generate_workload
 from repro.traffic.occupancy import TrafficSim, simulate_prefix_traffic, \
-    simulate_traffic, utilization_summary
+    simulate_spec_traffic, simulate_traffic, utilization_summary
 
 
 @dataclass(frozen=True)
@@ -55,6 +55,10 @@ class Scenario:
     sharing: int = 8
     page_size: int = 16
     kv_dtype: str = "bf16"
+    # speculative decoding (model-free spec simulator when speculate_k set)
+    speculate_k: Optional[int] = None
+    spec_acceptance: float = 0.7
+    draft_kv_frac: float = 0.5
 
     @property
     def kv_dtype_bytes(self) -> int:
@@ -70,7 +74,8 @@ class Scenario:
     def traffic_key(self) -> Tuple:
         """Scenarios sharing this key see byte-identical request streams."""
         return (self.arrival, self.rate, self.seed, self.horizon_s,
-                self.workload, self.prefix_len, self.sharing)
+                self.workload, self.prefix_len, self.sharing,
+                self.speculate_k, self.spec_acceptance, self.draft_kv_frac)
 
 
 @dataclass
@@ -238,7 +243,21 @@ def run_scenario(scn: Scenario, *, capacities_mib: Optional[Sequence[int]],
     cfg = resolve_arch(scn.arch)
     lengths = lengths or LengthModel(max_len=scn.max_len)
     with tel.span("campaign.simulate", arch=scn.arch, rate=scn.rate):
-        if scn.workload != "plain":
+        if scn.speculate_k is not None:
+            if scn.workload != "plain":
+                raise ValueError(
+                    "speculate_k only composes with workload='plain': the "
+                    "model-free spec and prefix-sharing simulators are "
+                    "separate channels")
+            reqs = generate(scn.arrival, scn.rate, scn.horizon_s,
+                            seed=scn.seed, lengths=lengths)
+            sim = simulate_spec_traffic(
+                cfg, reqs, num_slots=scn.num_slots,
+                page_size=scn.page_size, max_len=scn.max_len,
+                spec_k=scn.speculate_k, acceptance=scn.spec_acceptance,
+                draft_kv_frac=scn.draft_kv_frac, seed=scn.seed,
+                kv_dtype_bytes=scn.kv_dtype_bytes)
+        elif scn.workload != "plain":
             reqs = generate_workload(scn.workload, scn.rate, scn.horizon_s,
                                      seed=scn.seed, lengths=lengths,
                                      arrival=scn.arrival,
@@ -329,6 +348,9 @@ def run_campaign(archs: Sequence[str], *, arrivals: Sequence[str] = ("poisson",)
                  sharing: int = 8,
                  page_size: int = 16,
                  kv_dtype: str = "bf16",
+                 speculate_k: Optional[int] = None,
+                 spec_acceptance: float = 0.7,
+                 draft_kv_frac: float = 0.5,
                  telemetry=None) -> CampaignReport:
     """The full grid. Identical (arrival, rate, seed) cells share one request
     stream across architectures, so MHA-vs-GQA rows are directly comparable."""
@@ -343,7 +365,10 @@ def run_campaign(archs: Sequence[str], *, arrivals: Sequence[str] = ("poisson",)
                                    num_slots=num_slots, max_len=max_len,
                                    workload=workload, prefix_len=prefix_len,
                                    sharing=sharing, page_size=page_size,
-                                   kv_dtype=kv_dtype)
+                                   kv_dtype=kv_dtype,
+                                   speculate_k=speculate_k,
+                                   spec_acceptance=spec_acceptance,
+                                   draft_kv_frac=draft_kv_frac)
                     sim, rows, fast = run_scenario(
                         scn, capacities_mib=capacities_mib, banks=banks,
                         ctrl=ctrl, fcfg=fcfg, lengths=lengths,

@@ -458,6 +458,204 @@ def simulate_prefix_traffic(cfg, requests: Sequence[RequestSpec], *,
     return TrafficSim(cfg.name, bundle, stats, num_slots)
 
 
+# ---------------------------------------------------------------------------
+# Speculative-decoding occupancy analysis (page-granular, model-free)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SpecTrafficStats(TrafficStats):
+    spec_rounds: int = 0
+    drafted_tokens: int = 0
+    accepted_tokens: int = 0
+    rolled_back_pages: int = 0
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Accepted draft tokens / drafted tokens (the bonus token each
+        round contributes is excluded, matching the usual definition)."""
+        if not self.drafted_tokens:
+            return 0.0
+        return (self.accepted_tokens - self.spec_rounds) / self.drafted_tokens
+
+
+def simulate_spec_traffic(cfg, requests: Sequence[RequestSpec], *,
+                          num_slots: int = 8, page_size: int = 16,
+                          num_pages: Optional[int] = None,
+                          max_len: int = 2048, spec_k: int = 4,
+                          acceptance: float = 0.7,
+                          draft_kv_frac: float = 0.5,
+                          kv_dtype_bytes: int = 2,
+                          timing: Optional[TimingModel] = None,
+                          seed: int = 0) -> TrafficSim:
+    """Page-granular continuous batching under speculative decoding.
+
+    Mirrors the real `PagedContinuousBatcher(speculate_k=...)` loop through
+    the same `PagedKVLedger` (both page lanes, draft pages priced at
+    `draft_kv_frac` of a target page) without running a model: each active
+    slot per lockstep round bursts its lanes to the k+1-row verify window,
+    accepts ``m = 1 + <leading Bernoulli(acceptance) run over k drafts>``
+    tokens, then rolls the rejected suffix back via
+    `PagedKVLedger.truncate_rows` — so the trace carries the speculative
+    occupancy signature (per-round sawtooth of burst/rollback deltas) that
+    the serving path produces, and feeds Stage-II (`core.explorer.sweep`,
+    `traffic.campaign`) unchanged. Round latency scales the lockstep decode
+    iteration by ``1 + (k+1) * draft_kv_frac``: one verify pass plus k+1
+    draft steps at the draft's relative cost (for self-speculation the KV
+    fraction and the compute fraction are both the kept-layer fraction)."""
+    from repro.serve.paged import PagedKVLedger, pages_for
+    from repro.serve.paged import page_bytes as paged_page_bytes
+
+    if spec_k < 1:
+        raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+    if not 0.0 <= acceptance <= 1.0:
+        raise ValueError(f"acceptance must be in [0, 1], got {acceptance}")
+    timing = timing or TimingModel.from_arch(cfg)
+    ps = page_size
+    V = spec_k + 1
+    pb = paged_page_bytes(cfg, ps, kv_dtype_bytes)
+    draft_pb = max(1, int(round(pb * draft_kv_frac)))
+    draft_time = 1.0 + V * draft_kv_frac      # round time vs one decode step
+    if num_pages is None:
+        num_pages = 1 + 2 * num_slots * pages_for(max_len, ps)
+    ledger = PagedKVLedger(num_pages, pb, ps)
+    ledger.enable_draft_lane(draft_pb)
+    access = AccessStats()
+    stats = SpecTrafficStats()
+    rng = np.random.default_rng(seed)
+    mem_name = "kv"
+
+    def worst_pages(r: RequestSpec) -> int:
+        """Per-lane worst case: the verify window overshoots the final
+        context by up to k rows before the last rollback truncates it."""
+        S = min(r.prompt_len, max_len)
+        extra = spec_k if r.output_len > 1 else 0
+        return pages_for(min(S + max(r.output_len - 1, 0) + extra, max_len),
+                         ps)
+
+    reqs, rejected = [], 0
+    for r in sorted(requests, key=lambda r: (r.arrival_s, r.rid)):
+        if 2 * worst_pages(r) > num_pages - 1:
+            rejected += 1
+        else:
+            reqs.append(r)
+    stats.rejected = rejected
+    pending = list(reversed(reqs))
+
+    @dataclass
+    class _Slot:
+        req: RequestSpec
+        ctx: int
+        produced: int
+        tok_t: float
+
+    slots: List[Optional[_Slot]] = [None] * num_slots
+    reserved = [0] * num_slots
+    t = 0.0
+
+    def available() -> int:
+        return ledger.allocator.n_free - sum(reserved)
+
+    def admit() -> None:
+        nonlocal t
+        for i in range(num_slots):
+            if slots[i] is not None or not pending:
+                continue
+            r = pending[-1]
+            if r.arrival_s > t:
+                break                    # FCFS: don't skip ahead in time
+            if 2 * worst_pages(r) > available():
+                break                    # FCFS: wait for pages
+            pending.pop()
+            S = min(r.prompt_len, max_len)
+            npg = pages_for(S, ps)
+            # both lanes prefill the full prompt (the draft lane never
+            # shares, so speculation costs a second, cheaper prefill)
+            t += S * timing.prefill_tok_s * (1.0 + draft_kv_frac)
+            ledger.admit(i, npg, t)
+            ledger.admit_draft(i, npg, t)
+            reserved[i] = 2 * (worst_pages(r) - npg)
+            slots[i] = _Slot(r, S, 0, t)
+            access.add_write(mem_name, S * (pb // ps) + S * (draft_pb // ps))
+            stats.admitted += 1
+            stats.admitted_bytes += npg * (pb + draft_pb)
+            stats.queue_delay_s.append(t - r.arrival_s)
+            stats.peak_active_slots = max(
+                stats.peak_active_slots, sum(s is not None for s in slots))
+            if r.output_len <= 1:
+                retire(i)
+
+    def retire(i: int) -> None:
+        s = slots[i]
+        held = (len(ledger.slot_pages[i]) * pb
+                + len(ledger.draft_pages.get(i, [])) * draft_pb)
+        ledger.retire(i, t)
+        stats.retired_bytes += held
+        stats.finished += 1
+        stats.latency_s.append(t - s.req.arrival_s)
+        reserved[i] = 0
+        slots[i] = None
+
+    while pending or any(s is not None for s in slots):
+        admit()
+        active = [i for i in range(num_slots) if slots[i] is not None]
+        if not active:
+            if not pending:
+                break
+            nxt = max(t, pending[-1].arrival_s)
+            if nxt == t:
+                raise RuntimeError(
+                    "spec traffic sim stalled: queue head cannot admit "
+                    "into a drained pool")
+            t = nxt
+            continue
+        # one speculative round per active slot: verify pass + k+1 draft
+        # steps, all inside one lockstep iteration's wall-clock envelope
+        t += (timing.decode_base_s
+              + timing.decode_slot_s * len(active)) * draft_time
+        stats.decode_steps += 1
+        for i in active:
+            s = slots[i]
+            rem = s.req.output_len - 1 - s.produced
+            # burst: both lanes grow to the verify window's worst case
+            burst_rows = min(s.ctx + V, max_len)
+            npg = pages_for(burst_rows, ps)
+            fresh = npg - len(ledger.slot_pages[i])
+            if fresh > 0:
+                ledger.grow(i, npg, t)
+                ledger.grow_draft(i, npg, t)
+                reserved[i] -= 2 * fresh
+                stats.admitted_bytes += fresh * (pb + draft_pb)
+            # target reads the window's pages once (batched verify); the
+            # draft re-reads them for each of its k+1 sequential steps
+            access.add_read(mem_name, npg * pb + V * npg * draft_pb)
+            access.add_write(mem_name, V * (pb // ps) + V * (draft_pb // ps))
+            # m = 1 + leading Bernoulli(acceptance) run over the k drafts
+            draws = rng.random(spec_k) < acceptance
+            lead = spec_k if draws.all() else int(np.argmin(draws))
+            m = min(1 + lead, rem)
+            s.ctx = min(s.ctx + m, max_len)
+            s.produced += m
+            stats.spec_rounds += 1
+            stats.drafted_tokens += spec_k
+            stats.accepted_tokens += m
+            stats.tbt.observe_array(np.diff(np.r_[s.tok_t,
+                                                  np.full(m, t)]))
+            s.tok_t = t
+            # rollback: truncate the rejected suffix out of both lanes
+            ft, fd = ledger.truncate_rows(i, s.ctx, t)
+            freed = len(ft) + len(fd)
+            if freed:
+                reserved[i] += freed
+                stats.rolled_back_pages += freed
+            if s.produced >= s.req.output_len - 1:
+                retire(i)
+
+    bundle = TraceBundle(graph_name=f"{cfg.name}-spec-traffic",
+                         total_time=max(t, 1e-9),
+                         traces={mem_name: ledger.trace}, access=access)
+    return TrafficSim(cfg.name, bundle, stats, num_slots)
+
+
 def utilization_summary(sim: TrafficSim) -> Dict[str, float]:
     """Headline occupancy numbers + serving SLO percentiles for reports."""
     tr = sim.trace

@@ -192,6 +192,93 @@ def build_quant_golden() -> dict:
     return {name: quant_case_payload(name) for name in sorted(QUANT_CASES)}
 
 
+# ---------------------------------------------------------------------------
+# Speculative-decoding golden: the burst/rollback occupancy of the
+# model-free spec simulator is regression-locked (seeded acceptance draws ->
+# per-round verify-window bursts -> truncate_rows rollbacks, both KV lanes)
+# ---------------------------------------------------------------------------
+
+SPEC_GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                                "spec_golden.json")
+
+SPEC_CASES = {
+    "dsr1d-spec-k4": dict(
+        arch="dsr1d-qwen-1.5b", arrival="poisson", rate=4.0, horizon_s=8.0,
+        seed=0, spec_k=4, acceptance=0.7, draft_kv_frac=0.5, num_slots=4,
+        page_size=16, max_len=1024),
+    "gpt2-spec-k2-lowacc": dict(
+        arch="gpt2-xl", arrival="poisson", rate=4.0, horizon_s=8.0,
+        seed=1, spec_k=2, acceptance=0.3, draft_kv_frac=0.25, num_slots=4,
+        page_size=16, max_len=1024),
+}
+
+
+def spec_case_payload(name: str, kv_dtype_bytes: int = 2) -> dict:
+    from repro.traffic.generators import LengthModel, generate
+    from repro.traffic.occupancy import simulate_spec_traffic
+
+    spec = SPEC_CASES[name]
+    cfg = get_arch(spec["arch"])
+    lengths = LengthModel(max_len=spec["max_len"])
+    reqs = generate(spec["arrival"], spec["rate"], spec["horizon_s"],
+                    seed=spec["seed"], lengths=lengths)
+    sim = simulate_spec_traffic(cfg, reqs, num_slots=spec["num_slots"],
+                                page_size=spec["page_size"],
+                                max_len=spec["max_len"],
+                                spec_k=spec["spec_k"],
+                                acceptance=spec["acceptance"],
+                                draft_kv_frac=spec["draft_kv_frac"],
+                                kv_dtype_bytes=kv_dtype_bytes,
+                                seed=spec["seed"])
+    st = sim.stats
+    tr = sim.bundle.traces["kv"]
+    dur, needed, obsolete, _ = tr.segments(sim.total_time)
+    _, n_int, o_int = tr.as_arrays()
+    ev = np.asarray(tr.ev_dneeded)
+    return {
+        "total_time": float(sim.total_time),
+        "n_requests": len(reqs),
+        "stats": {
+            "admitted": st.admitted, "finished": st.finished,
+            "decode_steps": st.decode_steps,
+            "spec_rounds": st.spec_rounds,
+            "drafted_tokens": st.drafted_tokens,
+            "accepted_tokens": st.accepted_tokens,
+            "rolled_back_pages": st.rolled_back_pages,
+        },
+        # rollback signature: frees strictly outnumber retires when
+        # speculative tails are truncated mid-stream
+        "n_neg_deltas": int((ev < 0).sum()),
+        "access_reads": {k: int(v)
+                         for k, v in sorted(sim.bundle.access
+                                            .reads_bytes.items())},
+        "access_writes": {k: int(v)
+                          for k, v in sorted(sim.bundle.access
+                                             .writes_bytes.items())},
+        "mems": {
+            "kv": {
+                "n_events": tr.n_events,
+                "peak_needed": int(tr.peak_needed()),
+                "peak_total": int(tr.peak_total()),
+                "final_needed": int(n_int[-1]) if len(n_int) else 0,
+                "final_obsolete": int(o_int[-1]) if len(o_int) else 0,
+                "durations": [float(d) for d in dur],
+                "needed": [int(v) for v in needed],
+                "obsolete": [int(v) for v in obsolete],
+            },
+        },
+    }
+
+
+def build_spec_golden() -> dict:
+    return {name: spec_case_payload(name) for name in sorted(SPEC_CASES)}
+
+
+def load_spec_golden() -> dict:
+    with open(SPEC_GOLDEN_PATH) as f:
+        return json.load(f)
+
+
 def load_quant_golden() -> dict:
     with open(QUANT_GOLDEN_PATH) as f:
         return json.load(f)

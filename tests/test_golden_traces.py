@@ -194,6 +194,67 @@ def test_quant_golden_is_exact_byte_rescale_of_prefix(case, quant_golden,
         assert [v * ratio for v in w["obsolete"]] == b["obsolete"]
 
 
+# ---------------------------------------------------------------------------
+# Speculative-decoding golden: the burst/rollback occupancy of the spec
+# simulator is regression-locked (seeded acceptance draws -> verify-window
+# bursts -> truncate_rows rollbacks across both KV lanes)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def spec_golden():
+    assert os.path.exists(golden_util.SPEC_GOLDEN_PATH), \
+        "missing fixtures: run PYTHONPATH=src python scripts/regen_golden.py"
+    data = golden_util.load_spec_golden()
+    assert sorted(data) == sorted(golden_util.SPEC_CASES)
+    return data
+
+
+@pytest.mark.parametrize("case", sorted(golden_util.SPEC_CASES))
+def test_spec_occupancy_matches_golden(case, spec_golden):
+    got = golden_util.spec_case_payload(case)
+    want = spec_golden[case]
+    errs = []
+    for key in ("n_requests", "stats", "n_neg_deltas", "access_reads",
+                "access_writes"):
+        if got[key] != want[key]:
+            errs.append(f"{key}: {got[key]!r} != {want[key]!r}")
+    if got["total_time"] != want["total_time"]:
+        errs.append(f"total_time: {got['total_time']!r} != "
+                    f"{want['total_time']!r}")
+    for m, w in want["mems"].items():
+        g = got["mems"][m]
+        for key in ("n_events", "peak_needed", "peak_total", "final_needed",
+                    "final_obsolete", "needed", "obsolete", "durations"):
+            if g[key] != w[key]:
+                errs.append(f"{m}.{key} mismatch")
+    assert not errs, "\n".join(
+        [f"{case} drifted from spec golden — if intentional, regenerate "
+         f"with scripts/regen_golden.py:"] + errs)
+
+
+@pytest.mark.parametrize("case", sorted(golden_util.SPEC_CASES))
+def test_spec_golden_invariants(case, spec_golden):
+    """Structural invariants of the frozen fixtures: rollbacks really
+    happened (mid-stream negative deltas strictly outnumber retires, and
+    pages were rolled back), acceptance sits inside each round's [1, k+1]
+    window, and the trace drains to zero."""
+    want = spec_golden[case]
+    st = want["stats"]
+    k = golden_util.SPEC_CASES[case]["spec_k"]
+    kv = want["mems"]["kv"]
+    assert st["spec_rounds"] > 0
+    assert st["rolled_back_pages"] > 0
+    assert st["drafted_tokens"] == st["spec_rounds"] * k
+    assert st["spec_rounds"] <= st["accepted_tokens"] \
+        <= st["spec_rounds"] * (k + 1)
+    # the rollback occupancy signature: more frees than request retirements
+    assert want["n_neg_deltas"] > st["finished"]
+    assert kv["final_needed"] == 0 and kv["final_obsolete"] == 0
+    assert kv["peak_needed"] <= kv["peak_total"]
+    assert all(v >= 0 for v in kv["needed"])
+    assert all(d >= 0 for d in kv["durations"])
+
+
 def test_fixture_case_coverage(golden):
     """Both paper workloads appear in both phases, and fixtures are sane."""
     phases = {(CASES[n]["arch"], CASES[n]["phase"]) for n in golden}

@@ -12,6 +12,8 @@ from repro.kernels.int8_matmul import (int8_matmul, int8_matmul_ref,
                                        quantize_cols, quantize_rows)
 from repro.kernels.paged_gqa_decode import (gather_pages, paged_gqa_decode,
                                             paged_gqa_decode_ref)
+from repro.kernels.paged_gqa_verify import (paged_gqa_verify,
+                                            paged_gqa_verify_ref)
 
 
 def _rand(key, shape, dtype):
@@ -163,6 +165,85 @@ def test_paged_gqa_decode_respects_length_and_table():
             pk = pk.at[last, :, L % ps:].set(77.0)
             pv = pv.at[last, :, L % ps:].set(-77.0)
     o2 = paged_gqa_decode(q, pk, pv, pt, lengths, backend="interpret")
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)
+
+
+# --- paged gqa verify ----------------------------------------------------------
+
+def _verify_case(seed, B, K, d, ps, P, N, V):
+    """Random pool + ragged base lengths for a V-row speculative window;
+    every slot's page table covers base + V rows (the window rows are
+    written before verification). First slot's base is a page multiple so
+    both an exactly-full and a partially-filled last page are exercised."""
+    rng = np.random.default_rng(seed)
+    pool_k = jnp.asarray(rng.normal(size=(N, K, ps, d)), jnp.float32)
+    pool_v = jnp.asarray(rng.normal(size=(N, K, ps, d)), jnp.float32)
+    cap = P * ps - V
+    base = rng.integers(1, cap + 1, B)
+    base[0] = min(ps * max(1, int(base[0]) // ps), cap)   # page multiple
+    pt = np.zeros((B, P), np.int64)
+    pool_ids = list(range(1, N))
+    rng.shuffle(pool_ids)
+    for b in range(B):
+        npg = -(-(int(base[b]) + V) // ps)
+        pt[b, :npg] = [pool_ids.pop() for _ in range(npg)]
+    return pool_k, pool_v, jnp.asarray(pt, jnp.int32), jnp.asarray(
+        base, jnp.int32)
+
+
+@pytest.mark.parametrize("B,H,K,d,ps,P,N,V", [
+    (2, 4, 4, 32, 8, 4, 12, 3),    # MHA
+    (3, 8, 2, 64, 16, 3, 16, 4),   # GQA group 4
+    (2, 8, 1, 64, 8, 6, 16, 2),    # MQA
+    (2, 12, 3, 32, 8, 4, 12, 5),   # non-pow2 heads
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_gqa_verify_sweep(B, H, K, d, ps, P, N, V, dtype):
+    pool_k, pool_v, pt, base = _verify_case(20 + B + V, B, K, d, ps, P, N, V)
+    q = _rand(jax.random.PRNGKey(B + V), (B, V, H, d), dtype)
+    pool_k, pool_v = pool_k.astype(dtype), pool_v.astype(dtype)
+    out = paged_gqa_verify(q, pool_k, pool_v, pt, base, backend="interpret")
+    ref = paged_gqa_verify_ref(q, pool_k, pool_v, pt, base)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-6
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_paged_gqa_verify_rows_match_decode():
+    """Row v of the fused verify kernel must equal the decode kernel run at
+    that row's causal length base + v + 1 — verification is exactly V fused
+    decode calls sharing one pass over the pages."""
+    B, H, K, d, ps, P, N, V = 2, 8, 2, 32, 8, 4, 16, 3
+    pool_k, pool_v, pt, base = _verify_case(31, B, K, d, ps, P, N, V)
+    q = _rand(jax.random.PRNGKey(17), (B, V, H, d), jnp.float32)
+    out = paged_gqa_verify(q, pool_k, pool_v, pt, base, backend="interpret")
+    for v in range(V):
+        row = paged_gqa_decode(q[:, v], pool_k, pool_v, pt, base + v + 1,
+                               backend="interpret")
+        np.testing.assert_allclose(np.asarray(out[:, v]), np.asarray(row),
+                                   atol=1e-6, rtol=1e-6)
+
+
+def test_paged_gqa_verify_respects_window_and_table():
+    """Pool pages a slot does not own — and tokens at or past the widest
+    row's horizon base + V, including the partially-filled last page —
+    must not affect any window row."""
+    B, H, K, d, ps, P, N, V = 2, 4, 2, 32, 8, 4, 16, 3
+    pool_k, pool_v, pt, base = _verify_case(43, B, K, d, ps, P, N, V)
+    q = _rand(jax.random.PRNGKey(23), (B, V, H, d), jnp.float32)
+    o1 = paged_gqa_verify(q, pool_k, pool_v, pt, base, backend="interpret")
+    owned = np.unique(np.asarray(pt))
+    foreign = [p for p in range(N) if p not in owned]
+    pk = pool_k.at[jnp.asarray(foreign)].set(99.0)
+    pv = pool_v.at[jnp.asarray(foreign)].set(-99.0)
+    # poison everything past each slot's widest horizon base + V
+    for b in range(B):
+        L = int(base[b]) + V
+        last = int(np.asarray(pt)[b, (L - 1) // ps])
+        if L % ps:
+            pk = pk.at[last, :, L % ps:].set(77.0)
+            pv = pv.at[last, :, L % ps:].set(-77.0)
+    o2 = paged_gqa_verify(q, pk, pv, pt, base, backend="interpret")
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)
 
 

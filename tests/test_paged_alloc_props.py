@@ -116,3 +116,115 @@ def test_pages_for_covers_tokens_tightly(tokens, ps):
     n = pages_for(tokens, ps)
     assert n * ps >= tokens
     assert (n - 1) * ps < tokens
+
+
+# ---------------------------------------------------------------------------
+# Speculative rollback: truncate_rows + the draft lane
+# ---------------------------------------------------------------------------
+
+PAGE_SIZE = 16
+
+# per-slot speculative lifetimes: (slot, prompt_rows, list of (grow_rows,
+# keep_rows) burst/rollback rounds)
+spec_stream_st = st.lists(
+    st.tuples(st.integers(0, 3),                     # slot id
+              st.integers(1, 40),                    # prompt rows
+              st.lists(st.tuples(st.integers(0, 30), st.integers(0, 30)),
+                       max_size=5)),                 # (grow, rollback) rounds
+    min_size=1, max_size=20)
+
+
+@given(spec_stream_st, st.booleans())
+@settings(max_examples=60, deadline=None)
+def test_truncate_rows_conserves_pages_and_drains(stream, with_draft):
+    """Speculative burst/rollback through the ledger: grow both lanes to a
+    verify window's worst case, truncate back to the accepted rows. At every
+    step pages are conserved, no page is leaked or double-freed (the base
+    allocator raises on either), truncation never cuts below the accepted
+    rows' pages, both lanes stay in lockstep, and a full retire drains the
+    allocator to zero with the trace integrating to zero."""
+    led = PagedKVLedger(256, PAGE_BYTES, PAGE_SIZE)
+    if with_draft:
+        led.enable_draft_lane(PAGE_BYTES // 4)
+    t = 0.0
+    rows = {}
+    for slot, n_rows, rounds in stream:
+        t += 0.1
+        if slot in rows:
+            before = led.allocator.n_allocated
+            held = len(led.slot_pages[slot]) + \
+                len(led.draft_pages.get(slot, []))
+            freed = led.retire(slot, t)
+            assert freed == held
+            assert led.allocator.n_allocated == before - held
+            del rows[slot]
+            continue
+        npg = pages_for(n_rows, PAGE_SIZE)
+        led.admit(slot, npg, t)
+        if with_draft:
+            dp = led.admit_draft(slot, npg, t)
+            assert len(dp) == npg
+        rows[slot] = n_rows
+        for grow_rows, keep_rows in rounds:
+            t += 0.1
+            total = rows[slot] + grow_rows              # speculative burst
+            led.grow(slot, pages_for(total, PAGE_SIZE), t)
+            if with_draft:
+                led.grow_draft(slot, pages_for(total, PAGE_SIZE), t)
+            keep = max(rows[slot], min(total, rows[slot] + keep_rows))
+            ft, fd = led.truncate_rows(slot, keep, t)   # rollback
+            rows[slot] = keep
+            kp = pages_for(keep, PAGE_SIZE)
+            assert len(led.slot_pages[slot]) == kp
+            assert len(ft) == pages_for(total, PAGE_SIZE) - kp
+            if with_draft:
+                assert len(led.draft_pages[slot]) == kp    # lanes lockstep
+                assert len(fd) == len(ft)
+            else:
+                assert fd == []
+        assert led.allocator.n_free + led.allocator.n_allocated == 256 - 1
+    for slot in list(rows):
+        t += 0.1
+        led.retire(slot, t)
+    assert led.allocator.n_allocated == 0
+    if led.trace.n_events:
+        assert sum(led.trace.ev_dneeded) == 0
+        _, n, _ = led.trace.as_arrays()
+        assert int(n[-1]) == 0
+
+
+@given(st.integers(1, 60), st.integers(0, 40), st.integers(1, 6))
+@settings(max_examples=60, deadline=None)
+def test_shared_ledger_truncate_never_frees_shared_pages(prompt_rows,
+                                                         spec_rows, ps_pow):
+    """SharedKVLedger rollback safety: a slot whose prefix pages are shared
+    (with the radix index and a sibling slot) can truncate its speculative
+    tail without ever reclaiming a shared page — shared pages only lose the
+    truncating slot's reference (COW semantics preserved); only the private
+    speculative tail returns to the free list."""
+    from repro.serve.prefix import SharedKVLedger
+    ps = 2 ** ps_pow
+    led = SharedKVLedger(256, PAGE_BYTES, ps)
+    npg = pages_for(prompt_rows, ps)
+    shared = led.allocator.alloc(npg)       # stand-in for an indexed run
+    led.admit(0, 0, 0.0, shared=shared)
+    led.admit(1, 0, 0.1, shared=shared)     # sibling mapping the same run
+    total = prompt_rows + spec_rows
+    led.grow(0, pages_for(total, ps), 0.2)  # slot 0's speculative burst
+    before_free = led.allocator.n_free
+    ft, fd = led.truncate_rows(0, prompt_rows, 0.3)
+    assert fd == []
+    # every freed page is private (was refcount 1); shared pages survive
+    assert not (set(ft) & set(shared))
+    assert led.allocator.n_free == before_free + len(ft)
+    for p in shared:
+        assert led.allocator.refcount(p) >= 2   # slot 1 + original ref
+    # truncating INTO the shared prefix drops refs but frees nothing
+    led.grow(0, pages_for(total, ps), 0.4)
+    led.truncate_rows(0, 0, 0.5)
+    for p in shared:
+        assert led.allocator.refcount(p) >= 1
+    led.retire(0, 0.6)
+    led.retire(1, 0.7)
+    led.allocator.release(shared)
+    assert led.allocator.n_allocated == 0

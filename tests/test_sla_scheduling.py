@@ -116,8 +116,40 @@ def test_chunked_prefill_validation(small):
         _batcher(m, params, prefill_chunk_tokens=12)    # not a page multiple
     with pytest.raises(ValueError, match="multiple of"):
         _batcher(m, params, prefill_chunk_tokens=0)
-    with pytest.raises(ValueError, match="prefix_cache"):
-        _batcher(m, params, prefill_chunk_tokens=16, prefix_cache=True)
+
+
+def test_chunked_suffix_prefill_on_prefix_hit_bit_identical(small):
+    """prefill_chunk_tokens now composes with prefix_cache: on a hit only
+    the un-matched *suffix* is prefilled, in page-aligned slices (the first
+    slice re-aligns a mid-page match boundary). The emitted tokens must be
+    bit-identical to the monolithic suffix prefill, the match must still be
+    reused, and the suffix must actually have been sliced."""
+    cfg, m, params = small
+    rng = np.random.default_rng(17)
+    shared = rng.integers(0, cfg.vocab_size, 21)        # mid-page boundary
+    suffixes = [rng.integers(0, cfg.vocab_size, n) for n in (37, 41)]
+    prompts = [np.concatenate([shared, s]) for s in suffixes]
+    new = [6, 5]
+
+    def run(**kw):
+        b = _batcher(m, params, num_slots=1, num_pages=64,
+                     max_pages_per_slot=12, prefix_cache=True, **kw)
+        for i, (p, n) in enumerate(zip(prompts, new)):
+            b.submit(Request(rid=i, tokens=p, max_new_tokens=n))
+        return {r.rid: list(r.output) for r in b.run()}, b
+
+    ref, mono = run()
+    assert mono.stats.prefix_hits == 1          # request 1 reuses `shared`
+    got, chunked = run(prefill_chunk_tokens=16)
+    assert got == ref
+    assert chunked.stats.prefix_hits == 1
+    assert chunked.stats.prefix_tokens_reused == \
+        mono.stats.prefix_tokens_reused
+    # both the miss (58 tokens) and the hit's suffix (>=41 tokens past the
+    # 16-token match boundary realignment) ran in multiple slices
+    assert chunked.stats.prefill_slices >= 4 + 3
+    assert chunked.ledger.allocator.n_allocated == \
+        mono.ledger.allocator.n_allocated
 
 
 # ---------------------------------------------------------------------------

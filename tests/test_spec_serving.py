@@ -1,0 +1,226 @@
+"""Speculative decoding on the paged KV cache.
+
+The acceptance guarantee pinned here: with greedy decoding, every token the
+speculative loop emits is the TARGET model's argmax — the draft only moves
+the acceptance rate — so the accepted output stream must be bit-identical
+to the non-speculative PR-4 paged decode loop, for any draft and any
+speculate_k. Plus the rollback mechanics: both page lanes truncate back to
+the accepted context at chunk boundaries, pages are conserved, and the
+allocator drains to zero.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.models import build_model
+from repro.models.transformer import self_spec_draft
+from repro.serve import PagedContinuousBatcher, Request
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = reduced(get_arch("tinyllama-1.1b"), layers=2)
+    m = build_model(cfg, compute_dtype=jnp.float32, remat="none")
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+@pytest.fixture(scope="module")
+def small4():
+    """4 layers so self-spec skip=2 is a genuinely different (2-layer)
+    draft with an imperfect acceptance rate — the rollback exerciser."""
+    cfg = reduced(get_arch("tinyllama-1.1b"), layers=4)
+    m = build_model(cfg, compute_dtype=jnp.float32, remat="none")
+    params = m.init(jax.random.PRNGKey(1))
+    return cfg, m, params
+
+
+def _batcher(m, params, **kw):
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("num_pages", 64)
+    kw.setdefault("max_pages_per_slot", 8)
+    kw.setdefault("chunk_steps", 4)
+    kw.setdefault("attn_backend", "ref")
+    return PagedContinuousBatcher(m, params, **kw)
+
+
+def _run(m, params, prompts, new, **kw):
+    b = _batcher(m, params, **kw)
+    for i, (p, n) in enumerate(zip(prompts, new)):
+        b.submit(Request(rid=i, tokens=np.asarray(p), max_new_tokens=n))
+    done = b.run()
+    return {r.rid: list(r.output) for r in done}, b
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: accepted tokens == the non-speculative loop's tokens
+# ---------------------------------------------------------------------------
+
+def test_spec_tokens_bit_identical_to_nonspec_loop(small4):
+    """The headline guarantee: greedy speculative output is bit-identical
+    to the non-speculative paged loop, with an *imperfect* draft (skip=2
+    self-speculation) actually rejecting candidates along the way."""
+    cfg, m, params = small4
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, n) for n in (7, 12, 5)]
+    new = [11, 9, 13]
+    ref, _ = _run(m, params, prompts, new)
+    for k in (1, 2, 3):
+        got, b = _run(m, params, prompts, new, speculate_k=k)
+        assert got == ref, f"speculate_k={k} changed the output stream"
+        st = b.stats
+        assert st.accepted_tokens == sum(n - 1 for n in new)
+        assert st.spec_rounds >= 1
+        assert st.drafted_tokens == st.spec_rounds * k
+        # every round accepts in [1, k+1]
+        assert st.spec_rounds <= st.accepted_tokens
+        assert st.accepted_tokens <= st.spec_rounds * (k + 1)
+        assert b.ledger.allocator.n_allocated == 0
+
+
+def test_spec_oracle_draft_accepts_everything(small):
+    """skip=1 self-speculation IS the target: every candidate must be
+    accepted (m = k+1 per full round), giving the upper-bound round count
+    ceil(tokens / (k+1)) per request — and the same tokens."""
+    cfg, m, params = small
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab_size, n) for n in (9, 6)]
+    new = [12, 12]
+    ref, _ = _run(m, params, prompts, new)
+    draft, dparams = self_spec_draft(m, params, skip=1)
+    got, b = _run(m, params, prompts, new, speculate_k=3,
+                  draft_model=draft, draft_params=dparams)
+    assert got == ref
+    st = b.stats
+    assert st.accepted_tokens == st.spec_rounds * 4 - \
+        (-st.accepted_tokens % 4)  # all full rounds but the last remainder
+    # 11 post-prefill tokens per request at 4/round -> 3 rounds each
+    assert st.spec_rounds == 6
+
+
+def test_spec_eos_clips_inside_window(small):
+    """An EOS landing mid-verify-window must clip acceptance exactly where
+    the sequential loop would stop; tokens after it are discarded even if
+    the target would have accepted them."""
+    cfg, m, params = small
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, n) for n in (8, 11)]
+    new = [40, 40]
+    ref, rb = _run(m, params, prompts, new)
+    # pick an eos that actually occurs mid-stream in the reference output
+    eos = None
+    for rid, toks in ref.items():
+        for tok in toks[1:-1]:
+            eos = int(tok)
+            break
+        if eos is not None:
+            break
+    assert eos is not None
+
+    def run_eos(**kw):
+        b = _batcher(m, params, **kw)
+        for i, (p, n) in enumerate(zip(prompts, new)):
+            b.submit(Request(rid=i, tokens=np.asarray(p), max_new_tokens=n,
+                             eos_id=eos))
+        return {r.rid: list(r.output) for r in b.run()}, b
+
+    ref_eos, _ = run_eos()
+    got_eos, b = run_eos(speculate_k=3)
+    assert got_eos == ref_eos
+    assert b.ledger.allocator.n_allocated == 0
+
+
+def test_spec_composes_with_prefix_cache(small):
+    """Speculation on top of prefix sharing: the draft lane never shares
+    (full fresh prefill), the target lane still reuses the radix match,
+    and rollback truncation never reclaims a shared page — output stays
+    bit-identical."""
+    cfg, m, params = small
+    rng = np.random.default_rng(6)
+    shared = rng.integers(0, cfg.vocab_size, 17)
+    prompts = [np.concatenate([shared, rng.integers(0, cfg.vocab_size, n)])
+               for n in (9, 7, 12)]
+    new = [8, 9, 7]
+    ref, _ = _run(m, params, prompts, new, num_pages=128,
+                  max_pages_per_slot=10)
+    got, b = _run(m, params, prompts, new, num_pages=128,
+                  max_pages_per_slot=10, prefix_cache=True, speculate_k=2)
+    assert got == ref
+    assert b.stats.prefix_hits >= 1
+    assert b.stats.accepted_tokens == sum(n - 1 for n in new)
+    # retirement leaves only index-cached pages; none of them draft pages
+    assert b.ledger.draft_pages == {}
+    assert b.ledger.allocator.n_allocated == b.ledger.index.n_cached_pages
+
+
+# ---------------------------------------------------------------------------
+# Rollback-by-truncation mechanics + occupancy signature
+# ---------------------------------------------------------------------------
+
+def test_spec_rollback_truncates_pages_midstream(small4):
+    """Rejected speculative tails must actually free pages mid-stream: the
+    occupancy trace carries negative deltas before the final retire, the
+    rolled-back page counter moves, and burst/rollback conserves pages."""
+    cfg, m, params = small4
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, n) for n in (9, 6)]
+    got, b = _run(m, params, prompts, [16, 18], speculate_k=3)
+    st = b.stats
+    assert st.rolled_back_pages > 0
+    assert st.pages_freed > st.rolled_back_pages  # retire frees the rest
+    ev = np.asarray(b.ledger.trace.ev_dneeded)
+    # negative (rollback/retire) deltas interleave with positive bursts
+    assert (ev < 0).sum() > len(prompts)          # more frees than retires
+    assert ev.sum() == 0                          # drains to zero
+    assert b.ledger.allocator.n_allocated == 0
+
+
+def test_spec_timeline_and_occupancy_bundle(small):
+    """The spec loop still produces a well-formed Stage-I bundle: the trace
+    integrates to zero, peak covers both lanes, and access accounting saw
+    draft + target traffic."""
+    cfg, m, params = small
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(0, cfg.vocab_size, 10)]
+    got, b = _run(m, params, prompts, [12], speculate_k=2)
+    bundle = b.occupancy_bundle()
+    tr = bundle.traces["kv"]
+    _, n, _ = tr.as_arrays()
+    assert int(n[-1]) == 0
+    assert tr.peak_needed() > 0
+    assert bundle.access.n_reads("kv") > 0
+    assert bundle.access.n_writes("kv") > 0
+
+
+# ---------------------------------------------------------------------------
+# Validation / gating
+# ---------------------------------------------------------------------------
+
+def test_spec_validation(small):
+    cfg, m, params = small
+    with pytest.raises(ValueError, match="speculate_k"):
+        _batcher(m, params, speculate_k=0)
+    with pytest.raises(NotImplementedError, match="collect_logits"):
+        _batcher(m, params, speculate_k=2, collect_logits=True)
+    with pytest.raises(NotImplementedError, match="int8"):
+        _batcher(m, params, speculate_k=2, kv_dtype="int8")
+    draft, dparams = self_spec_draft(m, params, skip=2)
+    with pytest.raises(ValueError, match="together"):
+        _batcher(m, params, speculate_k=2, draft_model=draft)
+
+
+def test_self_spec_draft_shapes(small):
+    cfg, m, params = small
+    draft, dparams = self_spec_draft(m, params, skip=2)
+    assert draft.cfg.num_layers == 1
+    assert draft.cfg.name.endswith("-selfspec2")
+    # sliced stacked params keep the layer axis, length = kept layers
+    leaf = jax.tree.leaves(dparams["blocks"][0])[0]
+    ref = jax.tree.leaves(params["blocks"][0])[0]
+    assert leaf.shape[0] == 1 and ref.shape[0] == 2
+    assert leaf.shape[1:] == ref.shape[1:]
+    with pytest.raises(ValueError, match="skip"):
+        self_spec_draft(m, params, skip=0)
