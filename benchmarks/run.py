@@ -1,7 +1,13 @@
-# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV and appends the run's headline metrics to BENCH_history.jsonl (override
+# with --history PATH, disable with --no-history); `scripts/bench_gate.py`
+# turns that history into a CI regression gate.
 from __future__ import annotations
 
+import argparse
+import json
 import sys
+import time
 import traceback
 
 from benchmarks import kernels_bench, paper_figs, prefix_bench, \
@@ -35,20 +41,43 @@ BENCHES = [
 ]
 
 
+def append_history(path: str, results: dict) -> None:
+    """One JSONL entry per run: every suite's headline us_per_call, in the
+    key shape `scripts/bench_gate.py` guards (lower is better)."""
+    entry = {"ts": time.strftime("%Y-%m-%dT%H:%M:%S", time.gmtime()),
+             "source": "benchmarks.run",
+             "metrics": {f"{name}.us_per_call": us
+                         for name, us in results.items() if us > 0}}
+    with open(path, "a") as f:
+        f.write(json.dumps(entry) + "\n")
+
+
 def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    ap = argparse.ArgumentParser()
+    ap.add_argument("only", nargs="?", default=None,
+                    help="substring filter over bench names")
+    ap.add_argument("--history", default="BENCH_history.jsonl")
+    ap.add_argument("--no-history", action="store_true")
+    args = ap.parse_args()
+    only = args.only
     print("name,us_per_call,derived")
     failures = 0
+    results: dict = {}
     for name, fn in BENCHES:
         if only and only not in name:
             continue
         try:
             us, derived = fn()
+            results[name] = us
             print(f"{name},{us:.0f},{derived}", flush=True)
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name},-1,FAILED {type(e).__name__}: {e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+    if results and not args.no_history:
+        append_history(args.history, results)
+        print(f"# appended {len(results)} headline metrics to "
+              f"{args.history}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

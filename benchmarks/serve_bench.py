@@ -34,6 +34,7 @@ from repro.serve.paged import pages_for
 DEFAULT_OUT = "BENCH_serve.json"
 SPEEDUP_BAR = 5.0
 TELEMETRY_OVERHEAD_BAR_PCT = 3.0
+METER_OVERHEAD_BAR_PCT = 5.0
 
 
 def _legacy_decode_tok_s(model, params, prompts: np.ndarray,
@@ -72,7 +73,8 @@ def _legacy_decode_tok_s(model, params, prompts: np.ndarray,
 
 def _paged_run_fn(model, params, prompts: np.ndarray, n_new: int,
                   page_size: int, chunk_steps: int, telemetry=None,
-                  kv_dtype: str = "native", collect_logits: bool = False):
+                  kv_dtype: str = "native", collect_logits: bool = False,
+                  meter=None):
     """(timed-run closure, batcher) for the paged chunk loop; one call
     decodes every slot to completion and returns the decode seconds
     (prefills untimed)."""
@@ -82,7 +84,7 @@ def _paged_run_fn(model, params, prompts: np.ndarray, n_new: int,
         model, params, num_slots=B, page_size=page_size,
         num_pages=B * worst + 8, max_pages_per_slot=worst + 1,
         chunk_steps=chunk_steps, attn_backend="ref", telemetry=telemetry,
-        kv_dtype=kv_dtype, collect_logits=collect_logits)
+        kv_dtype=kv_dtype, collect_logits=collect_logits, meter=meter)
 
     def run():
         for i in range(B):
@@ -172,6 +174,38 @@ def bench_serve(out_path: str = DEFAULT_OUT):
     tel_tok_s = (n_new - 1) * B / dt_on
     overhead_pct = max(0.0, (dt_on - dt_off) / dt_off * 100.0)
 
+    # meter-overhead guard: a streaming BankEnergyMeter on the ledger's
+    # event funnel (per-event state machine + attribution) must not cost
+    # more than 5% decode throughput. Same interleaved min-taken protocol
+    # as the telemetry leg. Afterwards the streamed integral is asserted
+    # bit-identical to the offline evaluation of the ledger's own trace.
+    from repro.core.gating import evaluate
+    from repro.obs.energy import BankEnergyMeter
+    meter = BankEnergyMeter(1 << 20, 8, policy="conservative")
+    run_met, cb_met = _paged_run_fn(model, params, prompts, n_new,
+                                    page_size=16, chunk_steps=64,
+                                    meter=meter)
+    run_met()                                    # warm compile
+    mets, offs2 = [], []
+    for k in range(16):
+        if k % 2:
+            mets.append(run_met()), offs2.append(run_off())
+        else:
+            offs2.append(run_off()), mets.append(run_met())
+    dt_off2, dt_met = min(offs2), min(mets)
+    met_tok_s = (n_new - 1) * B / dt_met
+    meter_overhead_pct = max(0.0, (dt_met - dt_off2) / dt_off2 * 100.0)
+    end = float(cb_met.ledger.trace.as_arrays()[0][-1])
+    got = meter.finalize(end)
+    dur, occ = cb_met.ledger.trace.occupancy_series(end, use="needed")
+    ref = evaluate(dur, occ, capacity=meter.capacity, banks=meter.banks,
+                   policy=meter.policy, n_reads=0, n_writes=0,
+                   char=meter.char)
+    assert (got.e_leak, got.e_sw, got.n_transitions) == \
+        (ref.e_leak, ref.e_sw, ref.n_transitions), (
+        f"streamed meter diverged from offline evaluation: "
+        f"{got.e_leak} vs {ref.e_leak}, {got.e_sw} vs {ref.e_sw}")
+
     report = {
         "config": f"{cfg.name} ({cfg.num_layers} layers)",
         "slots": B,
@@ -184,6 +218,9 @@ def bench_serve(out_path: str = DEFAULT_OUT):
         "paged_tok_s": paged_tok_s,
         "paged_tok_s_telemetry": tel_tok_s,
         "telemetry_overhead_pct": overhead_pct,
+        "paged_tok_s_meter": met_tok_s,
+        "meter_overhead_pct": meter_overhead_pct,
+        "meter_events": meter.n_events,
         "speedup": speedup,
         "pages_peak": cb.stats.peak_pages,
         "note": ("baseline = pre-PR per-token host loop (one decode_step "
@@ -196,6 +233,9 @@ def bench_serve(out_path: str = DEFAULT_OUT):
     assert overhead_pct <= TELEMETRY_OVERHEAD_BAR_PCT, (
         f"enabled telemetry costs {overhead_pct:.2f}% decode throughput, "
         f"bar is {TELEMETRY_OVERHEAD_BAR_PCT}%")
+    assert meter_overhead_pct <= METER_OVERHEAD_BAR_PCT, (
+        f"enabled BankEnergyMeter costs {meter_overhead_pct:.2f}% decode "
+        f"throughput, bar is {METER_OVERHEAD_BAR_PCT}%")
     with open(out_path, "w") as f:
         json.dump(report, f, indent=1)
     return report

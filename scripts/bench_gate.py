@@ -1,0 +1,148 @@
+#!/usr/bin/env python
+"""Benchmark regression gate over BENCH_history.jsonl.
+
+Flattens the numeric leaves of one or more ``BENCH_*.json`` reports into a
+single metrics dict, appends it as a new history entry, then compares every
+*guarded* metric against the most recent previous entry that carries it:
+
+  * lower-is-better  — keys ending in ``_s``, ``_us`` or ``us_per_call``
+    (wall times); degradation = new > old * (1 + bar)
+  * higher-is-better — keys containing ``speedup``, ``throughput`` or
+    ``tok_s``; degradation = new < old / (1 + bar)
+
+Anything else is recorded but not gated. A missing history file (or one
+with no prior entry for a key) records only — the first run can never
+fail. Exit status 1 when any guarded metric degrades past the bar.
+
+Usage:
+    python scripts/bench_gate.py --history BENCH_history.jsonl \
+        /tmp/BENCH_stage1.json /tmp/BENCH_serve.json ...
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+HIGHER_BETTER = ("speedup", "throughput", "tok_s")
+LOWER_BETTER_SUFFIXES = ("_s", "_us", "us_per_call")
+
+
+def guard_direction(key: str):
+    """'up' (higher better), 'down' (lower better) or None (unguarded)."""
+    leaf = key.rsplit(".", 1)[-1]
+    if any(h in leaf for h in HIGHER_BETTER):
+        return "up"
+    if leaf.endswith(LOWER_BETTER_SUFFIXES):
+        return "down"
+    return None
+
+
+def flatten(prefix: str, obj, out: dict) -> None:
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            flatten(f"{prefix}.{k}" if prefix else str(k), v, out)
+    elif isinstance(obj, bool):
+        pass
+    elif isinstance(obj, (int, float)):
+        out[prefix] = float(obj)
+
+
+def load_metrics(paths) -> dict:
+    metrics: dict = {}
+    for p in paths:
+        stem = os.path.splitext(os.path.basename(p))[0]
+        with open(p) as f:
+            flatten(stem, json.load(f), metrics)
+    return metrics
+
+
+def previous_values(history_path: str) -> dict:
+    """Most recent prior value per key across all history entries."""
+    prev: dict = {}
+    if not os.path.exists(history_path):
+        return prev
+    with open(history_path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                entry = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            prev.update(entry.get("metrics", {}))
+    return prev
+
+
+def append_entry(history_path: str, metrics: dict, source: str) -> None:
+    entry = {"ts": time.strftime("%Y-%m-%dT%H:%M:%S", time.gmtime()),
+             "source": source, "metrics": metrics}
+    with open(history_path, "a") as f:
+        f.write(json.dumps(entry) + "\n")
+
+
+def gate(metrics: dict, prev: dict, bar: float):
+    """(regressions, improvements, unguarded_count) vs previous values."""
+    regressions, improvements, unguarded = [], [], 0
+    for key in sorted(metrics):
+        new = metrics[key]
+        direction = guard_direction(key)
+        if direction is None:
+            unguarded += 1
+            continue
+        old = prev.get(key)
+        if old is None or old <= 0 or new <= 0:
+            continue
+        ratio = new / old
+        if direction == "down" and ratio > 1.0 + bar:
+            regressions.append((key, old, new, ratio))
+        elif direction == "up" and ratio < 1.0 / (1.0 + bar):
+            regressions.append((key, old, new, ratio))
+        elif (direction == "down" and ratio < 1.0 / (1.0 + bar)) or \
+                (direction == "up" and ratio > 1.0 + bar):
+            improvements.append((key, old, new, ratio))
+    return regressions, improvements, unguarded
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("reports", nargs="+", help="BENCH_*.json report files")
+    ap.add_argument("--history", default="BENCH_history.jsonl")
+    ap.add_argument("--bar", type=float, default=10.0,
+                    help="allowed degradation [%%] on guarded metrics")
+    ap.add_argument("--source", default="ci")
+    args = ap.parse_args()
+
+    metrics = load_metrics(args.reports)
+    if not metrics:
+        print("bench_gate: no numeric metrics found", file=sys.stderr)
+        return 1
+    prev = previous_values(args.history)
+    regressions, improvements, unguarded = gate(metrics, prev,
+                                                args.bar / 100.0)
+    append_entry(args.history, metrics, args.source)
+
+    guarded = sum(1 for k in metrics if guard_direction(k))
+    compared = sum(1 for k in metrics if guard_direction(k) and k in prev)
+    print(f"bench_gate: {len(metrics)} metrics ({guarded} guarded, "
+          f"{compared} compared vs history, {unguarded} record-only) "
+          f"-> {args.history}")
+    for key, old, new, ratio in improvements:
+        print(f"  improved  {key}: {old:.6g} -> {new:.6g} ({ratio:.2f}x)")
+    if not compared:
+        print("bench_gate: no previous entry; recorded baseline")
+        return 0
+    if regressions:
+        for key, old, new, ratio in regressions:
+            print(f"  REGRESSED {key}: {old:.6g} -> {new:.6g} "
+                  f"({ratio:.2f}x, bar {args.bar:.0f}%)", file=sys.stderr)
+        return 1
+    print(f"bench_gate: OK (no guarded metric degraded >{args.bar:.0f}%)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

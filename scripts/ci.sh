@@ -90,14 +90,37 @@ slo = obj["otherData"]["slo"]
 assert math.isfinite(slo["ttft_p99_s"]) and slo["ttft_p99_s"] > 0
 EOF
 
+# energy-observability smoke: streamed per-bank meter over a seeded
+# mixed-tenant sim — the CLI prints (and exits nonzero without) the
+# bit-identical-f64 receipt vs offline gating.evaluate — then the
+# attribution walkthrough, then the exported bank-state timeline
+PYTHONPATH=src timeout 120 python -m repro.launch.obs energy \
+    --workload chat_sysprompt --rate 4 --horizon 4 --slots 4 \
+    --out /tmp/energy_trace.json > /tmp/energy_smoke.out
+grep -q "MATCH (bit-identical f64)" /tmp/energy_smoke.out
+grep -q "bank-state lanes" /tmp/energy_smoke.out
+PYTHONPATH=src timeout 120 python examples/energy_attribution.py \
+    --rate 4 --horizon 4 --out /tmp/energy_timeline.json \
+    > /tmp/energy_example.out
+grep -q "MATCH (bit-identical f64)" /tmp/energy_example.out
+grep -q "conserves energy" /tmp/energy_example.out
+python - <<'EOF'
+import json
+evs = json.load(open("/tmp/energy_trace.json"))["traceEvents"]
+assert any(e.get("ph") == "C" and e["name"] == "bank energy [J]" for e in evs)
+assert any(e.get("ph") == "C" and e["name"] == "active banks" for e in evs)
+assert any(e.get("ph") == "X" and e.get("cat") == "bank" for e in evs)
+EOF
+
 # shared-prefix workload campaign through the traffic CLI (host-only sim;
 # fan-out = concurrent copies of one prefix, the strongest sharing signal)
 PYTHONPATH=src timeout 120 python -m repro.launch.traffic \
     --model dsr1d_qwen_1_5b --workload agentic_fanout --rate 2 --horizon 6 \
     --slots 4 --max-len 512 --banks 1 8 --fast-backend ref --no-mha-ref \
-    > /tmp/prefix_campaign.out
+    --meter 32,8,0.9,conservative > /tmp/prefix_campaign.out
 grep -q "prefix sharing" /tmp/prefix_campaign.out
 grep -q "logical vs physical" /tmp/prefix_campaign.out
+grep -q "bank energy meter" /tmp/prefix_campaign.out
 
 # prefix benchmark: >=2x physical peak-page reduction at sharing factor 8
 # (512-token shared prefix) and decode-throughput parity asserted inside
@@ -160,4 +183,13 @@ grep -q "rolled back" /tmp/spec_campaign.out
 # >=1.5x accepted-tokens/s bar are asserted inside
 PYTHONPATH=src timeout 600 python -m benchmarks.spec_bench \
     /tmp/BENCH_spec.json | tail -1
+
+# benchmark-history regression gate: flatten every BENCH_*.json from this
+# run into BENCH_history.jsonl and fail when any guarded wall-time /
+# throughput metric degrades >10% vs the previous recorded run (the first
+# run just records the baseline)
+python scripts/bench_gate.py --history BENCH_history.jsonl \
+    /tmp/BENCH_stage1.json /tmp/BENCH_stage2.json /tmp/BENCH_serve.json \
+    /tmp/BENCH_prefix.json /tmp/BENCH_quant.json /tmp/BENCH_sla.json \
+    /tmp/BENCH_spec.json
 echo "ci: OK"

@@ -77,6 +77,20 @@ def main() -> None:
               f"peak={case['mems']['kv']['peak_needed']} B")
     print(f"wrote {sout}")
 
+    # energy-observability fixtures: Perfetto bank-state export schema +
+    # exact streamed-meter energy totals over a deterministic sim
+    eout = golden_util.ENERGY_GOLDEN_PATH if len(sys.argv) <= 1 else \
+        os.path.join(os.path.dirname(out), "energy_golden.json")
+    epayload = golden_util.build_energy_golden()
+    with open(eout, "w") as f:
+        json.dump(epayload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    for name, case in epayload.items():
+        print(f"{name}: {case['n_span_events']} bank-state spans "
+              f"{case['state_counts']}, E={case['live_e_j']*1e3:.4g} mJ, "
+              f"transitions={case['n_transitions']}")
+    print(f"wrote {eout}")
+
 
 if __name__ == "__main__":
     main()

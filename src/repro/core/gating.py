@@ -12,6 +12,13 @@ Policies:
   * "conservative" — alpha = 0.9 headroom; additionally skip idle intervals
                      shorter than `min_gate_multiple` x break-even (avoids
                      thrashing and wake-up latency exposure).
+  * "drowsy"       — three-state ON/DROWSY/OFF: idle intervals >= the gate
+                     threshold fully gate as usual, shorter ones drop to a
+                     retention voltage (`drowsy_fraction` of full leakage,
+                     `drowsy_switch_fraction` of a full switch per run) —
+                     the Flautner-style policy `sensitivity.evaluate_drowsy`
+                     models, expressed as a `Policy` so the streaming
+                     `obs.energy.BankEnergyMeter` can run it online.
 
 `evaluate` is the *scalar reference*: one candidate at a time, per-bank
 Python loops. Sweeps, campaigns and CLIs run on the batched engine
@@ -21,7 +28,7 @@ vectorized call.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Dict, Optional
 
 import numpy as np
@@ -36,6 +43,13 @@ class Policy:
     alpha: float
     gate: bool
     min_gate_multiple: float = 1.0      # x break-even time
+    # three-state retention knobs: idle runs *below* the gate threshold leak
+    # at `drowsy_fraction` of full power (1.0 = stay fully ON, the classic
+    # two-state policies) and cost `drowsy_switch_fraction` of a full
+    # power-gate switch per run (0.0 = no transition). The defaults make the
+    # new terms exact no-ops, so pre-existing policies are bit-identical.
+    drowsy_fraction: float = 1.0
+    drowsy_switch_fraction: float = 0.0
 
     @staticmethod
     def none(alpha: float = 1.0) -> "Policy":
@@ -48,6 +62,29 @@ class Policy:
     @staticmethod
     def conservative(alpha: float = 0.9) -> "Policy":
         return Policy("conservative", alpha, gate=True, min_gate_multiple=5.0)
+
+    @staticmethod
+    def drowsy(alpha: float = 0.9, off_multiple: float = 1.0) -> "Policy":
+        from repro.core.sensitivity import (DROWSY_LEAK_FRACTION,
+                                            DROWSY_SWITCH_FRACTION)
+        return Policy("drowsy", alpha, gate=True,
+                      min_gate_multiple=off_multiple,
+                      drowsy_fraction=DROWSY_LEAK_FRACTION,
+                      drowsy_switch_fraction=DROWSY_SWITCH_FRACTION)
+
+    @staticmethod
+    def by_name(name: str, alpha: Optional[float] = None) -> "Policy":
+        """Resolve a CLI policy spelling; `alpha` overrides the default."""
+        table = {"none": Policy.none(), "aggressive": Policy.aggressive(),
+                 "conservative": Policy.conservative(),
+                 "drowsy": Policy.drowsy()}
+        if name not in table:
+            raise ValueError(f"unknown policy {name!r}; "
+                             f"choose from {sorted(table)}")
+        p = table[name]
+        if alpha is not None and alpha != p.alpha:
+            p = replace(p, alpha=alpha)
+        return p
 
 
 @dataclass
@@ -63,6 +100,9 @@ class GatingResult:
     gated_bank_seconds: float
     total_bank_seconds: float
     area_mm2: float
+    # three-state extras (zero for the classic two-state policies)
+    drowsy_bank_seconds: float = 0.0
+    n_drowsy: int = 0
 
     @property
     def e_total(self) -> float:
@@ -92,8 +132,12 @@ def evaluate(durations: np.ndarray, occupancy: np.ndarray, *,
     threshold = policy.min_gate_multiple * ch.break_even_s
 
     # a bank is ON while required AND during idle intervals too short to gate
+    drowsy = (policy.drowsy_fraction != 1.0
+              or policy.drowsy_switch_fraction != 0.0)
     gated_seconds = 0.0
+    drowsy_seconds = 0.0
     n_sw = 0
+    n_drowsy = 0
     on_final = np.ones_like(on)
     for b in range(banks):
         run_d, starts, ends = idle_runs(d, on[:, b])
@@ -102,13 +146,25 @@ def evaluate(durations: np.ndarray, occupancy: np.ndarray, *,
         gated_seconds += float(run_d[ok].sum())
         for s, e in zip(starts[ok], ends[ok]):
             on_final[s:e, b] = False
+        if drowsy:
+            n_drowsy += int((~ok).sum())
+            drowsy_seconds += float(run_d[~ok].sum())
 
     on_seconds = float((on_final * d[:, None]).sum())
     e_leak = ch.leak_w_per_bank * on_seconds
     e_sw = n_sw * ch.e_switch_j
+    if drowsy:
+        # short idle runs drop to retention voltage instead of staying fully
+        # ON: swap their full-leak share for the retention fraction and pay
+        # the (cheap) drowsy transition per run
+        e_leak += ((policy.drowsy_fraction - 1.0) * ch.leak_w_per_bank
+                   * drowsy_seconds)
+        e_sw += n_drowsy * ch.e_switch_j * policy.drowsy_switch_fraction
     return GatingResult(policy.name, policy.alpha, capacity, banks,
                         e_dyn, e_leak, e_sw, n_sw, gated_seconds,
-                        banks * total_time, ch.area_mm2)
+                        banks * total_time, ch.area_mm2,
+                        drowsy_bank_seconds=drowsy_seconds,
+                        n_drowsy=n_drowsy)
 
 
 def bank_timeline(durations: np.ndarray, occupancy: np.ndarray, *,

@@ -8,10 +8,18 @@ ui.perfetto.dev / chrome://tracing load directly — request lifecycle spans,
 per-slot prefill lanes, decode chunks and the KV-occupancy counter track
 all on the batcher's one logical timeline.
 
+The `energy` subcommand streams a `BankEnergyMeter` over the same event
+stream: per-request/per-tenant energy attribution, wake-cause counters and
+the exact Stage-II integral (bit-identical to the offline evaluation), as a
+one-shot report, a `--watch` live dashboard, or a Perfetto export with
+bank-state timeline lanes and energy counter tracks (`--out`).
+
 Usage:
     PYTHONPATH=src python -m repro.launch.obs report --arch dsr1d_qwen_1_5b
     PYTHONPATH=src python -m repro.launch.obs export --arch dsr1d_qwen_1_5b \
         --requests 4 --new-tokens 8 --slots 2 --out obs_trace.json
+    PYTHONPATH=src python -m repro.launch.obs energy --meter 32,8,0.9,conservative \
+        --rate 6 --horizon 8 --watch
 """
 from __future__ import annotations
 
@@ -30,7 +38,7 @@ from repro.traffic.generators import (LengthModel, generate_workload,
                                       materialize_tokens)
 
 
-def run_serve(args) -> tuple:
+def run_serve(args, meter=None) -> tuple:
     """One telemetry-enabled paged serve; returns (tel, batcher, done)."""
     cfg = reduced(resolve_arch(args.arch), layers=args.layers)
     model = build_model(cfg, compute_dtype=jnp.float32, remat="none")
@@ -48,12 +56,91 @@ def run_serve(args) -> tuple:
     cb = PagedContinuousBatcher(
         model, params, num_slots=args.slots, page_size=args.page_size,
         num_pages=args.num_pages, chunk_steps=args.chunk_steps,
-        attn_backend="ref", prefix_cache=args.prefix, telemetry=tel)
+        attn_backend="ref", prefix_cache=args.prefix, telemetry=tel,
+        meter=meter)
     for s, toks in zip(specs, tokens):
+        tenant = None if s.prefix_id is None else f"tenant{s.prefix_id}"
         cb.submit(Request(rid=s.rid, tokens=np.asarray(toks),
-                          max_new_tokens=max(s.output_len, 2)))
+                          max_new_tokens=max(s.output_len, 2),
+                          tenant=tenant))
     done = cb.run()
     return tel, cb, done
+
+
+def run_energy(args) -> None:
+    """The `energy` subcommand: stream a meter over a serve or a model-free
+    sim, then report attribution (and optionally watch/export)."""
+    from repro.core.gating import evaluate
+    from repro.obs.energy import BankEnergyMeter
+
+    meter = BankEnergyMeter.from_spec(args.meter)
+    if args.watch:
+        interval = max(float(args.interval), 1e-6)
+        orig_record = meter.record
+        state = {"next": interval}
+
+        def record(t, *a, **kw):
+            orig_record(t, *a, **kw)
+            if t >= state["next"]:
+                print(meter.format_dashboard(float(t)))
+                state["next"] = float(t) + interval
+        meter.record = record
+
+    if args.serve:
+        tel, cb, done = run_serve(args, meter=meter)
+        summary = cb.slo_summary()
+        end = cb.occupancy_bundle().total_time
+        source_trace = cb.ledger.trace
+        n_served = len(done)
+    else:
+        from repro.traffic.generators import generate, generate_workload
+        from repro.traffic.occupancy import (simulate_prefix_traffic,
+                                             simulate_traffic)
+        cfg = resolve_arch(args.arch)
+        lengths = LengthModel(max_len=args.max_len)
+        if args.workload == "plain":
+            reqs = generate("poisson", args.rate, args.horizon,
+                            seed=args.seed, lengths=lengths)
+            sim = simulate_traffic(cfg, reqs, num_slots=args.slots,
+                                   max_len=args.max_len, meter=meter)
+        else:
+            reqs = generate_workload(args.workload, args.rate, args.horizon,
+                                     seed=args.seed, lengths=lengths,
+                                     prefix_len=args.prefix_len,
+                                     sharing=args.sharing)
+            sim = simulate_prefix_traffic(cfg, reqs, num_slots=args.slots,
+                                          max_len=args.max_len,
+                                          seed=args.seed, meter=meter)
+        summary = None
+        end = sim.total_time
+        source_trace = sim.trace
+        n_served = len(reqs)
+
+    rep = meter.report(end)
+    # exactness receipt: the streamed integral against the offline scalar
+    # reference on the source trace (not the meter's own mirror)
+    dur, occ = source_trace.occupancy_series(end, use="needed")
+    ref = evaluate(dur, occ, capacity=meter.capacity, banks=meter.banks,
+                   policy=meter.policy, n_reads=0, n_writes=0,
+                   char=meter.char)
+    exact = (rep.result.e_leak == ref.e_leak
+             and rep.result.e_sw == ref.e_sw
+             and rep.result.n_transitions == ref.n_transitions)
+    print(f"metered {n_served} requests over {end:.3f}s "
+          f"({meter.n_events} ledger events)")
+    print()
+    print(rep.format())
+    print(f"  exact vs offline gating.evaluate: "
+          f"{'MATCH (bit-identical f64)' if exact else 'MISMATCH'}")
+    if not exact:
+        raise SystemExit(1)
+    if summary is not None:
+        print()
+        print(summary.format())
+    if args.out:
+        export_chrome_trace(args.out, meter=meter, end_time=end)
+        print(f"\nwrote {args.out} ({meter.banks} bank-state lanes + energy "
+              f"counters) — load it at ui.perfetto.dev")
 
 
 def main() -> None:
@@ -78,7 +165,47 @@ def main() -> None:
         p.add_argument("--seed", type=int, default=0)
         if name == "export":
             p.add_argument("--out", default="obs_trace.json")
+    pe = sub.add_parser(
+        "energy", help="streaming bank-energy meter: report, live "
+                       "dashboard (--watch) or Perfetto export (--out)")
+    pe.add_argument("--arch", default="dsr1d_qwen_1_5b")
+    pe.add_argument("--meter", default="32,8,0.9,conservative",
+                    metavar="C,B[,alpha[,policy]]",
+                    help="meter candidate: capacity [MiB], banks, alpha, "
+                         "policy")
+    pe.add_argument("--serve", action="store_true",
+                    help="drive the real paged serve (reduced model) "
+                         "instead of the model-free traffic simulator")
+    pe.add_argument("--workload", default="chat_sysprompt",
+                    choices=["plain", "chat_sysprompt", "fewshot",
+                             "agentic_fanout"])
+    pe.add_argument("--rate", type=float, default=6.0)
+    pe.add_argument("--horizon", type=float, default=8.0)
+    pe.add_argument("--slots", type=int, default=4)
+    pe.add_argument("--max-len", type=int, default=512)
+    pe.add_argument("--sharing", type=int, default=4)
+    pe.add_argument("--prefix-len", type=int, default=128)
+    pe.add_argument("--seed", type=int, default=0)
+    pe.add_argument("--watch", action="store_true",
+                    help="print the live dashboard as the stream advances")
+    pe.add_argument("--interval", type=float, default=1.0,
+                    help="--watch refresh interval [sim s]")
+    pe.add_argument("--out", default=None,
+                    help="also export a Perfetto trace with bank-state "
+                         "lanes + energy counter tracks")
+    # serve-path knobs (reduced model)
+    pe.add_argument("--layers", type=int, default=2)
+    pe.add_argument("--requests", type=int, default=8)
+    pe.add_argument("--new-tokens", type=int, default=8)
+    pe.add_argument("--page-size", type=int, default=8)
+    pe.add_argument("--num-pages", type=int, default=64)
+    pe.add_argument("--chunk-steps", type=int, default=4)
+    pe.add_argument("--prefix", action="store_true")
     args = ap.parse_args()
+
+    if args.cmd == "energy":
+        run_energy(args)
+        return
 
     tel, cb, done = run_serve(args)
     summary = cb.slo_summary()

@@ -61,6 +61,23 @@ def build_report_dict(report: CampaignReport) -> dict:
                 "forecast_pre_wakes": c.forecast.pre_wakes,
                 "forecast_early_wake_s": c.forecast.early_wake_s,
             })
+        if r.energy is not None:
+            e = r.energy
+            row["energy"] = {
+                "meter_capacity_mib": e.result.capacity / MIB,
+                "meter_banks": e.result.banks,
+                "meter_alpha": e.result.alpha,
+                "meter_policy": e.result.policy,
+                "e_total_j": e.result.e_total,
+                "e_leak_j": e.result.e_leak,
+                "e_sw_j": e.result.e_sw,
+                "live_e_j": e.live_e_j,
+                "floor_j": e.floor_j,
+                "stall_s": e.stall_s,
+                "wakes": dict(e.wakes),
+                "j_per_request_p50_p90_p99": list(e.j_per_request),
+                "tenant_j": {str(k): v for k, v in e.tenant_j.items()},
+            }
         rows.append(row)
     return {"rows": rows}
 
@@ -146,6 +163,11 @@ def main() -> None:
                     help="traffic-simulator fast path: pss/auto fast-forward "
                          "uneventful lockstep stretches (bit-identical); "
                          "exact steps every iteration")
+    ap.add_argument("--meter", default=None, metavar="C,B[,alpha[,policy]]",
+                    help="stream a BankEnergyMeter over every scenario's "
+                         "trace (C in MiB); adds per-request/per-tenant "
+                         "energy attribution and wake-cause counters to "
+                         "the report and --json rows")
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
 
@@ -183,7 +205,7 @@ def main() -> None:
             workload=args.workload, prefix_len=args.prefix_len,
             sharing=args.sharing, page_size=args.page_size, kv_dtype=dt,
             speculate_k=args.speculate, spec_acceptance=args.spec_acceptance,
-            draft_kv_frac=args.draft_kv_frac)
+            draft_kv_frac=args.draft_kv_frac, meter_spec=args.meter)
     report = reports[kv_dtypes[0]]
 
     if args.workload != "plain":

@@ -1,8 +1,12 @@
-"""Unified telemetry: metrics registry, spans, SLOs, Perfetto export."""
-from repro.obs.perfetto import (chrome_trace_events, counter_integral,
+"""Unified telemetry: metrics registry, spans, SLOs, energy meter,
+Perfetto export."""
+from repro.obs.energy import BankEnergyMeter, MeterReport
+from repro.obs.perfetto import (bank_state_events, chrome_trace_events,
+                                counter_integral, energy_counter_total,
                                 export_chrome_trace)
 from repro.obs.slo import (RequestTimeline, SLOSummary, SLOTracker,
-                           percentile_summary, summarize_histograms)
+                           attach_energy_percentiles, percentile_summary,
+                           summarize_histograms)
 from repro.obs.telemetry import (DEFAULT_BUCKETS, LATENCY_BUCKETS, Counter,
                                  Gauge, Histogram, Span, Telemetry,
                                  default_registry, log_bucket_edges,
@@ -15,4 +19,6 @@ __all__ = [
     "RequestTimeline", "SLOSummary", "SLOTracker",
     "percentile_summary", "summarize_histograms",
     "chrome_trace_events", "counter_integral", "export_chrome_trace",
+    "BankEnergyMeter", "MeterReport", "attach_energy_percentiles",
+    "bank_state_events", "energy_counter_total",
 ]

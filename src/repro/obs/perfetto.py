@@ -27,6 +27,10 @@ import numpy as np
 
 SERVING_PID = 1
 REQUEST_PID = 2
+BANKS_PID = 3
+
+ENERGY_COUNTER = "bank energy [J]"
+ACTIVE_COUNTER = "active banks"
 _TID_ENGINE = 1
 _TID_CHUNKS = 2
 _TID_SLOT0 = 10
@@ -42,10 +46,13 @@ def _meta(pid: int, name: str, tid: Optional[int] = None) -> Dict:
 
 
 def chrome_trace_events(telemetry=None, traces: Iterable = (),
-                        *, end_time: Optional[float] = None) -> List[Dict]:
+                        *, end_time: Optional[float] = None,
+                        meter=None) -> List[Dict]:
     """Build the trace-event list from a `Telemetry` registry's spans and
     any number of `OccupancyTrace`s (anything with ``mem_name`` and
-    ``as_arrays()``). Times are seconds in, microseconds out."""
+    ``as_arrays()``). Times are seconds in, microseconds out. With a
+    `BankEnergyMeter`, its bank-state timeline and energy counters ride
+    along as pid-3 tracks (see `bank_state_events`)."""
     events: List[Dict] = [_meta(SERVING_PID, "serving")]
     used_tids: Dict[int, str] = {}
     req_tids: Dict[object, int] = {}
@@ -100,9 +107,53 @@ def chrome_trace_events(telemetry=None, traces: Iterable = (),
                            "args": {"needed": int(n[-1]),
                                     "obsolete": int(o[-1])}})
 
+    if meter is not None:
+        events.extend(bank_state_events(meter, end_time=end_time))
+
     # stable render order: metadata first, then strictly by timestamp
     events.sort(key=lambda e: (e["ph"] != "M", e.get("ts", 0.0)))
     return events
+
+
+def bank_state_events(meter, *, end_time: Optional[float] = None
+                      ) -> List[Dict]:
+    """Pid-3 tracks for a `BankEnergyMeter`: one ``\"X\"`` span lane per
+    bank (state names active|idle|drowsy|gated), an active-bank-count
+    counter (left segment edges, so `counter_integral` over it equals the
+    timeline's bank-seconds) and a cumulative energy counter whose final
+    sample is the meter's exact live total (f64 round-trips through JSON
+    losslessly — `energy_counter_total` recovers it bit-identically)."""
+    evs: List[Dict] = [_meta(BANKS_PID, "sram banks")]
+    for b in range(meter.banks):
+        evs.append(_meta(BANKS_PID, f"bank {b}", b + 1))
+    for b, state, t0, t1 in meter.bank_intervals(end_time):
+        evs.append({"ph": "X", "name": state, "cat": "bank",
+                    "pid": BANKS_PID, "tid": int(b) + 1,
+                    "ts": float(t0) * 1e6,
+                    "dur": max(float(t1) - float(t0), 0.0) * 1e6,
+                    "args": {"bank": int(b), "state": state}})
+    t0s, durs, act = meter.activity_series(end_time)
+    for t, a in zip(t0s, act):
+        evs.append({"ph": "C", "name": ACTIVE_COUNTER, "pid": BANKS_PID,
+                    "ts": float(t) * 1e6, "args": {"active": int(a)}})
+    te, cum = meter.energy_series(end_time)
+    for t, j in zip(te, cum):
+        evs.append({"ph": "C", "name": ENERGY_COUNTER, "pid": BANKS_PID,
+                    "ts": float(t) * 1e6, "args": {"cum_j": float(j)}})
+    return evs
+
+
+def energy_counter_total(events: List[Dict],
+                         name: str = ENERGY_COUNTER,
+                         series: str = "cum_j") -> float:
+    """Final value of a cumulative counter track — the energy analogue of
+    `counter_integral`: proves the exported track carries the meter's
+    exact (bit-identical f64) live energy total."""
+    pts = [(e["ts"], i, e["args"][series]) for i, e in enumerate(events)
+           if e.get("ph") == "C" and e.get("name") == name]
+    if not pts:
+        return 0.0
+    return float(max(pts)[2])
 
 
 def counter_integral(events: List[Dict], name: str, end_time_us: float,
@@ -121,7 +172,7 @@ def counter_integral(events: List[Dict], name: str, end_time_us: float,
 
 
 def export_chrome_trace(path: str, telemetry=None, traces: Iterable = (),
-                        *, end_time: Optional[float] = None,
+                        *, end_time: Optional[float] = None, meter=None,
                         other_data: Optional[Dict] = None) -> Dict:
     """Write a Perfetto-loadable trace file; returns the written object.
 
@@ -129,7 +180,8 @@ def export_chrome_trace(path: str, telemetry=None, traces: Iterable = (),
     by the viewer) — the obs CLI stores the SLO summary there so smoke
     checks can assert on it without re-running the serve."""
     obj = {"traceEvents": chrome_trace_events(telemetry, traces,
-                                              end_time=end_time),
+                                              end_time=end_time,
+                                              meter=meter),
            "displayTimeUnit": "ms"}
     if other_data:
         obj["otherData"] = other_data

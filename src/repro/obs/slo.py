@@ -36,6 +36,9 @@ class RequestTimeline:
     # times this request was preempted and requeued; the admit/token stamps
     # above always describe the final (completed) admission
     preemptions: int = 0
+    # joules attributed to this request by a BankEnergyMeter (NaN = no
+    # meter attached to the engine)
+    energy_j: float = math.nan
 
     def reset_admission(self) -> None:
         """Roll the timeline back to the queued state after a preemption:
@@ -79,6 +82,13 @@ class SLOSummary:
     # sharing): filled by engines that own a Stage-I ledger, zero otherwise
     kv_peak_bytes: float = 0.0
     kv_mean_bytes: float = 0.0
+    # per-request energy attribution (BankEnergyMeter), zero without a meter
+    energy_p50_j: float = 0.0
+    energy_p90_j: float = 0.0
+    energy_p99_j: float = 0.0
+    energy_per_tok_p50_j: float = 0.0
+    energy_per_tok_p90_j: float = 0.0
+    energy_per_tok_p99_j: float = 0.0
 
     def format(self) -> str:
         head = f"{'metric':<22} {'p50':>10} {'p90':>10} {'p99':>10}"
@@ -97,6 +107,16 @@ class SLOSummary:
                 f"{'kv occupancy [MiB]':<22} peak "
                 f"{self.kv_peak_bytes / 2**20:.3f}  mean "
                 f"{self.kv_mean_bytes / 2**20:.3f}")
+        if self.energy_p99_j:
+            lines.append(f"{'energy [mJ/request]':<22} "
+                         f"{self.energy_p50_j * 1e3:>10.4g} "
+                         f"{self.energy_p90_j * 1e3:>10.4g} "
+                         f"{self.energy_p99_j * 1e3:>10.4g}")
+        if self.energy_per_tok_p99_j:
+            lines.append(f"{'energy [mJ/token]':<22} "
+                         f"{self.energy_per_tok_p50_j * 1e3:>10.4g} "
+                         f"{self.energy_per_tok_p90_j * 1e3:>10.4g} "
+                         f"{self.energy_per_tok_p99_j * 1e3:>10.4g}")
         return "\n".join(lines)
 
 
@@ -159,3 +179,22 @@ def percentile_summary(ttft_s: Optional[List[float]] = None,
         out.e2e_p90_s = pct(e2e_s, 90)
         out.e2e_p99_s = pct(e2e_s, 99)
     return out
+
+
+def attach_energy_percentiles(summary: SLOSummary, request_j,
+                              tokens_by_rid=None) -> SLOSummary:
+    """Fold a BankEnergyMeter's per-request charges into an SLO summary:
+    J/request percentiles, and J/token when token counts are known."""
+    js = [j for j in request_j.values()]
+    if not js:
+        return summary
+    summary.energy_p50_j = float(np.percentile(js, 50))
+    summary.energy_p90_j = float(np.percentile(js, 90))
+    summary.energy_p99_j = float(np.percentile(js, 99))
+    if tokens_by_rid:
+        per_tok = [j / max(int(tokens_by_rid.get(rid, 1)), 1)
+                   for rid, j in request_j.items()]
+        summary.energy_per_tok_p50_j = float(np.percentile(per_tok, 50))
+        summary.energy_per_tok_p90_j = float(np.percentile(per_tok, 90))
+        summary.energy_per_tok_p99_j = float(np.percentile(per_tok, 99))
+    return summary

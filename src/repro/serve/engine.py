@@ -82,7 +82,7 @@ def _generate_loop(model, temperature: float, collect_logits: bool,
 
 class BatchedServer:
     def __init__(self, model, params, cfg: ServeConfig,
-                 collect_logits: bool = False, telemetry=None):
+                 collect_logits: bool = False, telemetry=None, meter=None):
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -93,6 +93,12 @@ class BatchedServer:
         self.tel = telemetry if telemetry is not None else noop_registry()
         if telemetry is not None:
             telemetry.bind_clock(time.perf_counter, owner=self)
+        # optional BankEnergyMeter: this engine has no page ledger, so each
+        # generate() meters as a wall-clock square wave — the batch's dense
+        # KV footprint admitted at prefill end, grown over decode, freed at
+        # the end of the call
+        self.meter = meter
+        self._gen_seq = 0
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, cache_len=cfg.max_len))
         # static `steps`, donated cache: one compile per generation length,
@@ -120,6 +126,18 @@ class BatchedServer:
             logits.block_until_ready()
         stats.prefill_s = time.perf_counter() - t0
 
+        rid = None
+        kv0 = 0
+        mcfg = getattr(self.model, "cfg", None)
+        if self.meter is not None and mcfg is not None:
+            from repro.serve.scheduler import kv_bytes_at
+            B, S = batch["tokens"].shape
+            rid = f"gen{self._gen_seq}"
+            self._gen_seq += 1
+            kv0 = B * kv_bytes_at(mcfg, int(S), 2)
+            self.meter.record(time.perf_counter(), kv0, 0, rid=rid,
+                              cause="admission")
+
         rng, k = jax.random.split(rng)
         tok = _sample(self.cfg.temperature, logits, k)
         first = np.asarray(tok)
@@ -142,6 +160,15 @@ class BatchedServer:
         stats.decode_s = time.perf_counter() - t0
         stats.tokens_generated = n_new * first.shape[0]
         stats.tbt_s = stats.decode_s / (n_new - 1) if n_new > 1 else 0.0
+        if rid is not None:
+            from repro.serve.scheduler import kv_bytes_at
+            B, S = batch["tokens"].shape
+            t_end = time.perf_counter()
+            grown = B * kv_bytes_at(mcfg, int(S) + n_new, 2) - kv0
+            if grown:
+                self.meter.record(t_end, grown, 0, rid=rid,
+                                  cause="decode_growth")
+            self.meter.record(t_end, -(kv0 + grown), 0, rid=rid)
         self.tel.counter("serve.engine.generate_calls").inc()
         self.tel.counter("serve.engine.tokens_generated").inc(
             stats.tokens_generated)

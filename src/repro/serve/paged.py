@@ -33,7 +33,8 @@ import numpy as np
 from repro.kernels.quant import kv_dtype_spec
 from repro.models.transformer import (init_paged_cache, prefix_tail_rows,
                                       self_spec_draft, write_prefill_to_pages)
-from repro.obs.slo import RequestTimeline, SLOSummary, SLOTracker
+from repro.obs.slo import (RequestTimeline, SLOSummary, SLOTracker,
+                           attach_energy_percentiles)
 from repro.obs.telemetry import default_registry, noop_registry
 from repro.serve.scheduler import AdmissionQueue, Request, SchedulerStats
 from repro.sim.trace import AccessStats, OccupancyTrace, TraceBundle
@@ -120,6 +121,23 @@ class PagedKVLedger:
         # the draft model's (smaller) per-page byte width.
         self.draft_pages: Dict[int, List[int]] = {}
         self.draft_page_bytes: Optional[int] = None
+        # optional streaming energy meter (obs.energy.BankEnergyMeter):
+        # every trace delta is mirrored to it, tagged with the slot's
+        # request/tenant and the ledger verb that caused it
+        self.meter = None
+        self.slot_meta: Dict[int, tuple] = {}
+
+    def set_slot_meta(self, slot: int, rid, tenant=None) -> None:
+        """Tag a slot so mirrored meter events attribute to its request."""
+        self.slot_meta[slot] = (rid, tenant)
+
+    def _mark(self, t: float, delta: int, slot: int,
+              cause: Optional[str]) -> None:
+        self.trace.event(t, delta, 0)
+        if self.meter is not None:
+            rid, tenant = self.slot_meta.get(slot, (None, None))
+            self.meter.record(t, delta, 0, rid=rid, tenant=tenant,
+                              cause=cause)
 
     def occupancy_bytes(self) -> int:
         nd = sum(len(p) for p in self.draft_pages.values())
@@ -136,30 +154,32 @@ class PagedKVLedger:
         pages = self.allocator.alloc(n_pages)
         self.slot_pages[slot] = list(pages)
         if n_pages:
-            self.trace.event(t, n_pages * self.page_bytes, 0)
+            self._mark(t, n_pages * self.page_bytes, slot, "admission")
         return pages
 
-    def grow(self, slot: int, total_pages: int, t: float) -> List[int]:
+    def grow(self, slot: int, total_pages: int, t: float,
+             cause: str = "decode_growth") -> List[int]:
         have = self.slot_pages[slot]
         extra = total_pages - len(have)
         if extra <= 0:
             return []
         pages = self.allocator.alloc(extra)
         have.extend(pages)
-        self.trace.event(t, extra * self.page_bytes, 0)
+        self._mark(t, extra * self.page_bytes, slot, cause)
         return pages
 
     def retire(self, slot: int, t: float) -> int:
         pages = self.slot_pages.pop(slot)
         self.allocator.free(pages)
         if pages:
-            self.trace.event(t, -len(pages) * self.page_bytes, 0)
+            self._mark(t, -len(pages) * self.page_bytes, slot, None)
         dpages = self.draft_pages.pop(slot, [])
         if dpages:
             self.allocator.free(dpages)
             db = (self.draft_page_bytes if self.draft_page_bytes is not None
                   else self.page_bytes)
-            self.trace.event(t, -len(dpages) * db, 0)
+            self._mark(t, -len(dpages) * db, slot, None)
+        self.slot_meta.pop(slot, None)
         return len(pages) + len(dpages)
 
     # ------------------------------------------------- speculative draft lane
@@ -176,7 +196,7 @@ class PagedKVLedger:
         db = (self.draft_page_bytes if self.draft_page_bytes is not None
               else self.page_bytes)
         if n_pages:
-            self.trace.event(t, n_pages * db, 0)
+            self._mark(t, n_pages * db, slot, "admission")
         return pages
 
     def grow_draft(self, slot: int, total_pages: int, t: float) -> List[int]:
@@ -188,7 +208,7 @@ class PagedKVLedger:
         have.extend(pages)
         db = (self.draft_page_bytes if self.draft_page_bytes is not None
               else self.page_bytes)
-        self.trace.event(t, extra * db, 0)
+        self._mark(t, extra * db, slot, "decode_growth")
         return pages
 
     def truncate_rows(self, slot: int, n_rows: int, t: float
@@ -206,7 +226,8 @@ class PagedKVLedger:
             freed_t = have[keep:]
             del have[keep:]
             self.allocator.free(freed_t)
-            self.trace.event(t, -len(freed_t) * self.page_bytes, 0)
+            self._mark(t, -len(freed_t) * self.page_bytes, slot,
+                       "spec_rollback")
         freed_d: List[int] = []
         dhave = self.draft_pages.get(slot)
         if dhave is not None and keep < len(dhave):
@@ -215,7 +236,7 @@ class PagedKVLedger:
             self.allocator.free(freed_d)
             db = (self.draft_page_bytes if self.draft_page_bytes is not None
                   else self.page_bytes)
-            self.trace.event(t, -len(freed_d) * db, 0)
+            self._mark(t, -len(freed_d) * db, slot, "spec_rollback")
         return freed_t, freed_d
 
 
@@ -439,7 +460,7 @@ class PagedContinuousBatcher:
                  prefill_chunk_tokens: Optional[int] = None,
                  on_long_prompt: str = "reject",
                  speculate_k: Optional[int] = None, draft_model=None,
-                 draft_params=None, telemetry=None):
+                 draft_params=None, telemetry=None, meter=None):
         if not hasattr(model, "decode_step_paged"):
             raise TypeError("model lacks a paged decode path")
         if on_long_prompt not in ("reject", "truncate"):
@@ -538,11 +559,17 @@ class PagedContinuousBatcher:
         else:
             self.ledger = PagedKVLedger(num_pages, self.page_bytes,
                                         page_size)
+        # optional streaming BankEnergyMeter: rides the ledger so every page
+        # event is mirrored on the same sim clock, tagged with the causing
+        # request — the batcher only supplies slot->request metadata
+        self.meter = meter
+        self.ledger.meter = meter
         self.access = AccessStats()
         self.stats = PagedStats()
 
         self.queue = AdmissionQueue()
         self.slots: List[Optional[Request]] = [None] * num_slots
+        self._tokens_by_rid: Dict[int, int] = {}   # retired, for J/token
         self._reserved = [0] * num_slots        # worst-case pages not yet held
         self._ctx = np.zeros(num_slots, np.int64)
         self._next_tok = np.zeros(num_slots, np.int32)
@@ -701,6 +728,9 @@ class PagedContinuousBatcher:
         st.ttft_p50_s, st.ttft_p99_s = s.ttft_p50_s, s.ttft_p99_s
         st.tbt_p50_s, st.tbt_p99_s = s.tbt_p50_s, s.tbt_p99_s
         st.e2e_p50_s, st.e2e_p99_s = s.e2e_p50_s, s.e2e_p99_s
+        if self.meter is not None:
+            attach_energy_percentiles(s, self.meter.request_energy_j(),
+                                      self._tokens_by_rid)
         return s
 
     def occupancy_bundle(self) -> TraceBundle:
@@ -763,7 +793,13 @@ class PagedContinuousBatcher:
         self._c_retired.inc()
         self._c_freed.inc(n)
         self._set_page_gauges()
+        if self.meter is not None:
+            self._tokens_by_rid[req.rid] = len(req.output)
         tl = req.timeline
+        if tl is not None and self.meter is not None:
+            # final at retire: the request holds no pages past this event,
+            # so no later charge can land on it
+            tl.energy_j = self.meter.request_energy_live(req.rid)
         if tl is not None and self._slo is not None:
             tl.finish_t = t
             self._slo.observe(tl)
@@ -867,6 +903,8 @@ class PagedContinuousBatcher:
                                           npg * self.page_size)
             tok = int(jnp.argmax(logits[0, -1]))
             self._sim_t += prompt_len * self.prefill_tok_s
+            if self.meter is not None:
+                self.ledger.set_slot_meta(i, req.rid, req.tenant)
             pages = self.ledger.admit(i, npg, self._sim_t)
             self._reserved[i] = worst - npg
             self.stats.pages_allocated += npg
@@ -914,6 +952,8 @@ class PagedContinuousBatcher:
                 logits, dense = self._prefill(self.params, {"tokens": sl},
                                               new_n * ps)
                 self._sim_t += take * self.prefill_tok_s
+                if self.meter is not None:
+                    self.ledger.set_slot_meta(i, req.rid, req.tenant)
                 pages = self.ledger.admit(i, new_n, self._sim_t)
                 self._reserved[i] = worst - new_n
                 self._cache = self._write(self._cache, dense, i,
@@ -928,7 +968,7 @@ class PagedContinuousBatcher:
                 logits, suffix = self._prefill_shared(self.params, sl, prefix)
                 self._sim_t += take * self.prefill_tok_s
                 fresh = self.ledger.grow(i, pages_for(pos + take, ps),
-                                         self._sim_t)
+                                         self._sim_t, cause="admission")
                 self._reserved[i] -= len(fresh)
                 new_n = len(fresh)
                 self._cache = self._write_shared(
@@ -1093,6 +1133,8 @@ class PagedContinuousBatcher:
                                                       prefix)
                 self._sim_t += take * self.prefill_tok_s  # suffix only
                 new_n = pages_for(m + take, ps) - n_full
+                if self.meter is not None:
+                    self.ledger.set_slot_meta(i, req.rid, req.tenant)
                 fresh = self.ledger.admit(i, new_n, self._sim_t,
                                           shared=match.pages)
                 self._reserved[i] = demand(match) - new_n
@@ -1111,7 +1153,7 @@ class PagedContinuousBatcher:
                                                       prefix)
                 self._sim_t += take * self.prefill_tok_s
                 fresh = self.ledger.grow(i, pages_for(pos + take, ps),
-                                         self._sim_t)
+                                         self._sim_t, cause="admission")
                 self._reserved[i] -= len(fresh)
                 new_n = len(fresh)
                 self._cache = self._write_shared(

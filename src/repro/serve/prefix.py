@@ -347,6 +347,18 @@ class SharedKVLedger:
         self.draft_pages: Dict[int, List[int]] = {}
         self.draft_page_bytes: Optional[int] = None
         self._last_draft = 0
+        # optional streaming energy meter (obs.energy.BankEnergyMeter):
+        # sync() mirrors every physical delta to it, tagged with the
+        # mutating slot's request/tenant; the attribution weight is the
+        # slot's *logical* holdings change (shared pages sustain banks for
+        # every referencing request, so each holds its full logical share)
+        self.meter = None
+        self.slot_meta: Dict[int, tuple] = {}
+        self._meter_w: Dict[int, int] = {}
+
+    def set_slot_meta(self, slot: int, rid, tenant=None) -> None:
+        """Tag a slot so mirrored meter events attribute to its request."""
+        self.slot_meta[slot] = (rid, tenant)
 
     # ------------------------------------------------------------ accounting
     def occupancy_bytes(self) -> int:
@@ -371,12 +383,14 @@ class SharedKVLedger:
         obsolete = self.allocator.n_allocated - needed - ndraft
         return needed, obsolete, logical
 
-    def sync(self, t: float) -> None:
+    def sync(self, t: float, slot: Optional[int] = None,
+             cause: Optional[str] = None) -> None:
         """Emit the delta between the live page counts and the last synced
         state on both traces. Call after any out-of-band index mutation.
         Draft-lane pages count as `needed` (they back live slots) at the
         draft lane's own page bytes; with the lane unused the accounting is
-        bit-identical to the pre-speculation ledger."""
+        bit-identical to the pre-speculation ledger. `slot`/`cause` tag the
+        mutation for the (optional) energy meter mirror."""
         needed, obsolete, logical = self._counts()
         ndraft = sum(len(p) for p in self.draft_pages.values())
         pn, po, pl = self._last
@@ -384,14 +398,28 @@ class SharedKVLedger:
         pb = self.page_bytes
         db = (self.draft_page_bytes if self.draft_page_bytes is not None
               else pb)
-        self.trace.event(t, (needed - pn) * pb + (ndraft - pd) * db,
-                         (obsolete - po) * pb)
+        dn = (needed - pn) * pb + (ndraft - pd) * db
+        do = (obsolete - po) * pb
+        self.trace.event(t, dn, do)
         self.logical.event(t, (logical - pl) * pb + (ndraft - pd) * db, 0)
         self._last = (needed, obsolete, logical)
         self._last_draft = ndraft
         self._g_physical.set(needed)
         self._g_cached.set(obsolete)
         self._g_logical.set(logical)
+        if self.meter is not None:
+            wd = 0
+            if slot is not None:
+                w = (len(self.slot_pages.get(slot, ())) * pb
+                     + len(self.draft_pages.get(slot, ())) * db)
+                wd = w - self._meter_w.pop(slot, 0)
+                if w:
+                    self._meter_w[slot] = w
+            if dn or do or wd:
+                rid, tenant = ((None, None) if slot is None
+                               else self.slot_meta.get(slot, (None, None)))
+                self.meter.record(t, dn, do, rid=rid, tenant=tenant,
+                                  cause=cause, weight_delta=wd)
 
     # ------------------------------------------------------------------ verbs
     def admit(self, slot: int, n_pages: int, t: float,
@@ -407,17 +435,18 @@ class SharedKVLedger:
             self.allocator.release(shared)
             raise
         self.slot_pages[slot] = shared + fresh
-        self.sync(t)
+        self.sync(t, slot, "admission")
         return fresh
 
-    def grow(self, slot: int, total_pages: int, t: float) -> List[int]:
+    def grow(self, slot: int, total_pages: int, t: float,
+             cause: str = "decode_growth") -> List[int]:
         have = self.slot_pages[slot]
         extra = total_pages - len(have)
         if extra <= 0:
             return []
         fresh = self.allocator.alloc(extra)
         have.extend(fresh)
-        self.sync(t)
+        self.sync(t, slot, cause)
         return fresh
 
     def cow(self, slot: int, table_idx: int, t: float) -> int:
@@ -433,7 +462,7 @@ class SharedKVLedger:
         self.slot_pages[slot][table_idx] = new
         self.allocator.release([old])
         self._c_cow.inc()
-        self.sync(t)
+        self.sync(t, slot, "cow")
         return new
 
     def retire(self, slot: int, t: float) -> int:
@@ -444,7 +473,8 @@ class SharedKVLedger:
         pages = self.slot_pages.pop(slot)
         pages = list(pages) + self.draft_pages.pop(slot, [])
         freed = self.allocator.release(pages)
-        self.sync(t)
+        self.sync(t, slot)
+        self.slot_meta.pop(slot, None)
         return len(freed)
 
     # ------------------------------------------------- speculative draft lane
@@ -460,7 +490,7 @@ class SharedKVLedger:
             f"slot {slot} already has a draft lane"
         fresh = self.allocator.alloc(n_pages)
         self.draft_pages[slot] = fresh
-        self.sync(t)
+        self.sync(t, slot, "admission")
         return fresh
 
     def grow_draft(self, slot: int, total_pages: int, t: float) -> List[int]:
@@ -470,7 +500,7 @@ class SharedKVLedger:
             return []
         fresh = self.allocator.alloc(extra)
         have.extend(fresh)
-        self.sync(t)
+        self.sync(t, slot, "decode_growth")
         return fresh
 
     def truncate_rows(self, slot: int, n_rows: int, t: float
@@ -498,7 +528,7 @@ class SharedKVLedger:
             freed_d = self.allocator.release(dtail)
             dirty = True
         if dirty:
-            self.sync(t)
+            self.sync(t, slot, "spec_rollback")
         return freed_t, freed_d
 
     def evict_for(self, n_pages: int, t: float) -> int:

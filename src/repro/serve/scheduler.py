@@ -32,7 +32,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.obs.slo import RequestTimeline, SLOSummary, SLOTracker
+from repro.obs.slo import (RequestTimeline, SLOSummary, SLOTracker,
+                           attach_energy_percentiles)
 from repro.obs.telemetry import noop_registry
 from repro.sim.trace import AccessStats, OccupancyTrace, TraceBundle
 
@@ -90,6 +91,8 @@ class Request:
     # higher-priority request may preempt a lower-priority active slot
     # instead of backpressure-waiting (ties decode FCFS)
     priority: int = 0
+    # billing identity for per-tenant energy attribution (None = untagged)
+    tenant: Optional[str] = None
     # filled by the scheduler
     output: List[int] = field(default_factory=list)
     # per-token last-position logits, filled only by engines running with
@@ -186,7 +189,8 @@ class ContinuousBatcher:
     def __init__(self, model, params, *, num_slots: int = 4,
                  max_len: int = 128, kv_dtype_bytes: int = 2,
                  step_time_s: float = 1e-3, prefill_tok_s: float = 5e-5,
-                 on_long_prompt: str = "reject", telemetry=None):
+                 on_long_prompt: str = "reject", telemetry=None,
+                 meter=None):
         if on_long_prompt not in ("reject", "truncate"):
             raise ValueError("on_long_prompt must be 'reject' or 'truncate'")
         self.model = model
@@ -205,6 +209,7 @@ class ContinuousBatcher:
                      if self.tel.enabled else None)
         self.queue = AdmissionQueue()
         self.slots: List[Optional[Request]] = [None] * num_slots
+        self._tokens_by_rid: Dict[int, int] = {}   # retired, for J/token
         self.slot_pos: np.ndarray = np.zeros(num_slots, np.int64)
         self.stats = SchedulerStats()
 
@@ -231,6 +236,9 @@ class ContinuousBatcher:
             cap = num_slots * (kv_bytes_at(self.cfg, max_len, kv_dtype_bytes)
                                + slot_state_bytes(self.cfg))
         self.trace = OccupancyTrace("kv", cap)
+        # optional streaming BankEnergyMeter: every trace delta below is
+        # mirrored to it with the owning request/tenant tag
+        self.meter = meter
         self.access = AccessStats()
 
     # ------------------------------------------------------------ client API
@@ -261,6 +269,9 @@ class ContinuousBatcher:
         st.ttft_p50_s, st.ttft_p99_s = s.ttft_p50_s, s.ttft_p99_s
         st.tbt_p50_s, st.tbt_p99_s = s.tbt_p50_s, s.tbt_p99_s
         st.e2e_p50_s, st.e2e_p99_s = s.e2e_p50_s, s.e2e_p99_s
+        if self.meter is not None:
+            attach_energy_percentiles(s, self.meter.request_energy_j(),
+                                      self._tokens_by_rid)
         return s
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
@@ -293,9 +304,17 @@ class ContinuousBatcher:
         self.stats.finished += 1
         if self._slot_bytes[i]:
             self.trace.event(self._sim_t, -self._slot_bytes[i], 0)
+            if self.meter is not None:
+                self.meter.record(self._sim_t, -self._slot_bytes[i], 0,
+                                  rid=req.rid, tenant=req.tenant)
             self.stats.retired_kv_bytes += self._slot_bytes[i]
         self._slot_bytes[i] = 0
         self._slot_ctx[i] = 0
+        if self.meter is not None:
+            self._tokens_by_rid[req.rid] = len(req.output)
+            if req.timeline is not None:
+                req.timeline.energy_j = self.meter.request_energy_live(
+                    req.rid)
         if self.tel.enabled:
             self.tel.counter("serve.dense.retired").inc()
             tl = req.timeline
@@ -334,6 +353,9 @@ class ContinuousBatcher:
                 self._slot_bytes[i] = b
                 self._slot_ctx[i] = ctx
                 self.trace.event(self._sim_t, b, 0)
+                if self.meter is not None:
+                    self.meter.record(self._sim_t, b, 0, rid=req.rid,
+                                      tenant=req.tenant, cause="admission")
                 self.access.add_write("kv", b)
                 self.stats.admitted_kv_bytes += b
             if self.tel.enabled:
@@ -382,6 +404,10 @@ class ContinuousBatcher:
                 if d:
                     self._slot_bytes[i] += d
                     self.trace.event(self._sim_t, d, 0)
+                    if self.meter is not None:
+                        self.meter.record(self._sim_t, d, 0, rid=req.rid,
+                                          tenant=req.tenant,
+                                          cause="decode_growth")
                     self.access.add_write("kv", d)
                     self.stats.admitted_kv_bytes += d
             hit_eos = req.eos_id is not None and nxt == req.eos_id

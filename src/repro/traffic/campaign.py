@@ -93,6 +93,9 @@ class CampaignRow:
     ttft_p99_s: float = 0.0
     tbt_p50_s: float = 0.0
     tbt_p99_s: float = 0.0
+    # streaming BankEnergyMeter report for the scenario's metered candidate
+    # (same for every (C, B) row of one scenario; None when no --meter)
+    energy: Optional[object] = None
 
     @property
     def e_online(self) -> float:
@@ -185,6 +188,19 @@ class CampaignReport:
                      f"{r.ttft_p50_s:>7.3f} {r.ttft_p99_s:>7.3f} "
                      f"{r.tbt_p50_s:>8.4f} {r.tbt_p99_s:>8.4f}")
             lines.append(line)
+        # streaming-meter footer: one block per metered scenario (J/request
+        # percentiles, wake causes, per-tenant energy breakdown)
+        seen = set()
+        for r in self.rows:
+            if r.energy is None:
+                continue
+            k = (r.scenario.arch, r.scenario.traffic_key)
+            if k in seen:
+                continue
+            seen.add(k)
+            lines.append(f"-- {r.scenario.arch} "
+                         f"{r.scenario.arrival}@{r.scenario.rate:g}/s --")
+            lines.append(r.energy.format())
         return "\n".join(lines)
 
 
@@ -229,6 +245,7 @@ def run_scenario(scn: Scenario, *, capacities_mib: Optional[Sequence[int]],
                  backend: str = "auto", prune: bool = False,
                  prune_margin: float = 1e-3,
                  fidelity: str = "auto",
+                 meter_spec: Optional[str] = None,
                  telemetry=None) -> Tuple[
                      TrafficSim, List[CampaignRow], np.ndarray]:
     """Simulate one scenario's traffic, then evaluate its (C, B) grid.
@@ -242,6 +259,10 @@ def run_scenario(scn: Scenario, *, capacities_mib: Optional[Sequence[int]],
     tel = telemetry if telemetry is not None else noop_registry()
     cfg = resolve_arch(scn.arch)
     lengths = lengths or LengthModel(max_len=scn.max_len)
+    meter = None
+    if meter_spec is not None:
+        from repro.obs.energy import BankEnergyMeter
+        meter = BankEnergyMeter.from_spec(meter_spec, telemetry=telemetry)
     with tel.span("campaign.simulate", arch=scn.arch, rate=scn.rate):
         if scn.speculate_k is not None:
             if scn.workload != "plain":
@@ -256,7 +277,7 @@ def run_scenario(scn: Scenario, *, capacities_mib: Optional[Sequence[int]],
                 page_size=scn.page_size, max_len=scn.max_len,
                 spec_k=scn.speculate_k, acceptance=scn.spec_acceptance,
                 draft_kv_frac=scn.draft_kv_frac, seed=scn.seed,
-                kv_dtype_bytes=scn.kv_dtype_bytes)
+                kv_dtype_bytes=scn.kv_dtype_bytes, meter=meter)
         elif scn.workload != "plain":
             reqs = generate_workload(scn.workload, scn.rate, scn.horizon_s,
                                      seed=scn.seed, lengths=lengths,
@@ -266,13 +287,15 @@ def run_scenario(scn: Scenario, *, capacities_mib: Optional[Sequence[int]],
             sim = simulate_prefix_traffic(cfg, reqs, num_slots=scn.num_slots,
                                           page_size=scn.page_size,
                                           max_len=scn.max_len, seed=scn.seed,
-                                          kv_dtype_bytes=scn.kv_dtype_bytes)
+                                          kv_dtype_bytes=scn.kv_dtype_bytes,
+                                          meter=meter)
         else:
             reqs = generate(scn.arrival, scn.rate, scn.horizon_s,
                             seed=scn.seed, lengths=lengths)
             sim = simulate_traffic(cfg, reqs, num_slots=scn.num_slots,
                                    max_len=scn.max_len, fidelity=fidelity,
-                                   kv_dtype_bytes=scn.kv_dtype_bytes)
+                                   kv_dtype_bytes=scn.kv_dtype_bytes,
+                                   meter=meter)
     trace = sim.trace
     if resample_dt:
         trace = trace.resampled(resample_dt, sim.total_time)
@@ -315,6 +338,16 @@ def run_scenario(scn: Scenario, *, capacities_mib: Optional[Sequence[int]],
             n_reads=n_r, n_writes=n_w, cfg=ctrl, fcfg=fcfg, backend=backend)
     comparisons.update(precomputed)
     util = utilization_summary(sim)
+    energy_rep = None
+    if meter is not None:
+        # credit forecast-leg pre-wakes of the metered (C, B) point, when
+        # that point was part of the compared grid
+        mpoint = (meter.capacity, meter.banks)
+        comp = comparisons.get(mpoint)
+        if comp is not None and comp.forecast is not None:
+            meter.note_prewake(comp.forecast.pre_wakes)
+        energy_rep = meter.report(sim.total_time,
+                                  n_reads=n_r, n_writes=n_w)
     rows = [CampaignRow(scn, cap // MIB, b, comparisons[(cap, b)],
                         peak_mib=util["peak_bytes"] / MIB,
                         mean_mib=util["mean_bytes"] / MIB,
@@ -322,7 +355,8 @@ def run_scenario(scn: Scenario, *, capacities_mib: Optional[Sequence[int]],
                         ttft_p50_s=util["ttft_p50_s"],
                         ttft_p99_s=util["ttft_p99_s"],
                         tbt_p50_s=util["tbt_p50_s"],
-                        tbt_p99_s=util["tbt_p99_s"])
+                        tbt_p99_s=util["tbt_p99_s"],
+                        energy=energy_rep)
             for cap, b in points]
     tel.counter("campaign.scenarios").inc()
     tel.counter("campaign.rows").inc(len(rows))
@@ -351,6 +385,7 @@ def run_campaign(archs: Sequence[str], *, arrivals: Sequence[str] = ("poisson",)
                  speculate_k: Optional[int] = None,
                  spec_acceptance: float = 0.7,
                  draft_kv_frac: float = 0.5,
+                 meter_spec: Optional[str] = None,
                  telemetry=None) -> CampaignReport:
     """The full grid. Identical (arrival, rate, seed) cells share one request
     stream across architectures, so MHA-vs-GQA rows are directly comparable."""
@@ -374,7 +409,8 @@ def run_campaign(archs: Sequence[str], *, arrivals: Sequence[str] = ("poisson",)
                         ctrl=ctrl, fcfg=fcfg, lengths=lengths,
                         resample_dt=resample_dt,
                         fast_backend=fast_backend, backend=backend,
-                        prune=prune, fidelity=fidelity, telemetry=telemetry)
+                        prune=prune, fidelity=fidelity,
+                        meter_spec=meter_spec, telemetry=telemetry)
                     key = (arch, scn.traffic_key)
                     report.sims[key] = sim
                     report.rows.extend(rows)

@@ -95,7 +95,7 @@ def simulate_traffic(cfg, requests: Sequence[RequestSpec], *,
                      kv_dtype_bytes: int = 2,
                      timing: Optional[TimingModel] = None,
                      mem_name: str = "kv",
-                     fidelity: str = "auto") -> TrafficSim:
+                     fidelity: str = "auto", meter=None) -> TrafficSim:
     """Discrete-event continuous batching over `num_slots` KV slots.
 
     Each admitted request prefills its prompt (occupancy step of the full
@@ -147,6 +147,9 @@ def simulate_traffic(cfg, requests: Sequence[RequestSpec], *,
             t += ctx * timing.prefill_tok_s   # prefills serialize on the pool
             b = kv_bytes_at(cfg, ctx, kv_dtype_bytes) + state_b
             trace.event(t, b, 0)
+            if meter is not None:
+                meter.record(t, b, 0, rid=r.rid, tenant=r.prefix_id,
+                             cause="admission")
             access.add_write(mem_name, b)
             slots[i] = _Slot(r, ctx, 0, b, r.arrival_s, t)
             stats.admitted += 1
@@ -160,6 +163,9 @@ def simulate_traffic(cfg, requests: Sequence[RequestSpec], *,
     def retire(i: int) -> None:
         s = slots[i]
         trace.event(t, -s.bytes, 0)
+        if meter is not None:
+            meter.record(t, -s.bytes, 0, rid=s.req.rid,
+                         tenant=s.req.prefix_id)
         stats.retired_bytes += s.bytes
         stats.finished += 1
         stats.latency_s.append(t - s.req.arrival_s)
@@ -204,6 +210,7 @@ def simulate_traffic(cfg, requests: Sequence[RequestSpec], *,
                 k, ts = stop + 1, ts[:stop + 1]   # admit on the next pass
         stats.decode_steps += k
         grow: List[int] = []
+        grow_meta: List[RequestSpec] = []
         for i in active:
             s = slots[i]
             d1 = kv_growth(s.ctx)
@@ -211,6 +218,7 @@ def simulate_traffic(cfg, requests: Sequence[RequestSpec], *,
                             k * s.bytes + d1 * (k * (k - 1) // 2))
             if d1:
                 grow.append(d1)
+                grow_meta.append(s.req)
                 s.bytes += k * d1
                 access.add_write(mem_name, k * d1)
                 stats.admitted_bytes += k * d1
@@ -224,6 +232,17 @@ def simulate_traffic(cfg, requests: Sequence[RequestSpec], *,
             trace.extend(np.repeat(ts, len(grow)),
                          np.tile(np.asarray(grow, np.int64), k),
                          np.zeros(k * len(grow), np.int64))
+            if meter is not None:
+                # element-for-element mirror of the bulk emission above
+                # (ts-major, slots inner), so the meter's trace stays a
+                # verbatim copy of the sim's
+                meter.record_bulk(
+                    np.repeat(ts, len(grow)),
+                    np.tile(np.asarray(grow, np.int64), k),
+                    np.zeros(k * len(grow), np.int64),
+                    rids=[r.rid for r in grow_meta] * k,
+                    tenants=[r.prefix_id for r in grow_meta] * k,
+                    cause="decode_growth")
         t = float(ts[-1])
 
     while pending or any(s is not None for s in slots):
@@ -260,6 +279,10 @@ def simulate_traffic(cfg, requests: Sequence[RequestSpec], *,
             if d:
                 s.bytes += d
                 trace.event(t, d, 0)
+                if meter is not None:
+                    meter.record(t, d, 0, rid=s.req.rid,
+                                 tenant=s.req.prefix_id,
+                                 cause="decode_growth")
                 access.add_write(mem_name, d)
                 stats.admitted_bytes += d
             # the prefill's argmax already yielded token #1, so `output_len`
@@ -291,7 +314,7 @@ def simulate_prefix_traffic(cfg, requests: Sequence[RequestSpec], *,
                             max_len: int = 2048, kv_dtype_bytes: int = 2,
                             timing: Optional[TimingModel] = None,
                             vocab_size: int = 50000,
-                            seed: int = 0) -> TrafficSim:
+                            seed: int = 0, meter=None) -> TrafficSim:
     """Page-granular continuous batching with prefix sharing, model-free.
 
     The same host machinery the real batcher runs — `RadixPrefixIndex`
@@ -318,6 +341,7 @@ def simulate_prefix_traffic(cfg, requests: Sequence[RequestSpec], *,
     pb = paged_page_bytes(cfg, ps, kv_dtype_bytes)
     ledger = SharedKVLedger(num_pages, pb, ps, num_slots=num_slots,
                             max_pages_per_slot=slot_cap_pages)
+    ledger.meter = meter
     access = AccessStats()
     stats = PrefixTrafficStats()
     mem_name = "kv"
@@ -385,6 +409,8 @@ def simulate_prefix_traffic(cfg, requests: Sequence[RequestSpec], *,
             m = match.tokens(ps)
             fresh_n = pages_for(S, ps) - len(match.pages)
             t += (S - m) * timing.prefill_tok_s       # prefill skip
+            if meter is not None:
+                ledger.set_slot_meta(i, r.rid, r.prefix_id)
             ledger.admit(i, fresh_n, t, shared=match.pages)
             ledger.insert_run(toks, ledger.slot_pages[i], t)
             reserved[i] = worst_total - len(match.pages) + cow_extra - fresh_n
@@ -486,7 +512,7 @@ def simulate_spec_traffic(cfg, requests: Sequence[RequestSpec], *,
                           draft_kv_frac: float = 0.5,
                           kv_dtype_bytes: int = 2,
                           timing: Optional[TimingModel] = None,
-                          seed: int = 0) -> TrafficSim:
+                          seed: int = 0, meter=None) -> TrafficSim:
     """Page-granular continuous batching under speculative decoding.
 
     Mirrors the real `PagedContinuousBatcher(speculate_k=...)` loop through
@@ -519,6 +545,7 @@ def simulate_spec_traffic(cfg, requests: Sequence[RequestSpec], *,
         num_pages = 1 + 2 * num_slots * pages_for(max_len, ps)
     ledger = PagedKVLedger(num_pages, pb, ps)
     ledger.enable_draft_lane(draft_pb)
+    ledger.meter = meter
     access = AccessStats()
     stats = SpecTrafficStats()
     rng = np.random.default_rng(seed)
@@ -571,6 +598,8 @@ def simulate_spec_traffic(cfg, requests: Sequence[RequestSpec], *,
             # both lanes prefill the full prompt (the draft lane never
             # shares, so speculation costs a second, cheaper prefill)
             t += S * timing.prefill_tok_s * (1.0 + draft_kv_frac)
+            if meter is not None:
+                ledger.set_slot_meta(i, r.rid, r.prefix_id)
             ledger.admit(i, npg, t)
             ledger.admit_draft(i, npg, t)
             reserved[i] = 2 * (worst_pages(r) - npg)

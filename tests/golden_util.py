@@ -274,6 +274,116 @@ def build_spec_golden() -> dict:
     return {name: spec_case_payload(name) for name in sorted(SPEC_CASES)}
 
 
+# ---------------------------------------------------------------------------
+# Energy-observability golden: the Perfetto bank-state export of a streamed
+# `BankEnergyMeter` over a deterministic model-free sim. Locks the track
+# schema (process/lane/counter names, span-event key set) and the exact f64
+# energy totals; the loader test additionally proves the exported energy
+# counter track carries the meter total losslessly.
+# ---------------------------------------------------------------------------
+
+ENERGY_GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                                  "energy_golden.json")
+
+# `off_multiple` widens the drowsy policy's gate-off threshold so the
+# scenario's idle-run distribution actually splits between gated and
+# drowsy intervals (at the default threshold every run gates).
+ENERGY_CASES = {
+    "dsr1d-chat-conservative": dict(
+        base="dsr1d-chat-sysprompt", meter="32,8,0.9,conservative"),
+    "dsr1d-chat-drowsy": dict(
+        base="dsr1d-chat-sysprompt", meter="32,8,0.9,drowsy",
+        off_multiple=1e5),
+}
+
+
+def _energy_case_run(name: str):
+    """(meter, end_time) for one energy golden case — the base prefix
+    scenario re-simulated with a streaming meter attached."""
+    from repro.obs.energy import BankEnergyMeter
+    from repro.traffic.generators import LengthModel, generate_workload
+    from repro.traffic.occupancy import simulate_prefix_traffic
+
+    case = ENERGY_CASES[name]
+    spec = PREFIX_CASES[case["base"]]
+    cfg = get_arch(spec["arch"])
+    lengths = LengthModel(max_len=spec["max_len"])
+    reqs = generate_workload(spec["workload"], spec["rate"],
+                             spec["horizon_s"], seed=spec["seed"],
+                             lengths=lengths, prefix_len=spec["prefix_len"],
+                             sharing=spec["sharing"], fanout=spec["sharing"])
+    if "off_multiple" in case:
+        from repro.core.gating import Policy
+        c_mib, banks, alpha, pname = case["meter"].split(",")
+        assert pname == "drowsy"
+        pol = Policy.drowsy(float(alpha),
+                            off_multiple=float(case["off_multiple"]))
+        meter = BankEnergyMeter(int(float(c_mib)) << 20, int(banks),
+                                policy=pol)
+    else:
+        meter = BankEnergyMeter.from_spec(case["meter"])
+    sim = simulate_prefix_traffic(cfg, reqs, num_slots=spec["num_slots"],
+                                  page_size=spec["page_size"],
+                                  max_len=spec["max_len"],
+                                  seed=spec["seed"], meter=meter)
+    return meter, float(sim.total_time)
+
+
+def energy_case_payload(name: str) -> dict:
+    from repro.obs.perfetto import (ACTIVE_COUNTER, BANKS_PID,
+                                    ENERGY_COUNTER, bank_state_events,
+                                    energy_counter_total)
+
+    meter, end = _energy_case_run(name)
+    evs = bank_state_events(meter, end_time=end)
+    lanes = sorted(e["args"]["name"] for e in evs
+                   if e["ph"] == "M" and e["name"] == "thread_name")
+    spans = [e for e in evs if e["ph"] == "X"]
+    counters = sorted({e["name"] for e in evs if e["ph"] == "C"})
+    state_counts: dict = {}
+    for e in spans:
+        state_counts[e["name"]] = state_counts.get(e["name"], 0) + 1
+    res = meter.finalize(end)
+    return {
+        "meter_spec": ENERGY_CASES[name]["meter"],
+        "base_case": ENERGY_CASES[name]["base"],
+        "total_time": end,
+        "n_meter_events": meter.n_events,
+        "track_schema": {
+            "pid": BANKS_PID,
+            "process": next(e["args"]["name"] for e in evs
+                            if e["ph"] == "M"
+                            and e["name"] == "process_name"),
+            "lanes": lanes,
+            "counters": counters,
+            "span_keys": sorted(spans[0].keys()) if spans else [],
+            "span_arg_keys": sorted(spans[0]["args"].keys()) if spans
+            else [],
+            "active_counter": ACTIVE_COUNTER,
+            "energy_counter": ENERGY_COUNTER,
+        },
+        "n_span_events": len(spans),
+        "state_counts": dict(sorted(state_counts.items())),
+        # exact f64 (JSON round-trips doubles losslessly via repr)
+        "e_leak_j": res.e_leak,
+        "e_sw_j": res.e_sw,
+        "n_transitions": res.n_transitions,
+        "live_e_j": meter.energy_j(end),
+        "energy_counter_total_j": energy_counter_total(evs),
+        "wakes": dict(sorted(meter.wake_counts(end).items())),
+        "stall_s": meter.stall_s(end),
+    }
+
+
+def build_energy_golden() -> dict:
+    return {name: energy_case_payload(name) for name in sorted(ENERGY_CASES)}
+
+
+def load_energy_golden() -> dict:
+    with open(ENERGY_GOLDEN_PATH) as f:
+        return json.load(f)
+
+
 def load_spec_golden() -> dict:
     with open(SPEC_GOLDEN_PATH) as f:
         return json.load(f)

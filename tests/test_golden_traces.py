@@ -255,6 +255,61 @@ def test_spec_golden_invariants(case, spec_golden):
     assert all(d >= 0 for d in kv["durations"])
 
 
+@pytest.fixture(scope="module")
+def energy_golden():
+    assert os.path.exists(golden_util.ENERGY_GOLDEN_PATH), \
+        "missing fixtures: run PYTHONPATH=src python scripts/regen_golden.py"
+    data = golden_util.load_energy_golden()
+    assert sorted(data) == sorted(golden_util.ENERGY_CASES)
+    return data
+
+
+@pytest.mark.parametrize("case", sorted(golden_util.ENERGY_CASES))
+def test_energy_export_matches_golden(case, energy_golden):
+    """The streamed meter's Perfetto bank-state export is frozen: track
+    schema (process/lane/counter names, span key set), per-state interval
+    counts, wake-cause counters and the exact f64 energy totals."""
+    got = golden_util.energy_case_payload(case)
+    want = energy_golden[case]
+    assert got["track_schema"] == want["track_schema"]
+    assert got["n_span_events"] == want["n_span_events"]
+    assert got["state_counts"] == want["state_counts"]
+    assert got["wakes"] == want["wakes"]
+    assert got["n_meter_events"] == want["n_meter_events"]
+    assert got["n_transitions"] == want["n_transitions"]
+    # exact f64: JSON round-trips doubles losslessly
+    for key in ("e_leak_j", "e_sw_j", "live_e_j",
+                "energy_counter_total_j", "stall_s", "total_time"):
+        assert got[key] == want[key], (key, got[key], want[key])
+
+
+@pytest.mark.parametrize("case", sorted(golden_util.ENERGY_CASES))
+def test_energy_export_is_lossless(case, energy_golden):
+    """The exported energy counter track carries the meter's exact live
+    total (after a real JSON round-trip), and the active-banks counter
+    integrates to the timeline's bank-seconds."""
+    from repro.obs.perfetto import (ACTIVE_COUNTER, bank_state_events,
+                                    counter_integral, energy_counter_total)
+    meter, end = golden_util._energy_case_run(case)
+    evs = json.loads(json.dumps(bank_state_events(meter, end_time=end)))
+    assert energy_counter_total(evs) == meter.energy_j(end)
+    assert energy_counter_total(evs) == energy_golden[case]["live_e_j"]
+    t0s, durs, act = meter.activity_series(end)
+    end_us = float((t0s[-1] + durs[-1]) * 1e6)
+    got = counter_integral(evs, ACTIVE_COUNTER, end_us, series="active")
+    assert np.isclose(got / 1e6, float((act * durs).sum()), rtol=1e-9)
+    # bank-state spans tile each bank's lane without gaps or overlap
+    by_bank = {}
+    for e in evs:
+        if e.get("ph") == "X":
+            by_bank.setdefault(e["args"]["bank"], []).append(
+                (e["ts"], e["ts"] + e["dur"]))
+    for b, spans in by_bank.items():
+        spans.sort()
+        for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+            assert b0 >= a1 - 1e-6, (b, a1, b0)
+
+
 def test_fixture_case_coverage(golden):
     """Both paper workloads appear in both phases, and fixtures are sane."""
     phases = {(CASES[n]["arch"], CASES[n]["phase"]) for n in golden}
